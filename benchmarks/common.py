@@ -1,0 +1,101 @@
+"""Shared benchmark infrastructure.
+
+Benchmarks need a model whose confidence dynamics are *meaningful*, so we
+train a small MDLM on the synthetic task mixture once and cache the
+checkpoint under experiments/. All policy comparisons then run against the
+same weights (paper: same LLaDA-8B across policies).
+"""
+from __future__ import annotations
+
+import os
+import time
+from pathlib import Path
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpoint import restore, save
+from repro.config.base import DecodeConfig, ModelConfig
+from repro.config.registry import get_config
+from repro.data import tokenizer as tok
+from repro.data.pipeline import make_batch
+from repro.data.tasks import TASKS, Sample
+from repro.models import model as M
+from repro.training.optimizer import OptConfig
+from repro.training.train_loop import TrainConfig, train
+
+ROOT = Path(__file__).resolve().parents[1]
+CKPT = ROOT / "experiments" / "bench_model.msgpack"
+
+PROMPT_LEN = 64
+RESP_LEN = 16
+BLOCK = 4
+TRAIN_STEPS = int(os.environ.get("REPRO_BENCH_TRAIN_STEPS", "2000"))
+
+
+def bench_config() -> ModelConfig:
+    import dataclasses
+    cfg = get_config("llada-8b").reduced(num_layers=4, max_d_model=256,
+                                         vocab_size=512)
+    return dataclasses.replace(cfg, name="llada-bench",
+                               mask_token_id=tok.MASK_ID)
+
+
+def get_model(verbose: bool = True) -> Tuple[ModelConfig, dict]:
+    cfg = bench_config()
+    shape_probe = jax.eval_shape(lambda: M.init_params(jax.random.key(0),
+                                                       cfg))
+    if CKPT.exists():
+        params, meta = restore(str(CKPT), shape_probe)
+        if meta.get("steps") == TRAIN_STEPS:
+            return cfg, params
+    if verbose:
+        print(f"# training bench model ({TRAIN_STEPS} steps)...")
+    tcfg = TrainConfig(steps=TRAIN_STEPS, batch_size=16,
+                       prompt_len=PROMPT_LEN, resp_len=RESP_LEN,
+                       log_every=100, objective="mdlm",
+                       opt=OptConfig(lr=1e-3, warmup_steps=50,
+                                     total_steps=TRAIN_STEPS),
+                       ckpt_path=None)
+    params, _ = train(cfg, tcfg, verbose=verbose)
+    CKPT.parent.mkdir(parents=True, exist_ok=True)
+    save(str(CKPT), params, {"steps": TRAIN_STEPS, "arch": cfg.name})
+    return cfg, params
+
+
+def task_prompts(task_name: str, n: int, seed: int = 1234
+                 ) -> Tuple[List[Sample], jnp.ndarray]:
+    rng = np.random.default_rng(seed)
+    samples = TASKS[task_name].make(rng, n)
+    ids = [tok.encode(s.prompt, bos=True)[-PROMPT_LEN:] for s in samples]
+    return samples, jnp.asarray(tok.batch_prompts(ids, PROMPT_LEN))
+
+
+def score_generations(task_name: str, samples: List[Sample],
+                      tokens: np.ndarray) -> float:
+    task = TASKS[task_name]
+    correct = 0
+    for s, row in zip(samples, tokens):
+        row = row.tolist()
+        if tok.EOS_ID in row:
+            row = row[:row.index(tok.EOS_ID)]
+        correct += task.score(tok.decode(row), s)
+    return correct / max(len(samples), 1)
+
+
+def default_dcfg(**kw) -> DecodeConfig:
+    base = dict(max_new_tokens=RESP_LEN, block_size=BLOCK, policy="static",
+                threshold=0.9)
+    base.update(kw)
+    return DecodeConfig(**base)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.perf_counter() - self.t0

@@ -1,0 +1,65 @@
+"""Figures 3-5: OSDT hyperparameter sweep (mode x metric x kappa x epsilon).
+
+Grid per paper §4.1: metric mu in {mean, q1, median, q3, min-whisker},
+kappa in {0.75..0.95}, epsilon in {0.01..0.2}, mode in {block, step-block}.
+Reports accuracy + tokens/NFE per setting; the Pareto frontier over these is
+what Figs 3-5 visualise. (Reduced grid by default; REPRO_FULL_SWEEP=1 for
+the complete 250-point grid.)
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import List
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import policies
+from repro.core.calibrate import build_table
+from repro.core.decoder import make_generate_fn, result_profile
+
+FULL = os.environ.get("REPRO_FULL_SWEEP", "") == "1"
+METRICS = ["mean", "q1", "median", "q3", "min-whisker"] if FULL else \
+    ["q1", "median", "q3"]
+KAPPAS = [0.75, 0.8, 0.85, 0.9, 0.95] if FULL else [0.75, 0.9]
+EPSILONS = [0.01, 0.05, 0.1, 0.15, 0.2] if FULL else [0.05, 0.2]
+MODES = ["block", "step-block"]
+TASK = "gsm8k-syn"
+N_EVAL = 16
+BATCH = 4
+
+
+def run(csv_rows: List[str], verbose: bool = True) -> None:
+    cfg, params = common.get_model(verbose=verbose)
+    mask = jnp.asarray(common.tok.MASK_ID, jnp.int32)
+    samples, prompts = common.task_prompts(TASK, N_EVAL, seed=99)
+    base = common.default_dcfg()
+    gen = make_generate_fn(cfg, base)
+
+    profile = result_profile(gen(params, prompts[:1], jnp.asarray(
+        policies.static_table(base)), mask))
+
+    for mode in MODES:
+        for metric in METRICS:
+            for kappa in KAPPAS:
+                for eps in EPSILONS:
+                    dcfg = dataclasses.replace(base, policy="osdt",
+                                               mode=mode, metric=metric,
+                                               cap=kappa, slack=eps)
+                    table = jnp.asarray(build_table(profile, dcfg))
+                    toks, nfe = [], 0
+                    for i in range(0, N_EVAL, BATCH):
+                        r = gen(params, prompts[i:i + BATCH], table, mask)
+                        toks.append(np.asarray(r.tokens))
+                        nfe += int(r.nfe)
+                    tokens = np.concatenate(toks)
+                    acc = common.score_generations(TASK, samples, tokens)
+                    tpn = tokens.size / nfe
+                    row = (f"fig3_5/{TASK}/{mode}/{metric}/k{kappa}/e{eps},"
+                           f"0.0,acc={acc:.3f};tok_per_nfe={tpn:.2f};"
+                           f"nfe={nfe}")
+                    csv_rows.append(row)
+                    if verbose:
+                        print(row)

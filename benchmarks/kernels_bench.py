@@ -1,0 +1,52 @@
+"""Kernel microbenchmarks: us_per_call of the jit'd host-side paths and the
+Pallas bodies under interpret=True (correctness-trace cost only — REAL
+kernel timing requires a TPU; the dry-run roofline covers expected perf).
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.kernels.confidence import fused_confidence_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+
+
+def _time(fn, *args, iters: int = 5) -> float:
+    fn(*args)  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.tree.leaves(out)[0].block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(csv_rows: List[str], verbose: bool = True) -> None:
+    key = jax.random.key(0)
+    for (r, v) in [(32, 4096), (64, 50280), (32, 151936)]:
+        logits = jax.random.normal(key, (r, v))
+        us = _time(lambda x: ops.fused_confidence(x), logits)
+        row = f"kernels/confidence_ref/r{r}_v{v},{us:.1f},xla_cpu_path"
+        csv_rows.append(row)
+        if verbose:
+            print(row)
+    x = jax.random.normal(key, (8, 2048))
+    us = _time(lambda a: fused_confidence_pallas(a, interpret=True), x)
+    csv_rows.append(f"kernels/confidence_pallas_interp/r8_v2048,{us:.1f},"
+                    "interpret_mode")
+
+    for (b, h, s, d) in [(1, 8, 512, 64), (2, 4, 1024, 128)]:
+        q = jax.random.normal(key, (b, h, s, d), jnp.bfloat16)
+        us = _time(lambda a: ops.flash_attention(a, a, a, causal=True), q)
+        row = f"kernels/flash_ref/b{b}h{h}s{s}d{d},{us:.1f},xla_cpu_path"
+        csv_rows.append(row)
+        if verbose:
+            print(row)
+    q = jax.random.normal(key, (1, 2, 128, 64), jnp.float32)
+    us = _time(lambda a: flash_attention_pallas(a, a, a, causal=True,
+                                                interpret=True), q)
+    csv_rows.append(f"kernels/flash_pallas_interp/b1h2s128d64,{us:.1f},"
+                    "interpret_mode")

@@ -1,0 +1,42 @@
+"""Benchmark entry point — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (and tees them to
+experiments/bench_results.csv). See DESIGN.md §7 for the experiment index.
+
+  python -m benchmarks.run            # everything
+  python -m benchmarks.run table1     # one benchmark
+"""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+from typing import List
+
+from benchmarks import (cache_modes, fig1_confidence, fig2_cosine,
+                        fig3_5_sweep, kernels_bench, table1_compare)
+
+BENCHES = {
+    "fig1": fig1_confidence.run,
+    "fig2": fig2_cosine.run,
+    "table1": table1_compare.run,
+    "fig3_5": fig3_5_sweep.run,
+    "cache_modes": cache_modes.run,
+    "kernels": kernels_bench.run,
+}
+
+
+def main() -> None:
+    which = sys.argv[1:] or list(BENCHES)
+    rows: List[str] = []
+    print("name,us_per_call,derived")
+    for name in which:
+        BENCHES[name](rows, verbose=True)
+    out = Path(__file__).resolve().parents[1] / "experiments" / \
+        "bench_results.csv"
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text("name,us_per_call,derived\n" + "\n".join(rows) + "\n")
+    print(f"# wrote {len(rows)} rows -> {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""End-to-end driver: train a ~100M-parameter MDLM for a few hundred steps.
+
+    PYTHONPATH=src:. python examples/train_mdlm_100m.py [--steps 300]
+
+This is the deliverable-(b) end-to-end training example: a SmolLM-135M-size
+*bidirectional* mask predictor (the LLaDA recipe at small scale) trained
+with the 1/t-weighted masked-diffusion objective on the synthetic mixture,
+checkpointed to experiments/mdlm_100m.msgpack.
+
+NOTE: ~100M params on one CPU core is slow (~10-20 s/step at batch 8).
+Default --steps 300 runs in a few hours; --tiny switches to a 25M variant
+for a faster demonstration of the same code path.
+"""
+import argparse
+import dataclasses
+
+from repro.config.registry import get_config
+from repro.data import tokenizer as tok
+from repro.training.optimizer import OptConfig
+from repro.training.train_loop import TrainConfig, train
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--tiny", action="store_true")
+    args = ap.parse_args()
+
+    base = get_config("smollm-135m")  # 135M llama-arch backbone
+    cfg = dataclasses.replace(
+        base, name="mdlm-100m", vocab_size=512, tie_embeddings=True,
+        supports_mdlm=True, mask_token_id=tok.MASK_ID, dtype="float32",
+        num_layers=12 if args.tiny else base.num_layers)
+    print(f"# {cfg.name}: {cfg.param_count() / 1e6:.1f}M params, "
+          f"{cfg.num_layers}L d={cfg.d_model}")
+
+    tcfg = TrainConfig(
+        steps=args.steps, batch_size=args.batch, prompt_len=64, resp_len=64,
+        objective="mdlm", log_every=10,
+        opt=OptConfig(lr=6e-4, warmup_steps=args.steps // 10,
+                      total_steps=args.steps),
+        ckpt_path="experiments/mdlm_100m.msgpack")
+    _, hist = train(cfg, tcfg)
+    print(f"# done: loss {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f}; "
+          f"checkpoint at experiments/mdlm_100m.msgpack")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Checkpointing: msgpack-serialised pytrees (no orbax in this container).
+
+Format: a flat {"/"-joined key path: {dtype, shape, raw bytes}} msgpack map
+plus a small JSON-able metadata dict under the reserved key ``__meta__``.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(path: str, tree, meta: Optional[dict] = None) -> None:
+    payload: Dict[str, Any] = {}
+    for key, arr in _flatten(tree).items():
+        payload[key] = {"dtype": str(arr.dtype), "shape": list(arr.shape),
+                        "data": arr.tobytes()}
+    payload["__meta__"] = meta or {}
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    os.replace(tmp, path)
+
+
+def restore(path: str, like) -> Tuple[Any, dict]:
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs). Returns (tree, meta)."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    meta = payload.pop("__meta__", {})
+    flat_like = _flatten_like(like)
+    restored = {}
+    for key, spec in payload.items():
+        arr = np.frombuffer(spec["data"], dtype=np.dtype(spec["dtype"]))
+        restored[key] = arr.reshape(spec["shape"])
+    missing = set(flat_like) - set(restored)
+    if missing:
+        raise KeyError(f"checkpoint missing keys: {sorted(missing)[:5]} ...")
+    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    for path_, leaf in leaves_with_path:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path_)
+        out.append(jnp.asarray(restored[key]))
+    return jax.tree_util.tree_unflatten(treedef, out), meta
+
+
+def _flatten_like(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = leaf
+    return flat

@@ -1,0 +1,223 @@
+"""Configuration dataclasses for models, input shapes and meshes.
+
+Every architecture in ``repro.configs`` instantiates :class:`ModelConfig`.
+Configs are plain frozen dataclasses so they hash, compare, and serialize
+cleanly (used as cache keys by the dry-run driver).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyperparameters.
+
+    ``family`` selects the backbone assembly:
+      - ``dense``  : pre-norm GQA transformer (llama-style)
+      - ``moe``    : dense attention + mixture-of-experts MLP
+      - ``ssm``    : Mamba2 / SSD, attention-free
+      - ``hybrid`` : Mamba2 backbone with shared attention blocks (Zamba2)
+      - ``vlm``    : dense transformer consuming vision-frontend embeddings
+      - ``audio``  : dense transformer over codec-token embeddings
+    """
+
+    name: str
+    family: str
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // num_heads
+
+    # --- MoE ---
+    num_experts: int = 0
+    experts_per_token: int = 0
+    capacity_factor: float = 1.25
+
+    # --- SSM (Mamba2 / SSD) ---
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    conv_width: int = 4
+    # hybrid: one shared attention block applied every `attn_every` layers
+    attn_every: int = 0
+
+    # --- attention options ---
+    qkv_bias: bool = False
+    rope_theta: float = 1.0e4
+    sliding_window: int = 0  # >0: sliding-window decode variant available
+
+    # --- misc ---
+    norm_eps: float = 1.0e-5
+    tie_embeddings: bool = False
+    frontend: str = "none"  # none | vision | audio
+    frontend_dim: int = 0   # embedding dim produced by the (stub) frontend
+    supports_mdlm: bool = True  # OSDT / diffusion decoding applicable?
+    mask_token_id: int = 0      # assigned at tokenizer build; 0 ok for dry-run
+    dtype: str = "bfloat16"
+    citation: str = ""
+
+    # ------------------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim > 0:
+            return self.head_dim
+        return self.d_model // self.num_heads if self.num_heads else 0
+
+    @property
+    def d_inner(self) -> int:
+        """Mamba2 inner width."""
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def has_attention(self) -> bool:
+        return self.family != "ssm"
+
+    @property
+    def is_moe(self) -> bool:
+        return self.num_experts > 0
+
+    # ------------------------------------------------------------------
+    def param_count(self) -> int:
+        """Total parameters (embedding + backbone + head), exact for our defs."""
+        d, h = self.d_model, self.resolved_head_dim
+        n = 0
+        n += self.vocab_size * d  # embed
+        if not self.tie_embeddings:
+            n += self.vocab_size * d  # unembed
+        per_layer = 0
+        if self.family in ("dense", "moe", "vlm", "audio"):
+            q = d * self.num_heads * h
+            kv = 2 * d * self.num_kv_heads * h
+            o = self.num_heads * h * d
+            attn = q + kv + o
+            if self.qkv_bias:
+                attn += (self.num_heads + 2 * self.num_kv_heads) * h
+            if self.is_moe:
+                mlp = self.num_experts * 3 * d * self.d_ff + d * self.num_experts
+            else:
+                mlp = 3 * d * self.d_ff
+            per_layer = attn + mlp + 2 * d  # two RMSNorm scales
+        elif self.family in ("ssm", "hybrid"):
+            di, s = self.d_inner, self.ssm_state
+            nh = self.ssm_heads
+            in_proj = d * (2 * di + 2 * s + nh)  # z, x, B, C, dt
+            out_proj = di * d
+            conv = self.conv_width * (di + 2 * s)
+            per_layer = in_proj + out_proj + conv + nh * 2 + di + d  # A,D,norm
+            if self.family == "hybrid":
+                # shared attention block params counted once (weight sharing)
+                q = d * self.num_heads * h
+                kv = 2 * d * self.num_kv_heads * h
+                o = self.num_heads * h * d
+                mlp = 3 * d * self.d_ff
+                n += q + kv + o + mlp + 2 * d
+        n += per_layer * self.num_layers
+        n += d  # final norm
+        return n
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: only routed experts)."""
+        if not self.is_moe:
+            return self.param_count()
+        d = self.d_model
+        dense_mlp_all = self.num_experts * 3 * d * self.d_ff * self.num_layers
+        dense_mlp_active = self.experts_per_token * 3 * d * self.d_ff * self.num_layers
+        return self.param_count() - dense_mlp_all + dense_mlp_active
+
+    # ------------------------------------------------------------------
+    def reduced(self, *, num_layers: int = 2, max_d_model: int = 256,
+                max_experts: int = 4, vocab_size: int = 512) -> "ModelConfig":
+        """A tiny same-family variant for CPU smoke tests."""
+        d = min(self.d_model, max_d_model)
+        hd = 32
+        heads = max(1, d // 64)
+        # keep GQA ratio ~ the original
+        ratio = max(1, self.num_heads // max(1, self.num_kv_heads))
+        kv = max(1, heads // ratio)
+        heads = kv * ratio
+        experts = min(self.num_experts, max_experts) if self.is_moe else 0
+        topk = min(self.experts_per_token, experts) if experts else 0
+        return dataclasses.replace(
+            self,
+            name=self.name + "-reduced",
+            num_layers=num_layers,
+            d_model=d,
+            num_heads=heads,
+            num_kv_heads=kv,
+            head_dim=hd,
+            d_ff=min(self.d_ff, 4 * d) if self.d_ff else 0,
+            vocab_size=vocab_size,
+            num_experts=experts,
+            experts_per_token=topk,
+            ssm_state=min(self.ssm_state, 16) if self.ssm_state else 0,
+            ssm_head_dim=32 if self.ssm_state else self.ssm_head_dim,
+            attn_every=2 if self.attn_every else 0,
+            frontend_dim=d if self.frontend != "none" else 0,
+            dtype="float32",
+        )
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """An input-shape workload. ``kind`` picks which step gets lowered."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+@dataclass(frozen=True)
+class DecodeConfig:
+    """Diffusion / AR decoding parameters (the paper's §3-§4 knobs)."""
+
+    max_new_tokens: int = 128
+    block_size: int = 32
+    steps_per_block: int = 0      # fixed-step baseline: 0 -> block_size (1 tok/step)
+    policy: str = "static"        # fixed | static | factor | osdt
+    # Fast-dLLM static threshold
+    threshold: float = 0.9
+    # factor variant: tau_s = threshold * factor**s
+    factor: float = 0.95
+    # OSDT hyperparameters (paper §4.1)
+    mode: str = "block"           # block | step-block
+    metric: str = "q1"            # mean | q1 | median | q3 | min-whisker
+    cap: float = 0.9              # kappa
+    slack: float = 0.1            # epsilon
+    max_steps_per_block: int = 0  # 0 -> block_size (worst case 1 tok/step)
+
+    @property
+    def num_blocks(self) -> int:
+        assert self.max_new_tokens % self.block_size == 0
+        return self.max_new_tokens // self.block_size
+
+    @property
+    def steps_cap(self) -> int:
+        return self.max_steps_per_block or self.block_size
+
+
+# Canonical assigned input shapes -------------------------------------------
+INPUT_SHAPES = {
+    "train_4k": ShapeConfig("train_4k", seq_len=4096, global_batch=256, kind="train"),
+    "prefill_32k": ShapeConfig("prefill_32k", seq_len=32768, global_batch=32, kind="prefill"),
+    "decode_32k": ShapeConfig("decode_32k", seq_len=32768, global_batch=128, kind="decode"),
+    "long_500k": ShapeConfig("long_500k", seq_len=524288, global_batch=1, kind="decode"),
+}

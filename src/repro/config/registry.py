@@ -1,0 +1,51 @@
+"""Architecture registry: ``get_config(name)`` / ``list_archs()``.
+
+Each module in ``repro.configs`` registers exactly one ``ModelConfig`` via
+the ``@register`` decorator at import time.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Callable, Dict
+
+from repro.config.base import ModelConfig
+
+_REGISTRY: Dict[str, Callable[[], ModelConfig]] = {}
+
+# The assigned pool + the paper's own model family.
+_ARCH_MODULES = [
+    "mamba2_130m",
+    "qwen3_moe_235b_a22b",
+    "deepseek_67b",
+    "qwen1_5_0_5b",
+    "qwen1_5_110b",
+    "zamba2_1_2b",
+    "llama4_maverick_400b_a17b",
+    "internvl2_76b",
+    "smollm_135m",
+    "musicgen_large",
+    "llada_8b",
+]
+
+
+def register(fn: Callable[[], ModelConfig]) -> Callable[[], ModelConfig]:
+    cfg = fn()
+    _REGISTRY[cfg.name] = fn
+    return fn
+
+
+def _ensure_loaded() -> None:
+    for mod in _ARCH_MODULES:
+        importlib.import_module(f"repro.configs.{mod}")
+
+
+def get_config(name: str) -> ModelConfig:
+    _ensure_loaded()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]()
+
+
+def list_archs() -> list[str]:
+    _ensure_loaded()
+    return sorted(_REGISTRY)

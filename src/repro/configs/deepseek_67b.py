@@ -1,0 +1,22 @@
+"""deepseek-67b — llama-arch dense [arXiv:2401.02954].
+
+95L d_model=8192 64H (GQA kv=8) d_ff=22016 vocab=102400.
+"""
+from repro.config.base import ModelConfig
+from repro.config.registry import register
+
+
+@register
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-67b",
+        family="dense",
+        num_layers=95,
+        d_model=8192,
+        num_heads=64,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=22016,
+        vocab_size=102400,
+        citation="DeepSeek LLM 67B [arXiv:2401.02954]",
+    )

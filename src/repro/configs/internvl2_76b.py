@@ -1,0 +1,26 @@
+"""internvl2-76b — InternViT + InternLM2 [arXiv:2404.16821].
+
+Language backbone only: 80L d_model=8192 64H (GQA kv=8) d_ff=28672
+vocab=128256. The InternViT vision encoder + projector is a STUB frontend
+per spec: ``input_specs`` provides precomputed patch embeddings.
+"""
+from repro.config.base import ModelConfig
+from repro.config.registry import register
+
+
+@register
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="internvl2-76b",
+        family="vlm",
+        num_layers=80,
+        d_model=8192,
+        num_heads=64,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=28672,
+        vocab_size=128256,
+        frontend="vision",
+        frontend_dim=8192,
+        citation="InternVL2 [arXiv:2404.16821]",
+    )

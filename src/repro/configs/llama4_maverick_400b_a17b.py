@@ -1,0 +1,26 @@
+"""llama4-maverick-400b-a17b — MoE top-1, early fusion
+[hf:meta-llama/Llama-4-Scout-17B-16E family].
+
+48L d_model=5120 40H (GQA kv=8) expert d_ff=8192 vocab=202048, MoE 128e top-1.
+"""
+from repro.config.base import ModelConfig
+from repro.config.registry import register
+
+
+@register
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="llama4-maverick-400b-a17b",
+        family="moe",
+        num_layers=48,
+        d_model=5120,
+        num_heads=40,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=8192,
+        vocab_size=202048,
+        num_experts=128,
+        experts_per_token=1,
+        rope_theta=5.0e5,
+        citation="Llama 4 Maverick [hf:meta-llama/Llama-4-Scout-17B-16E]",
+    )

@@ -1,0 +1,29 @@
+"""mamba2-130m — SSD (state-space duality) [arXiv:2405.21060].
+
+Attention-free: 24L d_model=768, ssm_state=128, vocab=50280.
+OSDT-inapplicable (strictly causal scan) — see DESIGN.md §Arch-applicability;
+served in AR mode with an SSM state cache.
+"""
+from repro.config.base import ModelConfig
+from repro.config.registry import register
+
+
+@register
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2-130m",
+        family="ssm",
+        num_layers=24,
+        d_model=768,
+        num_heads=0,
+        num_kv_heads=0,
+        d_ff=0,
+        vocab_size=50280,
+        ssm_state=128,
+        ssm_head_dim=64,
+        ssm_expand=2,
+        conv_width=4,
+        supports_mdlm=False,
+        tie_embeddings=True,
+        citation="SSD / Mamba2 [arXiv:2405.21060]",
+    )

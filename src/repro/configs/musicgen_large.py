@@ -1,0 +1,26 @@
+"""musicgen-large — decoder-only over EnCodec tokens [arXiv:2306.05284].
+
+Transformer backbone only: 48L d_model=2048 32H (GQA kv=32) d_ff=8192
+vocab=2048 (EnCodec codebook). The mel-spectrogram/EnCodec frontend is a
+STUB per spec: ``input_specs`` provides precomputed frame embeddings.
+"""
+from repro.config.base import ModelConfig
+from repro.config.registry import register
+
+
+@register
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="musicgen-large",
+        family="audio",
+        num_layers=48,
+        d_model=2048,
+        num_heads=32,
+        num_kv_heads=32,
+        head_dim=64,
+        d_ff=8192,
+        vocab_size=2048,
+        frontend="audio",
+        frontend_dim=2048,
+        citation="MusicGen [arXiv:2306.05284]",
+    )

@@ -1,0 +1,25 @@
+"""qwen3-moe-235b-a22b — 128 experts top-8 [hf:Qwen/Qwen3-30B-A3B family].
+
+94L d_model=4096 64H (GQA kv=4, head_dim=128) expert d_ff=1536 vocab=151936.
+"""
+from repro.config.base import ModelConfig
+from repro.config.registry import register
+
+
+@register
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-moe-235b-a22b",
+        family="moe",
+        num_layers=94,
+        d_model=4096,
+        num_heads=64,
+        num_kv_heads=4,
+        head_dim=128,
+        d_ff=1536,
+        vocab_size=151936,
+        num_experts=128,
+        experts_per_token=8,
+        rope_theta=1.0e6,
+        citation="Qwen3 MoE [hf:Qwen/Qwen3-30B-A3B]",
+    )

@@ -1,0 +1,25 @@
+"""smollm-135m — llama-arch small [hf:HuggingFaceTB/SmolLM-135M].
+
+30L d_model=576 9H (GQA kv=3) d_ff=1536 vocab=49152.
+Note 9 heads do not divide the 16-way model axis: head-structured tensors
+replicate and d_ff shards (see sharding/rules.py).
+"""
+from repro.config.base import ModelConfig
+from repro.config.registry import register
+
+
+@register
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="smollm-135m",
+        family="dense",
+        num_layers=30,
+        d_model=576,
+        num_heads=9,
+        num_kv_heads=3,
+        head_dim=64,
+        d_ff=1536,
+        vocab_size=49152,
+        tie_embeddings=True,
+        citation="SmolLM [hf:HuggingFaceTB/SmolLM-135M]",
+    )

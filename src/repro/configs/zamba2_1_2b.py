@@ -1,0 +1,31 @@
+"""zamba2-1.2b — Mamba2 backbone + shared attention blocks [arXiv:2411.15242].
+
+38L d_model=2048 32H (GQA kv=32) d_ff=8192 vocab=32000, ssm_state=64.
+One *shared* (weight-tied) attention+MLP block applied every 6 Mamba layers.
+OSDT-inapplicable (causal backbone); served AR. See DESIGN.md.
+"""
+from repro.config.base import ModelConfig
+from repro.config.registry import register
+
+
+@register
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="zamba2-1.2b",
+        family="hybrid",
+        num_layers=38,
+        d_model=2048,
+        num_heads=32,
+        num_kv_heads=32,
+        head_dim=64,
+        d_ff=8192,
+        vocab_size=32000,
+        ssm_state=64,
+        ssm_head_dim=64,
+        ssm_expand=2,
+        conv_width=4,
+        attn_every=6,
+        supports_mdlm=False,
+        tie_embeddings=True,
+        citation="Zamba2 [arXiv:2411.15242]",
+    )

@@ -1,0 +1,35 @@
+"""Per-position confidence = probability of the argmax token.
+
+This is the decoder's per-step hot spot over the vocab axis: the Pallas
+kernel in ``repro.kernels.confidence`` fuses the softmax-max / argmax /
+p(argmax) chain into one HBM pass; this module is the portable entry point
+that dispatches to it on TPU and to the fused-by-XLA jnp form elsewhere.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def confidence_ref(logits: Array) -> Tuple[Array, Array]:
+    """logits [..., V] (float32) -> (confidence [...], argmax token [...]).
+
+    confidence = softmax(logits)[argmax] = exp(max - logsumexp).
+    """
+    logits = logits.astype(jnp.float32)
+    m = jnp.max(logits, axis=-1)
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    lse = m + jnp.log(jnp.sum(jnp.exp(logits - m[..., None]), axis=-1))
+    conf = jnp.exp(m - lse)
+    return conf, tok
+
+
+def confidence(logits: Array, *, use_kernel: bool = False) -> Tuple[Array, Array]:
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return kops.fused_confidence(logits)
+    return confidence_ref(logits)

@@ -1,0 +1,220 @@
+"""Block diffusion decoder (semi-autoregressive MDLM generation).
+
+One compiled program per (cfg, dcfg, variant); the threshold table is a
+runtime argument so static / factor / OSDT share the same executable — the
+paper's "negligible overhead" property holds by construction.
+
+Two variants:
+  * ``use_cache=True``  — Fast-dLLM prefix KV-cache: prompt is prefilled
+    (bidirectionally), each denoising step runs ``block_step`` over the
+    active block only, and the block's K/V are committed after it completes
+    (one extra forward per block, counted in NFE).
+  * ``use_cache=False`` — vanilla LLaDA: every step is a full forward over
+    [prompt ∥ response] with all future blocks still masked.
+
+Unmasking rules per step (all shapes static; decisions are boolean masks):
+  quota  > 0 : LLaDA fixed-step baseline — top-``quota`` masked positions.
+  quota == 0 : threshold rule — unmask all masked positions with
+               confidence > table[block, step]; if none clears it, the
+               single most-confident masked position (Algorithm 1 l.19-21).
+
+Always records the calibration signal (conf of masked positions of batch
+element 0 per (block, step)) — it is tiny and makes every run usable as a
+calibration run.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.base import DecodeConfig, ModelConfig
+from repro.core.calibrate import CalibrationProfile
+from repro.core.confidence import confidence
+from repro.models import model as M
+
+Array = jax.Array
+
+
+class GenerateResult(NamedTuple):
+    tokens: Array        # [B, max_new_tokens]
+    nfe: Array           # [] int32 — model forwards executed
+    conf: Array          # [nb, steps_cap, block_size] float32
+    conf_valid: Array    # same, bool
+    steps_per_block: Array  # [nb] int32
+
+
+def _unmask_choice(conf: Array, toks: Array, block: Array, mask_id: Array,
+                   tau: Array, quota: int) -> Array:
+    """Boolean [B, bs] of positions to unmask this step."""
+    masked = block == mask_id
+    conf_m = jnp.where(masked, conf, -jnp.inf)
+    if quota > 0:
+        order = jnp.argsort(jnp.argsort(-conf_m, axis=-1), axis=-1)
+        return (order < quota) & masked
+    unmask = (conf_m > tau) & masked
+    best = jnp.argmax(conf_m, axis=-1)
+    need_fb = (~jnp.any(unmask, axis=-1)) & jnp.any(masked, axis=-1)
+    fb = jax.nn.one_hot(best, conf.shape[-1], dtype=bool) & need_fb[:, None]
+    return unmask | (fb & masked)
+
+
+def make_generate_fn(cfg: ModelConfig, dcfg: DecodeConfig, *,
+                     use_cache: bool = True, quota: int = 0,
+                     use_kernel: bool = False, cache_mode: str = ""):
+    """Build the jitted generate function.
+
+    fn(params, prompt [B, P] int32, table [nb, steps_cap] f32, mask_id [])
+      -> GenerateResult
+
+    ``cache_mode``: "prefix" (Fast-dLLM prefix cache, default when
+    use_cache), "dual" (prefix + suffix: the response region's K/V are
+    refreshed once per block so steps see the future masked blocks too —
+    Fast-dLLM DualCache), or "none" (vanilla LLaDA full re-forward).
+    """
+    assert cfg.supports_mdlm, f"{cfg.name}: diffusion decoding inapplicable"
+    if not cache_mode:
+        cache_mode = "prefix" if use_cache else "none"
+    use_cache = cache_mode != "none"
+    dual = cache_mode == "dual"
+    N, bs = dcfg.max_new_tokens, dcfg.block_size
+    nb, sc = dcfg.num_blocks, dcfg.steps_cap
+
+    def gen(params, prompt, table, mask_id):
+        B, P = prompt.shape
+        resp = jnp.full((B, N), mask_id, jnp.int32)
+        conf_rec = jnp.zeros((nb, sc, bs), jnp.float32)
+        val_rec = jnp.zeros((nb, sc, bs), bool)
+        steps_used = jnp.zeros((nb,), jnp.int32)
+        nfe = jnp.zeros((), jnp.int32)
+
+        if use_cache:
+            # dual cache reserves a scratch slot region for the in-flight
+            # block beyond [prompt | response]
+            max_len = P + N + (bs if dual else 0)
+            _, cache0 = M.prefill(params, cfg, prompt, max_len=max_len,
+                                  mode="full")
+            nfe = nfe + 1
+        else:
+            cache0 = None
+
+        def block_body(b, carry):
+            resp, cache, nfe, conf_rec, val_rec, steps_used = carry
+            start = b * bs
+            block0 = jax.lax.dynamic_slice(resp, (jnp.zeros((), jnp.int32),
+                                                  start), (B, bs))
+            block_start = P + start
+
+            if dual:
+                # refresh the whole response region's K/V (suffix cache):
+                # one forward over [resp] against the prompt prefix,
+                # committed at slot P without advancing the length
+                _, cache = M.block_step(params, cfg, resp,
+                                        jnp.asarray(P, jnp.int32), cache,
+                                        write=True, advance=False,
+                                        write_slot=P)
+                nfe = nfe + 1
+
+            def model_logits(block, full_resp):
+                if dual:
+                    logits, _ = M.block_step(
+                        params, cfg, block, block_start, cache,
+                        write_slot=P + N, exclude_start=start + P,
+                        exclude_len=bs)
+                    return logits
+                if use_cache:
+                    logits, _ = M.block_step(params, cfg, block,
+                                             block_start, cache)
+                    return logits
+                x = jnp.concatenate([prompt, full_resp], axis=1)
+                logits, _ = M.forward(params, cfg, x, mode="full")
+                return jax.lax.dynamic_slice(
+                    logits, (jnp.zeros((), jnp.int32), block_start,
+                             jnp.zeros((), jnp.int32)),
+                    (B, bs, logits.shape[-1]))
+
+            def cond_fn(st):
+                block, step, *_ = st
+                return (step < sc) & jnp.any(block == mask_id)
+
+            def step_fn(st):
+                block, step, resp, nfe, conf_rec, val_rec = st
+                logits = model_logits(block, resp)
+                conf, toks = confidence(logits, use_kernel=use_kernel)
+                masked = block == mask_id
+                tau = table[b, jnp.minimum(step, sc - 1)]
+                unmask = _unmask_choice(conf, toks, block, mask_id, tau,
+                                        quota)
+                new_block = jnp.where(unmask, toks, block)
+                new_resp = jax.lax.dynamic_update_slice(
+                    resp, new_block, (jnp.zeros((), jnp.int32), start))
+                conf_rec = jax.lax.dynamic_update_slice(
+                    conf_rec, jnp.where(masked[0], conf[0],
+                                        0.0)[None, None, :],
+                    (b, step, jnp.zeros((), jnp.int32)))
+                val_rec = jax.lax.dynamic_update_slice(
+                    val_rec, masked[0][None, None, :],
+                    (b, step, jnp.zeros((), jnp.int32)))
+                return (new_block, step + 1, new_resp, nfe + 1, conf_rec,
+                        val_rec)
+
+            block, steps, resp, nfe, conf_rec, val_rec = jax.lax.while_loop(
+                cond_fn, step_fn,
+                (block0, jnp.zeros((), jnp.int32), resp, nfe, conf_rec,
+                 val_rec))
+            steps_used = steps_used.at[b].set(steps)
+
+            if use_cache and not dual:
+                # commit the finished block's K/V (Fast-dLLM prefix cache)
+                _, cache = M.block_step(params, cfg, block, block_start,
+                                        cache, write=True)
+                nfe = nfe + 1
+            return (resp, cache, nfe, conf_rec, val_rec, steps_used)
+
+        carry = (resp, cache0, nfe, conf_rec, val_rec, steps_used)
+        resp, _, nfe, conf_rec, val_rec, steps_used = jax.lax.fori_loop(
+            0, nb, block_body, carry)
+        return GenerateResult(resp, nfe, conf_rec, val_rec, steps_used)
+
+    return jax.jit(gen)
+
+
+def result_profile(res: GenerateResult) -> CalibrationProfile:
+    """Host-side view of the recorded confidences (Phase-1 output)."""
+    return CalibrationProfile(
+        conf=np.asarray(res.conf),
+        valid=np.asarray(res.conf_valid),
+        steps=np.asarray(res.steps_per_block),
+    )
+
+
+# ---------------------------------------------------------------------------
+# AR decoding (SSM / hybrid archs — OSDT inapplicable, DESIGN.md §4)
+# ---------------------------------------------------------------------------
+
+def make_ar_generate_fn(cfg: ModelConfig, *, max_new_tokens: int,
+                        window: int = 0):
+    """Greedy AR generation: fn(params, prompt [B, P]) -> tokens [B, N]."""
+
+    def gen(params, prompt):
+        B, P = prompt.shape
+        max_len = P + max_new_tokens
+        logits, cache = M.prefill(params, cfg, prompt, max_len=max_len,
+                                  window=window)
+        first = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+
+        def step(carry, _):
+            tok, cache = carry
+            logits, cache = M.decode_step(params, cfg, tok, cache,
+                                          window=window)
+            nxt = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+            return (nxt, cache), tok
+
+        (_, _), toks = jax.lax.scan(step, (first, cache), None,
+                                    length=max_new_tokens)
+        return jnp.moveaxis(toks[:, :, 0], 0, 1)
+
+    return jax.jit(gen)

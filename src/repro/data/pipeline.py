@@ -1,0 +1,57 @@
+"""Batching pipeline: samples -> fixed-shape token arrays.
+
+Layout per row: [PAD ... PAD, prompt][answer, EOS, EOS ...]
+                 <- prompt_len ->   <-   resp_len          ->
+Prompts are left-padded (so the response region starts at a fixed offset —
+required by the block diffusion decoder) and answers right-padded with EOS
+(LLaDA-style: the model learns to fill unused positions with EOS).
+``loss_mask`` covers the response region only (SFT masking).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterator, List
+
+import numpy as np
+
+from repro.data import tokenizer as tok
+from repro.data.tasks import Sample, mixture
+
+
+@dataclass
+class Batch:
+    tokens: np.ndarray      # [B, prompt_len + resp_len] int32
+    loss_mask: np.ndarray   # [B, same] bool
+    weights: np.ndarray     # [B, same] float32 (EOS padding down-weighted)
+    prompt_len: int
+    resp_len: int
+
+
+def encode_sample(s: Sample, prompt_len: int, resp_len: int) -> tuple:
+    p = tok.encode(s.prompt, bos=True)[-prompt_len:]
+    a = tok.encode(s.answer, eos=True)[:resp_len]
+    return tok.pad_left(p, prompt_len), tok.pad_right(a, resp_len)
+
+
+PAD_WEIGHT = 0.05  # EOS-fill positions after the first EOS
+
+
+def make_batch(samples: List[Sample], prompt_len: int, resp_len: int) -> Batch:
+    rows, masks, weights = [], [], []
+    for s in samples:
+        p, a = encode_sample(s, prompt_len, resp_len)
+        rows.append(p + a)
+        masks.append([False] * prompt_len + [True] * resp_len)
+        n_ans = min(len(tok.encode(s.answer, eos=True)), resp_len)
+        weights.append([0.0] * prompt_len + [1.0] * n_ans +
+                       [PAD_WEIGHT] * (resp_len - n_ans))
+    return Batch(np.asarray(rows, np.int32), np.asarray(masks, bool),
+                 np.asarray(weights, np.float32), prompt_len, resp_len)
+
+
+def train_batches(seed: int, batch_size: int, prompt_len: int, resp_len: int
+                  ) -> Iterator[Batch]:
+    """Infinite stream of task-mixture batches."""
+    rng = np.random.default_rng(seed)
+    while True:
+        yield make_batch(mixture(rng, batch_size), prompt_len, resp_len)

@@ -1,0 +1,60 @@
+"""jit'd wrappers + platform dispatch for the Pallas kernels.
+
+On TPU the Pallas kernels run natively; elsewhere (this CPU container, or
+any backend without Mosaic) the mathematically identical jnp forms run
+instead. Tests sweep shapes/dtypes through ``interpret=True`` to validate
+the kernel bodies themselves on CPU.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.confidence import fused_confidence_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+
+Array = jax.Array
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@jax.jit
+def _fused_confidence_tpu(logits2d: Array) -> Tuple[Array, Array]:
+    return fused_confidence_pallas(logits2d)
+
+
+@jax.jit
+def _fused_confidence_ref(logits2d: Array) -> Tuple[Array, Array]:
+    return ref.confidence_ref(logits2d)
+
+
+def fused_confidence(logits: Array) -> Tuple[Array, Array]:
+    """logits [..., V] -> (conf [...], tok [...])."""
+    shape = logits.shape[:-1]
+    flat = logits.reshape(-1, logits.shape[-1])
+    fn = _fused_confidence_tpu if _on_tpu() else _fused_confidence_ref
+    conf, tok = fn(flat)
+    return conf.reshape(shape), tok.reshape(shape)
+
+
+@partial(jax.jit, static_argnames=("causal",))
+def _flash_tpu(q, k, v, causal: bool):
+    return flash_attention_pallas(q, k, v, causal=causal)
+
+
+@partial(jax.jit, static_argnames=("causal",))
+def _flash_ref(q, k, v, causal: bool):
+    return ref.attention_ref(q, k, v, causal=causal)
+
+
+def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True
+                    ) -> Array:
+    """q [B,H,S,D], k/v [B,H,T,D] -> [B,H,S,D]."""
+    fn = _flash_tpu if _on_tpu() else _flash_ref
+    return fn(q, k, v, causal)

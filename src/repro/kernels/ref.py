@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def confidence_ref(logits: Array) -> Tuple[Array, Array]:
+    """logits [R, V] -> (conf [R] f32, tok [R] i32).
+
+    conf = softmax(logits)[argmax] = exp(max - logsumexp).
+    """
+    x = logits.astype(jnp.float32)
+    m = jnp.max(x, axis=-1)
+    tok = jnp.argmax(x, axis=-1).astype(jnp.int32)
+    s = jnp.sum(jnp.exp(x - m[:, None]), axis=-1)
+    return 1.0 / s, tok
+
+
+def attention_ref(q: Array, k: Array, v: Array, *, causal: bool) -> Array:
+    """q [B,H,S,D], k/v [B,H,T,D] -> [B,H,S,D] (float32 math)."""
+    S, T = q.shape[2], k.shape[2]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    s = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((S, T), bool), k=T - S)
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)

@@ -1,0 +1,226 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run driver.
+
+For every (architecture x input shape) pair this lowers + compiles the
+appropriate step (train_step / prefill_step / serve_step) against the
+production mesh — 16x16 single-pod and 2x16x16 multi-pod — using
+ShapeDtypeStruct inputs (no allocation), then records memory_analysis,
+cost_analysis and the HLO collective mix for the roofline.
+
+The two lines above MUST precede any jax import: jax locks the device
+count at first init, and only the dry-run wants 512 placeholder devices.
+
+Usage:
+  python -m repro.launch.dryrun --arch smollm-135m --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--force]
+Results are cached as JSON under experiments/dryrun/.
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.config.base import INPUT_SHAPES
+from repro.config.registry import get_config, list_archs
+from repro.launch import specs as specs_lib
+from repro.launch.mesh import make_production_mesh
+from repro.roofline import analysis
+from repro.roofline.analytic import (MeshInfo, flops_per_device,
+                                     footprint_bytes_per_device,
+                                     hbm_bytes_per_device)
+
+
+def _sharded_arg_bytes(args, in_sh, mesh) -> float:
+    """Exact per-device bytes of step inputs given their shardings."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    flat_args = jax.tree.leaves(args)
+    flat_sh = jax.tree.leaves(in_sh, is_leaf=lambda x: hasattr(x, "spec"))
+    total = 0.0
+    for a, sh in zip(flat_args, flat_sh):
+        denom = 1
+        for ax in sh.spec:
+            if ax is None:
+                continue
+            for name in (ax if isinstance(ax, tuple) else (ax,)):
+                denom *= sizes[name]
+        total += a.size * a.dtype.itemsize / denom
+    return total
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+ASSIGNED = [
+    "mamba2-130m", "qwen3-moe-235b-a22b", "deepseek-67b", "qwen1.5-0.5b",
+    "qwen1.5-110b", "zamba2-1.2b", "llama4-maverick-400b-a17b",
+    "internvl2-76b", "smollm-135m", "musicgen-large",
+]
+
+
+def run_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
+             variant: str | None = None, verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    t0 = time.perf_counter()
+    step_fn, args, in_sh, out_sh = specs_lib.build(cfg, shape, mesh,
+                                                   variant=variant)
+    with mesh:
+        lowered = jax.jit(step_fn, in_shardings=in_sh,
+                          out_shardings=out_sh).lower(*args)
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    coll = analysis.collective_bytes(compiled.as_text())
+    kind = variant or shape.kind
+    if kind in ("train", "prefill"):
+        n_tokens = shape.global_batch * shape.seq_len
+    elif kind == "block":
+        n_tokens = shape.global_batch * specs_lib.BLOCK_SIZE
+    else:
+        n_tokens = shape.global_batch  # one token per sequence
+
+    window = 0
+    if kind == "decode" and shape.seq_len > 32768 and cfg.family != "ssm":
+        window = specs_lib.LONG_WINDOW
+
+    n_micro = 1
+    strategy = "tp"
+    if kind == "train":
+        from repro.models.frontend import frontend_len
+        flen = frontend_len(cfg)
+        strategy = specs_lib._train_strategy(cfg, mesh, shape.global_batch)
+        n_micro = specs_lib._microbatches(cfg, mesh, shape.global_batch,
+                                          shape.seq_len - flen, strategy)
+    mi = MeshInfo.from_mesh(mesh)
+    if strategy == "fsdp":
+        mi = MeshInfo(batch_shards=mi.chips, tp=1)
+    a_flops = flops_per_device(cfg, shape, kind, mi, window=window)
+    a_bytes = hbm_bytes_per_device(cfg, shape, kind, mi, window=window)
+    args_bytes = _sharded_arg_bytes(args, in_sh, mesh)
+    import dataclasses as _dc
+    fp_shape = _dc.replace(shape, global_batch=shape.global_batch // n_micro) \
+        if n_micro > 1 else shape
+    r_group = 1
+    if strategy == "fsdp":
+        for gg in (8, 7, 6, 5, 4, 3, 2):
+            if cfg.num_layers % gg == 0:
+                r_group = gg
+                break
+    footprint = footprint_bytes_per_device(args_bytes, cfg, fp_shape, kind,
+                                           mi, remat_group=r_group)
+
+    hlo_flops = float(cost.get("flops", 0.0))
+    hlo_bytes = float(cost.get("bytes accessed", 0.0))
+    coll_total = sum(coll.values())
+    terms = analysis.roofline(a_flops, a_bytes, coll_total)
+    mflops = analysis.model_flops(cfg, n_tokens,
+                                  "train" if kind == "train" else "infer")
+
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "variant": kind,
+        "mesh": list(mesh.devices.shape),
+        "chips": int(n_chips),
+        "window": window,
+        "grad_accum_microbatches": n_micro,
+        "train_strategy": strategy,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            # exact static per-device bytes of inputs given shardings
+            "args_bytes_per_dev": args_bytes,
+            # footprint = args + activation working-set estimate
+            "footprint_bytes_per_dev": footprint,
+            "fits_16g_hbm": footprint < 16 * 2**30,
+            # raw XLA numbers (CPU backend: loop bodies counted once,
+            # temp_size unreliable -- recorded for reference only)
+            "xla_argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "xla_output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "xla_peak_bytes": int(getattr(mem, "peak_memory_in_bytes", 0)),
+        },
+        "cost": {
+            "analytic_flops_per_dev": a_flops,
+            "analytic_hbm_bytes_per_dev": a_bytes,
+            "hlo_flops_per_dev_raw": hlo_flops,
+            "hlo_bytes_per_dev_raw": hlo_bytes,
+        },
+        "collectives": coll,
+        "roofline": terms,
+        "model_flops_total": mflops,
+        "model_flops_per_dev": mflops / n_chips,
+        "useful_flop_ratio": (mflops / n_chips) / a_flops if a_flops else 0.0,
+    }
+    if verbose:
+        print(f"[{arch} x {shape_name} x {'x'.join(map(str, mesh.devices.shape))}"
+              f" ({kind})] compile {t_compile:.1f}s  "
+              f"footprint/dev {footprint/2**30:.2f}GiB  "
+              f"flops/dev {a_flops:.3e}  coll {coll_total/2**20:.1f}MiB  "
+              f"dominant {terms['dominant']} ({terms['bound_s']*1e3:.3f}ms)")
+    return record
+
+
+def _result_path(arch: str, shape: str, multi_pod: bool, variant) -> Path:
+    mesh_tag = "2x16x16" if multi_pod else "16x16"
+    vtag = f"__{variant}" if variant else ""
+    return OUT_DIR / f"{arch}__{shape}__{mesh_tag}{vtag}.json"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", help="architecture id (see --list)")
+    ap.add_argument("--shape", choices=list(INPUT_SHAPES))
+    ap.add_argument("--variant", choices=["block"], default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="run every assigned (arch x shape) pair")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    if args.list:
+        for a in list_archs():
+            print(a)
+        return
+
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    pairs = []
+    if args.all:
+        for arch in ASSIGNED:
+            for shape in INPUT_SHAPES:
+                pairs.append((arch, shape, args.variant))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        pairs.append((args.arch, args.shape, args.variant))
+
+    failures = []
+    for arch, shape, variant in pairs:
+        path = _result_path(arch, shape, args.multi_pod, variant)
+        if path.exists() and not args.force:
+            print(f"skip (cached): {path.name}")
+            continue
+        try:
+            rec = run_pair(arch, shape, multi_pod=args.multi_pod,
+                           variant=variant)
+            path.write_text(json.dumps(rec, indent=1))
+        except Exception as e:  # record the failure for triage
+            failures.append((arch, shape, repr(e)))
+            print(f"FAIL {arch} x {shape}: {e}")
+            traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} failures:")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+    print("dry-run complete")
+
+
+if __name__ == "__main__":
+    main()

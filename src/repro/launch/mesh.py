@@ -1,0 +1,30 @@
+"""Production meshes (TPU v5e): 16x16 single pod, 2x16x16 two pods.
+
+``make_production_mesh`` is a function (not a module constant) so importing
+this module never touches jax device state; the dry-run driver sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before first jax
+use.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(*, data: int = 2, model: int = 2):
+    """Small mesh over however many (possibly fake) local devices exist —
+    used by sharding unit tests."""
+    n = len(jax.devices())
+    assert n >= data * model, (n, data, model)
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+# v5e hardware constants for the roofline (per chip)
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # B/s
+ICI_BW = 50e9                 # B/s per link

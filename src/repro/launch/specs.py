@@ -1,0 +1,330 @@
+"""Step functions + ShapeDtypeStruct input specs for the dry-run/launchers.
+
+For each (arch, input shape) this module builds:
+  * the step callable (train_step / prefill_step / serve_step / the paper's
+    diffusion block_step),
+  * ``input_specs`` — weak-type-correct ShapeDtypeStruct stand-ins for every
+    input (params, optimizer state, caches, token batches) — no allocation,
+  * in/out shardings from ``repro.sharding.rules``.
+
+Decode shapes lower ``serve_step`` (ONE token against a seq_len cache).
+``long_500k`` uses a sliding-window ring cache (window 8192) on attention
+archs — the sub-quadratic variant required by the spec — and the O(1) SSM
+state on ssm/hybrid archs.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config.base import ModelConfig, ShapeConfig
+from repro.models import model as M
+from repro.models.frontend import frontend_len
+from repro.sharding import rules
+from repro.sharding import ctx as shard_ctx
+from repro.training.loss import ar_loss, mdlm_loss
+from repro.training.optimizer import OptConfig, adamw_update, init_opt_state
+
+LONG_WINDOW = 8192
+SEQ_SHARD = os.environ.get("REPRO_NO_SP", "") == ""  # sequence parallelism
+ANCHOR_LP = os.environ.get("REPRO_RS_GRADS", "") == "1"  # §Perf H1 lever
+BF16_GRADS = os.environ.get("REPRO_BF16_GRADS", "") == "1"  # §Perf H2 lever
+# Sharding strategy for train steps: "tp" (TP+SP+FSDP, the paper-faithful
+# Megatron-style baseline) | "fsdp" (pure ZeRO-3 over the whole mesh) |
+# "auto" (fsdp for dense archs whose global batch covers the mesh — the
+# §Perf winner; see EXPERIMENTS.md).
+TRAIN_STRATEGY = os.environ.get("REPRO_STRATEGY", "tp")
+
+
+def _serve_strategy(cfg, mesh, B: int, S: int, window: int) -> str:
+    """Weights resident (TP-only) when weights/tp + cache fit ~13 GiB."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    tp = sizes.get("model", 1)
+    dp = sizes.get("data", 1) * sizes.get("pod", 1)
+    by = 2 if cfg.dtype == "bfloat16" else 4
+    resident = cfg.param_count() * by / tp
+    cache = 0.0
+    if cfg.has_attention:
+        kd = 2 * cfg.num_kv_heads * cfg.resolved_head_dim
+        T = min(S, window) if window else S
+        kv_shard = tp if (cfg.num_kv_heads % tp == 0 or
+                          cfg.resolved_head_dim % tp == 0) else 1
+        b_shard = dp if B % dp == 0 else 1
+        n_l = cfg.num_layers if cfg.family != "hybrid" else             cfg.num_layers // max(cfg.attn_every, 1)
+        cache = n_l * B * T * kd * by / (kv_shard * b_shard)
+    return "serve" if resident + cache < 13 * 2**30 else "tp"
+
+
+def _train_strategy(cfg, mesh, B: int) -> str:
+    if TRAIN_STRATEGY == "tp":
+        return "tp"
+    chips = 1
+    for n in mesh.devices.shape:
+        chips *= n
+    ok = (not cfg.is_moe) and B % chips == 0
+    if TRAIN_STRATEGY == "fsdp":
+        return "fsdp" if ok else "tp"
+    return "fsdp" if ok else "tp"  # auto
+BLOCK_SIZE = 32  # diffusion block for the block_step variant
+
+
+def _sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def params_shape(cfg: ModelConfig):
+    return jax.eval_shape(lambda: M.init_params(jax.random.key(0), cfg))
+
+
+def _batch_entry(batch_spec) -> object:
+    """A single PartitionSpec entry for the batch dim (None if unsharded)."""
+    parts = tuple(batch_spec)
+    return parts[0] if parts else None
+
+
+def _vocab_spec(cfg: ModelConfig, mesh) -> Optional[str]:
+    return "model" if cfg.vocab_size % rules._axis_size(mesh, "model") == 0 \
+        else None
+
+
+def build(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
+          variant: Optional[str] = None
+          ) -> Tuple[Callable, Tuple, Any, Any]:
+    """Returns (step_fn, arg_structs, in_shardings, out_shardings).
+
+    ``variant`` overrides the shape-kind -> step mapping; "block" selects
+    the diffusion block_step (MDLM archs only).
+    """
+    kind = variant or shape.kind
+    B, S = shape.global_batch, shape.seq_len
+    if kind == "train":
+        strategy = _train_strategy(cfg, mesh, B)
+    else:
+        w = LONG_WINDOW if (S > 32768 and cfg.family != "ssm") else 0
+        strategy = _serve_strategy(cfg, mesh, B, S, w)
+    p_shape = params_shape(cfg)
+    p_specs = rules.param_specs(cfg, p_shape, mesh, strategy=strategy)
+    ns = lambda spec: NamedSharding(mesh, spec)
+    p_shard = jax.tree.map(lambda s: ns(s), p_specs,
+                           is_leaf=lambda x: isinstance(x, P))
+    flen = frontend_len(cfg)
+    tok_S = S - flen
+    dt = M.param_dtype(cfg)
+    batch_spec = rules.data_spec((B,), mesh, strategy=strategy)
+
+    feats_struct = None
+    feats_shard = None
+    if flen:
+        feats_struct = _sds((B, flen, cfg.frontend_dim), jnp.float32)
+        feats_shard = ns(P(*batch_spec, None, None))
+
+    if kind == "train":
+        return _build_train(cfg, mesh, p_shape, p_shard, B, tok_S,
+                            feats_struct, feats_shard, batch_spec, ns,
+                            strategy)
+    if kind == "prefill":
+        return _build_prefill(cfg, mesh, p_shape, p_shard, B, tok_S, S,
+                              feats_struct, feats_shard, batch_spec, ns)
+    if kind == "decode":
+        window = 0 if S <= 32768 or cfg.family in ("ssm",) else LONG_WINDOW
+        if cfg.family == "hybrid" and S > 32768:
+            window = LONG_WINDOW
+        return _build_decode(cfg, mesh, p_shape, p_shard, B, S, window,
+                             batch_spec, ns)
+    if kind == "block":
+        return _build_block(cfg, mesh, p_shape, p_shard, B, S, batch_spec, ns)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+
+def _microbatches(cfg, mesh, B, tok_S, strategy: str = "tp") -> int:
+    """Smallest power-of-two microbatch count keeping the estimated
+    training footprint under ~14 GiB/device (v5e HBM is 16)."""
+    from repro.config.base import ShapeConfig
+    from repro.roofline.analytic import (MeshInfo, footprint_bytes_per_device)
+    mi = MeshInfo.from_mesh(mesh)
+    g = 1
+    if strategy == "fsdp":
+        mi = MeshInfo(batch_shards=mi.chips, tp=1)
+        for gg in (8, 7, 6, 5, 4, 3, 2):
+            if cfg.num_layers % gg == 0:
+                g = gg
+                break
+    for m in (1, 2, 4, 8, 16):
+        if B % (m * mi.batch_shards) and m > 1:
+            break
+        shape = ShapeConfig("mb", tok_S, B // m, "train")
+        est = footprint_bytes_per_device(5 * 2**30, cfg, shape, "train", mi,
+                                         remat_group=g)
+        if est < 14 * 2**30:
+            return m
+    return 8 if B % (8 * mi.batch_shards) == 0 else 1
+
+
+def _build_train(cfg, mesh, p_shape, p_shard, B, tok_S, feats_struct,
+                 feats_shard, batch_spec, ns, strategy="tp"):
+    # half-precision AdamW moments once params exceed ~300B: the f32 states
+    # alone would blow 16 GiB/chip even fully sharded (llama4: 6.2 TB)
+    state_dtype = "bfloat16" if cfg.param_count() > 3e11 else "float32"
+    ocfg = OptConfig(state_dtype=state_dtype)
+    opt_shape = jax.eval_shape(
+        functools.partial(init_opt_state, state_dtype=state_dtype), p_shape)
+    opt_specs = {
+        "m": rules.param_specs(cfg, p_shape, mesh, strategy=strategy),
+        "v": rules.param_specs(cfg, p_shape, mesh, strategy=strategy),
+        "step": P(),
+    }
+    opt_shard = jax.tree.map(lambda s: ns(s), opt_specs,
+                             is_leaf=lambda x: isinstance(x, P))
+    objective = "mdlm" if cfg.supports_mdlm else "ar"
+    mask_id = cfg.vocab_size - 1
+    n_micro = _microbatches(cfg, mesh, B, tok_S, strategy)
+    # pure-FSDP saves boundaries unsharded: checkpoint groups of layers
+    remat_group = 1
+    if strategy == "fsdp":
+        for g in (8, 7, 6, 5, 4, 3, 2):
+            if cfg.num_layers % g == 0:
+                remat_group = g
+                break
+
+    def train_step(params, opt_state, step_idx, tokens, loss_mask,
+                   feats=None):
+        with shard_ctx.activation_sharding(mesh, seq_shard=SEQ_SHARD,
+                                           anchor_layer_params=ANCHOR_LP,
+                                           bf16_grads=BF16_GRADS,
+                                           strategy=strategy):
+            rng = jax.random.fold_in(jax.random.key(0), step_idx)
+
+            def loss_fn(p, tk, lm, ft):
+                if objective == "mdlm":
+                    return mdlm_loss(p, cfg, rng, tk, lm, mask_id=mask_id,
+                                     frontend_feats=ft, remat=True,
+                                     remat_group=remat_group)
+                return ar_loss(p, cfg, tk, lm, frontend_feats=ft,
+                               remat=True, remat_group=remat_group)
+
+            if n_micro == 1:
+                (_, metrics), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, tokens, loss_mask, feats)
+            else:
+                # gradient accumulation: scan over microbatches (keeps the
+                # per-step activation footprint 1/n_micro; DESIGN.md §6)
+                def resh(a):
+                    return a.reshape((n_micro, a.shape[0] // n_micro)
+                                     + a.shape[1:])
+                xs = (resh(tokens), resh(loss_mask),
+                      resh(feats) if feats is not None else None)
+                g0 = jax.tree.map(
+                    lambda x: jnp.zeros(x.shape, jnp.float32), params)
+
+                def micro(acc, xi):
+                    tk, lm, ft = xi
+                    (_, mets), g = jax.value_and_grad(
+                        loss_fn, has_aux=True)(params, tk, lm, ft)
+                    acc = jax.tree.map(
+                        lambda a, b: a + b.astype(jnp.float32), acc, g)
+                    return acc, mets
+
+                grads, mets = jax.lax.scan(micro, g0, xs)
+                grads = jax.tree.map(lambda g: g / n_micro, grads)
+                metrics = jax.tree.map(lambda m: jnp.mean(m, axis=0), mets)
+
+            params, opt_state, om = adamw_update(params, grads, opt_state,
+                                                 ocfg)
+            metrics.update(om)
+            return params, opt_state, metrics
+
+    args = [p_shape, opt_shape, _sds((), jnp.int32),
+            _sds((B, tok_S), jnp.int32), _sds((B, tok_S), jnp.bool_)]
+    in_sh = [p_shard, opt_shard, ns(P()),
+             ns(P(*batch_spec, None)), ns(P(*batch_spec, None))]
+    if feats_struct is not None:
+        args.append(feats_struct)
+        in_sh.append(feats_shard)
+    out_sh = (p_shard, opt_shard, None)
+    return train_step, tuple(args), tuple(in_sh), out_sh
+
+
+def _build_prefill(cfg, mesh, p_shape, p_shard, B, tok_S, S, feats_struct,
+                   feats_shard, batch_spec, ns):
+    mode = "full" if cfg.supports_mdlm else None
+
+    def prefill_step(params, tokens, feats=None):
+        with shard_ctx.activation_sharding(mesh, seq_shard=SEQ_SHARD,
+                                           anchor_layer_params=ANCHOR_LP,
+                                           bf16_grads=BF16_GRADS):
+            logits, cache = M.prefill(params, cfg, tokens, max_len=S,
+                                      mode=mode, frontend_feats=feats)
+            return logits[:, -1], cache  # last-position logits only
+
+    from repro.models.cache import init_cache
+    cache_shape = jax.eval_shape(
+        functools.partial(init_cache, cfg, B, S, M.param_dtype(cfg)))
+    cache_sh = jax.tree.map(lambda s: ns(s),
+                            rules.cache_specs(cfg, cache_shape, mesh),
+                            is_leaf=lambda x: isinstance(x, P))
+    args = [p_shape, _sds((B, tok_S), jnp.int32)]
+    in_sh = [p_shard, ns(P(*batch_spec, None))]
+    if feats_struct is not None:
+        args.append(feats_struct)
+        in_sh.append(feats_shard)
+    out_sh = (ns(P(_batch_entry(batch_spec), _vocab_spec(cfg, mesh))),
+              cache_sh)
+    return prefill_step, tuple(args), tuple(in_sh), out_sh
+
+
+def _build_decode(cfg, mesh, p_shape, p_shard, B, S, window, batch_spec, ns):
+    from repro.models.cache import init_cache
+
+    def serve_step(params, token, cache):
+        with shard_ctx.activation_sharding(mesh, seq_shard=SEQ_SHARD,
+                                           anchor_layer_params=ANCHOR_LP,
+                                           bf16_grads=BF16_GRADS):
+            logits, cache = M.decode_step(params, cfg, token, cache,
+                                          window=window)
+            return logits, cache
+
+    cache_shape = jax.eval_shape(
+        functools.partial(init_cache, cfg, B, S, M.param_dtype(cfg),
+                          window=window))
+    cache_specs = rules.cache_specs(cfg, cache_shape, mesh)
+    cache_sh = jax.tree.map(lambda s: ns(s), cache_specs,
+                            is_leaf=lambda x: isinstance(x, P))
+    be = _batch_entry(batch_spec)
+    args = (p_shape, _sds((B, 1), jnp.int32), cache_shape)
+    in_sh = (p_shard, ns(P(be, None)), cache_sh)
+    out_sh = (ns(P(be, None, _vocab_spec(cfg, mesh))), cache_sh)
+    return serve_step, args, in_sh, out_sh
+
+
+def _build_block(cfg, mesh, p_shape, p_shard, B, S, batch_spec, ns):
+    """The paper's step: denoise a BLOCK_SIZE block against a prefix cache
+    of up to seq_len tokens (Fast-dLLM / OSDT inner loop)."""
+    assert cfg.supports_mdlm
+    from repro.models.cache import init_cache
+
+    def block_step(params, block_tokens, block_start, cache):
+        with shard_ctx.activation_sharding(mesh, seq_shard=SEQ_SHARD,
+                                           anchor_layer_params=ANCHOR_LP,
+                                           bf16_grads=BF16_GRADS):
+            logits, cache = M.block_step(params, cfg, block_tokens,
+                                         block_start, cache)
+            return logits, cache
+
+    cache_shape = jax.eval_shape(
+        functools.partial(init_cache, cfg, B, S, M.param_dtype(cfg)))
+    cache_sh = jax.tree.map(lambda s: ns(s),
+                            rules.cache_specs(cfg, cache_shape, mesh),
+                            is_leaf=lambda x: isinstance(x, P))
+    be = _batch_entry(batch_spec)
+    args = (p_shape, _sds((B, BLOCK_SIZE), jnp.int32), _sds((), jnp.int32),
+            cache_shape)
+    in_sh = (p_shard, ns(P(be, None)), ns(P()), cache_sh)
+    out_sh = (ns(P(be, None, _vocab_spec(cfg, mesh))), cache_sh)
+    return block_step, args, in_sh, out_sh

@@ -1,0 +1,49 @@
+"""Training launcher.
+
+Local (real) training on this host's devices:
+  PYTHONPATH=src python -m repro.launch.train --arch llada-8b --reduced \\
+      --steps 200 --batch 16
+
+With ``--dry-run`` the production-mesh train step is lowered + compiled
+instead (see repro.launch.dryrun for the full sweep driver).
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.config.registry import get_config, list_archs
+from repro.training.optimizer import OptConfig
+from repro.training.train_loop import TrainConfig, train
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llada-8b", choices=list_archs())
+    ap.add_argument("--reduced", action="store_true",
+                    help="train the reduced CPU-size variant")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--resp-len", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--objective", choices=["mdlm", "ar"], default=None)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced(num_layers=4, max_d_model=256, vocab_size=512)
+    objective = args.objective or ("mdlm" if cfg.supports_mdlm else "ar")
+    tcfg = TrainConfig(
+        steps=args.steps, batch_size=args.batch, prompt_len=args.prompt_len,
+        resp_len=args.resp_len, seed=args.seed, objective=objective,
+        opt=OptConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                      total_steps=args.steps),
+        ckpt_path=args.ckpt)
+    _, hist = train(cfg, tcfg)
+    print(f"final loss: {hist[-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,149 @@
+"""Attention core: masked dense + chunked online-softmax ("flash") paths.
+
+Pure functions over ``q [B,S,H,D]``, ``k/v [B,T,K,D]`` with GQA grouping.
+The chunked path is the XLA-compilable analogue of the Pallas flash kernel
+in ``repro.kernels.flash_attention`` (which is TPU-targeted); both share the
+same oracle semantics and are cross-checked in tests. ``ops.py`` in kernels/
+dispatches between them by platform.
+
+Mask modes
+----------
+``causal``   kv_pos <= q_pos
+``full``     bidirectional (MDLM)
+``sliding``  causal AND q_pos - kv_pos < window
+
+An optional ``kv_valid`` bool array [B, T] (or [T]) masks cache padding.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+NEG_INF = -1.0e30
+
+
+def mask_bias(q_pos: Array, kv_pos: Array, mode: str, window: int) -> Array:
+    """Boolean mask [S, T] from position vectors."""
+    q = q_pos[:, None]
+    k = kv_pos[None, :]
+    if mode == "causal":
+        keep = k <= q
+    elif mode == "full":
+        keep = jnp.ones((q_pos.shape[0], kv_pos.shape[0]), bool)
+    elif mode == "sliding":
+        keep = (k <= q) & (q - k < window)
+    else:
+        raise ValueError(f"unknown mask mode {mode!r}")
+    return keep
+
+
+def _merge_valid(keep: Array, kv_valid: Optional[Array], batch: int) -> Array:
+    """keep [S,T] + kv_valid [B,T] or [T] -> [B,1,1,S,T] broadcastable."""
+    keep = keep[None, None, None]  # [1,1,1,S,T]
+    if kv_valid is not None:
+        if kv_valid.ndim == 1:
+            kv_valid = kv_valid[None]
+        keep = keep & kv_valid[:, None, None, None, :]
+    return keep
+
+
+def attend_dense(q: Array, k: Array, v: Array, *, q_pos: Array, kv_pos: Array,
+                 mode: str = "causal", window: int = 0,
+                 kv_valid: Optional[Array] = None) -> Array:
+    B, S, H, D = q.shape
+    K = k.shape[2]
+    G = H // K
+    scale = 1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32))
+    qg = q.reshape(B, S, K, G, D)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    keep = _merge_valid(mask_bias(q_pos, kv_pos, mode, window), kv_valid, B)
+    scores = jnp.where(keep, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs.astype(v.dtype), v)
+    return out.reshape(B, S, H, D)
+
+
+def attend_flash(q: Array, k: Array, v: Array, *, q_pos: Array, kv_pos: Array,
+                 mode: str = "causal", window: int = 0,
+                 kv_valid: Optional[Array] = None,
+                 q_chunk: int = 512, kv_chunk: int = 1024) -> Array:
+    """Online-softmax attention, scan over q-chunks (outer) and kv-chunks
+    (inner). Peak temporary is [B,K,G,q_chunk,kv_chunk] — independent of S,T.
+    """
+    B, S, H, D = q.shape
+    T = k.shape[1]
+    K = k.shape[2]
+    G = H // K
+    q_chunk = min(q_chunk, S)
+    kv_chunk = min(kv_chunk, T)
+    assert S % q_chunk == 0 and T % kv_chunk == 0, (S, q_chunk, T, kv_chunk)
+    nq, nk = S // q_chunk, T // kv_chunk
+    scale = 1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32))
+
+    qg = q.reshape(B, nq, q_chunk, K, G, D)
+    qp = q_pos.reshape(nq, q_chunk)
+    kg = k.reshape(B, nk, kv_chunk, K, D)
+    vg = v.reshape(B, nk, kv_chunk, K, D)
+    kp = kv_pos.reshape(nk, kv_chunk)
+    if kv_valid is not None and kv_valid.ndim == 1:
+        kv_valid = jnp.broadcast_to(kv_valid[None], (B, T))
+    kval = None if kv_valid is None else kv_valid.reshape(B, nk, kv_chunk)
+
+    def one_q_chunk(args):
+        qc, qpc = args  # [B,qc,K,G,D], [qc]
+
+        def kv_body(carry, xs):
+            m, l, acc = carry
+            if kval is None:
+                kc, vc, kpc = xs
+                valid = None
+            else:
+                kc, vc, kpc, valid = xs
+            s = jnp.einsum("bqkgd,btkd->bkgqt", qc, kc,
+                           preferred_element_type=jnp.float32) * scale
+            keep = mask_bias(qpc, kpc, mode, window)[None, None, None]
+            if valid is not None:
+                keep = keep & valid[:, None, None, None, :]
+            s = jnp.where(keep, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqt,btkd->bkgqd", p, vc.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, K, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, K, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, K, G, q_chunk, D), jnp.float32)
+        xs = (jnp.moveaxis(kg, 1, 0), jnp.moveaxis(vg, 1, 0),
+              kp) if kval is None else (
+            jnp.moveaxis(kg, 1, 0), jnp.moveaxis(vg, 1, 0), kp,
+            jnp.moveaxis(kval, 1, 0))
+        (m, l, acc), _ = jax.lax.scan(kv_body, (m0, l0, a0), xs)
+        # guard fully-masked rows (l == 0)
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return jnp.moveaxis(out, 3, 1)  # [B,qc,K,G,D]
+
+    out = jax.lax.map(one_q_chunk, (jnp.moveaxis(qg, 1, 0), qp))  # [nq,B,qc,K,G,D]
+    out = jnp.moveaxis(out, 0, 1).reshape(B, S, H, D)
+    return out.astype(q.dtype)
+
+
+def attention(q: Array, k: Array, v: Array, *, q_pos: Array, kv_pos: Array,
+              mode: str = "causal", window: int = 0,
+              kv_valid: Optional[Array] = None,
+              dense_limit: int = 2 ** 22) -> Array:
+    """Dispatch dense vs chunked by score-matrix size (S*T)."""
+    S, T = q.shape[1], k.shape[1]
+    if S * T <= dense_limit:
+        return attend_dense(q, k, v, q_pos=q_pos, kv_pos=kv_pos, mode=mode,
+                            window=window, kv_valid=kv_valid)
+    return attend_flash(q, k, v, q_pos=q_pos, kv_pos=kv_pos, mode=mode,
+                        window=window, kv_valid=kv_valid)

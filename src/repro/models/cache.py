@@ -1,0 +1,75 @@
+"""Decode caches: attention KV (optionally ring/sliding-window), SSM state.
+
+All caches are plain dict pytrees so they jit/shard/donate cleanly.
+
+KV cache layout (stacked over layers for ``lax.scan``):
+  k, v  : [L, B, T, Kh, D]   (rotary already applied to k)
+  pos   : [T] int32          absolute position held in each slot, -1 = empty
+  length: [] int32           total tokens written so far
+
+When ``T < full sequence`` the cache is a ring buffer (sliding window):
+slot = length % T. Validity is ``pos >= 0`` and, for windowed attention,
+``q_pos - pos < window`` — both checked at attention time.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+
+Array = jax.Array
+
+
+def init_kv_cache(num_layers: int, batch: int, max_len: int, kv_heads: int,
+                  head_dim: int, dtype) -> dict:
+    return {
+        "k": jnp.zeros((num_layers, batch, max_len, kv_heads, head_dim), dtype),
+        "v": jnp.zeros((num_layers, batch, max_len, kv_heads, head_dim), dtype),
+        "pos": jnp.full((max_len,), -1, jnp.int32),
+        "length": jnp.zeros((), jnp.int32),
+    }
+
+
+def init_ssm_cache(num_layers: int, batch: int, cfg: ModelConfig, dtype) -> dict:
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_state
+    return {
+        "state": jnp.zeros((num_layers, batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                            cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((num_layers, batch, cfg.conv_width - 1, conv_ch), dtype),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype,
+               window: int = 0) -> dict:
+    """Build the family-appropriate cache. ``window`` > 0 -> ring KV buffer."""
+    kv_len = min(max_len, window) if window else max_len
+    if cfg.family == "ssm":
+        return {"ssm": init_ssm_cache(cfg.num_layers, batch, cfg, dtype)}
+    if cfg.family == "hybrid":
+        n_sites = cfg.num_layers // cfg.attn_every
+        return {
+            "ssm": init_ssm_cache(cfg.num_layers, batch, cfg, dtype),
+            "attn": init_kv_cache(n_sites, batch, kv_len, cfg.num_kv_heads,
+                                  cfg.resolved_head_dim, dtype),
+        }
+    return {"attn": init_kv_cache(cfg.num_layers, batch, kv_len,
+                                  cfg.num_kv_heads, cfg.resolved_head_dim, dtype)}
+
+
+def kv_write_slice(cache_k: Array, cache_v: Array, k_new: Array, v_new: Array,
+                   start: Array) -> tuple[Array, Array]:
+    """Write [B,S,Kh,D] chunk at slot ``start`` (no ring wrap: caller ensures
+    start+S <= T for chunked writes)."""
+    b0 = jnp.zeros((), jnp.int32)
+    idx = (b0, start.astype(jnp.int32), b0, b0)
+    ck = jax.lax.dynamic_update_slice(cache_k, k_new.astype(cache_k.dtype), idx)
+    cv = jax.lax.dynamic_update_slice(cache_v, v_new.astype(cache_v.dtype), idx)
+    return ck, cv
+
+
+def pos_write_slice(pos: Array, positions: Array, start: Array) -> Array:
+    return jax.lax.dynamic_update_slice(
+        pos, positions.astype(jnp.int32), (start.astype(jnp.int32),))

@@ -1,0 +1,38 @@
+"""Modality frontend STUBS (per spec: the one allowed stub).
+
+For ``vlm`` the InternViT encoder + projector, and for ``audio`` the
+mel/EnCodec feature extractor, are represented by *precomputed embeddings*
+of the correct shape supplied as model inputs. The backbone owns only a
+linear projector from ``frontend_dim`` to ``d_model``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.models.layers import dense_init
+
+# number of frontend positions prepended to the token sequence
+FRONTEND_LEN = {"vision": 256, "audio": 64, "none": 0}
+
+
+def frontend_len(cfg: ModelConfig) -> int:
+    return FRONTEND_LEN[cfg.frontend]
+
+
+def init_frontend(rng, cfg: ModelConfig, dtype) -> dict:
+    if cfg.frontend == "none":
+        return {}
+    return {"proj": dense_init(rng, cfg.frontend_dim, cfg.d_model, dtype)}
+
+
+def frontend_embeds(params: dict, cfg: ModelConfig, feats: jax.Array) -> jax.Array:
+    """feats: [B, S_f, frontend_dim] -> [B, S_f, d_model]."""
+    return jnp.einsum("bsf,fm->bsm", feats, params["proj"])
+
+
+def dummy_features(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> jax.Array:
+    """Stand-in embeddings for tests/examples (the stub's output)."""
+    n = frontend_len(cfg)
+    return jnp.zeros((batch, n, cfg.frontend_dim), dtype)

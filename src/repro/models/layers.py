@@ -1,0 +1,103 @@
+"""Shared neural-net building blocks (pure functions over param pytrees).
+
+Parameter conventions: every module exposes ``init_<name>(rng, cfg, ...)``
+returning a dict pytree, and a pure apply function. All matmul params are
+stored ``[d_in, d_out]`` so sharding rules can key on dimension sizes.
+Compute runs in the config dtype; normalization statistics and logits in
+float32.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(rng, d_in: int, d_out: int, dtype, *, scale: float = 1.0) -> Array:
+    std = scale / jnp.sqrt(jnp.asarray(d_in, jnp.float32))
+    return (jax.random.normal(rng, (d_in, d_out), jnp.float32) * std).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: Array, scale: Array, eps: float) -> Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * scale.astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> Array:
+    """[head_dim//2] inverse frequencies, float32."""
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """Rotate pairs. x: [..., S, H, D]; positions: broadcastable to [..., S]."""
+    d = x.shape[-1]
+    inv_freq = rope_frequencies(d, theta)  # [D/2]
+    angles = positions.astype(jnp.float32)[..., None] * inv_freq  # [..., S, D/2]
+    cos = jnp.cos(angles)[..., None, :]  # [..., S, 1, D/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1 = x[..., 0::2].astype(jnp.float32)
+    x2 = x[..., 1::2].astype(jnp.float32)
+    out1 = x1 * cos - x2 * sin
+    out2 = x2 * cos + x1 * sin
+    out = jnp.stack([out1, out2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(rng, d_model: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(rng, 3)
+    return {
+        "wi_gate": dense_init(k1, d_model, d_ff, dtype),
+        "wi_up": dense_init(k2, d_model, d_ff, dtype),
+        "wo": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def mlp(params: dict, x: Array) -> Array:
+    gate = jnp.einsum("bsm,mf->bsf", x, params["wi_gate"])
+    up = jnp.einsum("bsm,mf->bsf", x, params["wi_up"])
+    hidden = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    return jnp.einsum("bsf,fm->bsm", hidden, params["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+def init_embedding(rng, vocab: int, d_model: int, dtype) -> Array:
+    return (jax.random.normal(rng, (vocab, d_model), jnp.float32) * 0.02).astype(dtype)
+
+
+def embed(table: Array, tokens: Array) -> Array:
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(table_or_head: Array, x: Array, *, transpose: bool) -> Array:
+    """Logits in float32. ``transpose`` when reusing the [V, M] embed table."""
+    if transpose:
+        return jnp.einsum("bsm,vm->bsv", x.astype(jnp.float32),
+                          table_or_head.astype(jnp.float32))
+    return jnp.einsum("bsm,mv->bsv", x.astype(jnp.float32),
+                      table_or_head.astype(jnp.float32))

@@ -1,0 +1,187 @@
+"""Mamba2 / SSD (state-space duality) layer [arXiv:2405.21060].
+
+TPU adaptation: the SSD *chunked matmul* formulation — intra-chunk terms are
+dense einsums (MXU-friendly), the inter-chunk recurrence is a short
+``lax.scan`` over chunk states. Strictly causal (see DESIGN.md: OSDT's
+bidirectional in-block denoising is inapplicable; these archs serve AR).
+
+State layout: h [B, N, P, X] float32 (N = ssm heads, P = head dim,
+X = ssm_state). Conv cache keeps the last ``w-1`` pre-activation channels.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.models.layers import dense_init, rms_norm
+
+Array = jax.Array
+
+
+def init_mamba2(rng, cfg: ModelConfig, dtype) -> dict:
+    m = cfg.d_model
+    di = cfg.d_inner
+    x_dim = cfg.ssm_state
+    n = cfg.ssm_heads
+    w = cfg.conv_width
+    conv_ch = di + 2 * x_dim
+    k1, k2, k3, k4, k5 = jax.random.split(rng, 5)
+    # inverse softplus of dt in [1e-3, 1e-1], log-spaced
+    dt = jnp.exp(jax.random.uniform(k4, (n,), jnp.float32,
+                                    math.log(1e-3), math.log(1e-1)))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))
+    return {
+        "in_proj": dense_init(k1, m, 2 * di + 2 * x_dim + n, dtype),
+        "conv_w": (jax.random.uniform(k2, (w, conv_ch), jnp.float32,
+                                      -1.0, 1.0) / math.sqrt(w)).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "a_log": jnp.log(jax.random.uniform(k3, (n,), jnp.float32, 1.0, 16.0)),
+        "d_skip": jnp.ones((n,), jnp.float32),
+        "dt_bias": dt_bias,
+        "norm": jnp.ones((di,), dtype),
+        "out_proj": dense_init(k5, di, m, dtype),
+    }
+
+
+def _causal_conv(x: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv, unrolled over the (small) width. x: [B,S,C]."""
+    width = w.shape[0]
+    S = x.shape[1]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + S] * w[i] for i in range(width))
+    return out + b
+
+
+def _conv_step(x_new: Array, conv_state: Array, w: Array, b: Array
+               ) -> Tuple[Array, Array]:
+    """x_new: [B,C]; conv_state: [B,w-1,C] (oldest first)."""
+    width = w.shape[0]
+    hist = sum(conv_state[:, i] * w[i] for i in range(width - 1))
+    out = hist + x_new * w[width - 1] + b
+    new_state = jnp.concatenate(
+        [conv_state[:, 1:], x_new[:, None, :]], axis=1)
+    return out, new_state
+
+
+def ssd_scan(xbar: Array, da_log: Array, b_mat: Array, c_mat: Array,
+             h0: Array, chunk: int = 64) -> Tuple[Array, Array]:
+    """Chunked SSD scan.
+
+    xbar [B,S,N,P]; da_log [B,S,N] (log decay, <=0); b_mat/c_mat [B,S,X];
+    h0 [B,N,P,X]. Returns (y [B,S,N,P], h_final).
+    """
+    B, S, N, P = xbar.shape
+    X = b_mat.shape[-1]
+    c = min(chunk, S)
+    assert S % c == 0, (S, c)
+    nc = S // c
+
+    xb = xbar.reshape(B, nc, c, N, P).astype(jnp.float32)
+    a = da_log.reshape(B, nc, c, N).astype(jnp.float32)
+    bm = b_mat.reshape(B, nc, c, X).astype(jnp.float32)
+    cm = c_mat.reshape(B, nc, c, X).astype(jnp.float32)
+
+    a_cum = jnp.cumsum(a, axis=2)                      # [B,nc,c,N]
+    a_sum = a_cum[:, :, -1, :]                         # [B,nc,N]
+
+    # ---- intra-chunk (dense, MXU) ----
+    scores = jnp.einsum("bkix,bkjx->bkij", cm, bm)     # [B,nc,c,c]
+    li = a_cum[:, :, :, None, :] - a_cum[:, :, None, :, :]  # [B,nc,i,j,N]
+    causal = jnp.tril(jnp.ones((c, c), bool))
+    decay = jnp.where(causal[None, None, :, :, None], jnp.exp(li), 0.0)
+    y_intra = jnp.einsum("bkij,bkijn,bkjnp->bkinp", scores, decay, xb)
+
+    # ---- chunk states + inter-chunk recurrence ----
+    to_end = jnp.exp(a_sum[:, :, None, :] - a_cum)     # [B,nc,c,N]
+    s_k = jnp.einsum("bkjn,bkjnp,bkjx->bknpx", to_end, xb, bm)
+
+    def rec(h, xs):
+        decay_k, s = xs                                 # [B,N], [B,N,P,X]
+        h_next = h * jnp.exp(decay_k)[:, :, None, None] + s
+        return h_next, h                                # emit state at chunk START
+
+    chunk_decay = jnp.moveaxis(a_sum, 1, 0)             # [nc,B,N]
+    s_seq = jnp.moveaxis(s_k, 1, 0)                     # [nc,B,N,P,X]
+    h_final, h_starts = jax.lax.scan(rec, h0.astype(jnp.float32),
+                                     (chunk_decay, s_seq))
+    h_starts = jnp.moveaxis(h_starts, 0, 1)             # [B,nc,N,P,X]
+
+    y_inter = jnp.einsum("bkix,bknpx->bkinp", cm, h_starts) * \
+        jnp.exp(a_cum)[..., None]
+    y = (y_intra + y_inter).reshape(B, S, N, P)
+    return y, h_final
+
+
+def mamba2_forward(params: dict, cfg: ModelConfig, x: Array,
+                   h0: Optional[Array] = None,
+                   conv_state: Optional[Array] = None,
+                   chunk: int = 64) -> Tuple[Array, Array, Array]:
+    """Full-sequence forward. x: [B,S,M] -> (y [B,S,M], h_final, conv_state)."""
+    B, S, M = x.shape
+    di, xs_dim, n, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    w = cfg.conv_width
+
+    zxbcdt = jnp.einsum("bsm,md->bsd", x, params["in_proj"])
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * xs_dim], axis=-1)
+    if conv_state is None:
+        conv_in = xbc
+    else:  # continue from cached history
+        conv_in = jnp.concatenate([conv_state.astype(xbc.dtype), xbc], axis=1)
+    conv = _causal_conv(conv_in, params["conv_w"], params["conv_b"])
+    if conv_state is not None:
+        conv = conv[:, conv_state.shape[1]:]
+    xbc_act = jax.nn.silu(conv.astype(jnp.float32)).astype(x.dtype)
+    xc, b_mat, c_mat = jnp.split(xbc_act, [di, di + xs_dim], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["a_log"])                       # [N]
+    da_log = dt * a                                     # [B,S,N]
+    xh = xc.reshape(B, S, n, p)
+    xbar = xh.astype(jnp.float32) * dt[..., None]
+
+    if h0 is None:
+        h0 = jnp.zeros((B, n, p, xs_dim), jnp.float32)
+    y, h_final = ssd_scan(xbar, da_log, b_mat, c_mat, h0, chunk=chunk)
+    y = y + params["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, di).astype(x.dtype)
+
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                 params["norm"], cfg.norm_eps)
+    out = jnp.einsum("bsd,dm->bsm", y, params["out_proj"])
+    new_conv_state = xbc[:, -(w - 1):] if S >= w - 1 else jnp.concatenate(
+        [conv_state[:, S:], xbc], axis=1)  # type: ignore[union-attr]
+    return out, h_final, new_conv_state
+
+
+def mamba2_step(params: dict, cfg: ModelConfig, x: Array, h: Array,
+                conv_state: Array) -> Tuple[Array, Array, Array]:
+    """Single-token recurrent step. x: [B,M] -> (y [B,M], h', conv_state')."""
+    B, M = x.shape
+    di, xs_dim, n, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+
+    zxbcdt = jnp.einsum("bm,md->bd", x, params["in_proj"])
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * xs_dim], axis=-1)
+    conv, conv_state = _conv_step(xbc, conv_state, params["conv_w"],
+                                  params["conv_b"])
+    xbc_act = jax.nn.silu(conv.astype(jnp.float32)).astype(x.dtype)
+    xc, b_mat, c_mat = jnp.split(xbc_act, [di, di + xs_dim], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # [B,N]
+    a = -jnp.exp(params["a_log"])
+    da = jnp.exp(dt * a)                                # [B,N]
+    xh = xc.reshape(B, n, p).astype(jnp.float32)
+    xbar = xh * dt[..., None]
+
+    h = h * da[:, :, None, None] + jnp.einsum(
+        "bnp,bx->bnpx", xbar, b_mat.astype(jnp.float32))
+    y = jnp.einsum("bnpx,bx->bnp", h, c_mat.astype(jnp.float32))
+    y = y + params["d_skip"][None, :, None] * xh
+    y = y.reshape(B, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                 params["norm"], cfg.norm_eps)
+    out = jnp.einsum("bd,dm->bm", y, params["out_proj"])
+    return out, h, conv_state

@@ -1,0 +1,572 @@
+"""Model assembly: init + forward/prefill/decode/block-step for all families.
+
+Everything is functional: ``params`` is a pytree whose per-layer tensors are
+*stacked* along a leading layer axis and consumed with ``lax.scan`` — this
+keeps HLO size O(1) in depth so the 80–95-layer configs lower and compile
+quickly, and it is what the sharding rules in ``repro.sharding`` key on.
+
+Step vocabulary (see DESIGN.md):
+  forward      full-sequence, no cache     (AR train, MDLM train, cacheless
+                                            MDLM generation)
+  prefill      full-sequence causal, builds the KV/SSM cache
+  decode_step  one token against the cache (AR serving; the ``decode_*``
+                                            dry-run shapes)
+  block_step   diffusion denoising step: the active block attends
+               [prefix cache ∥ block] bidirectionally (Fast-dLLM / OSDT);
+               ``write=True`` commits the block's KV into the cache
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.models import cache as cache_lib
+from repro.models.attention import attention
+from repro.models.frontend import (frontend_embeds, frontend_len,
+                                   init_frontend)
+from repro.models.layers import (apply_rope, dense_init, embed, init_embedding,
+                                 init_mlp, mlp, rms_norm, unembed)
+from repro.models.mamba2 import (init_mamba2, mamba2_forward, mamba2_step)
+from repro.models.moe import init_moe, moe_mlp
+from repro.sharding import ctx as shard_ctx
+
+Array = jax.Array
+
+ATTN_FAMILIES = ("dense", "moe", "vlm", "audio")
+
+
+def param_dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_attn_layer(rng, cfg: ModelConfig, dtype) -> dict:
+    m, hd = cfg.d_model, cfg.resolved_head_dim
+    h, kh = cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(rng, 6)
+    p = {
+        "ln1": jnp.ones((m,), dtype),
+        "wq": dense_init(ks[0], m, h * hd, dtype),
+        "wk": dense_init(ks[1], m, kh * hd, dtype),
+        "wv": dense_init(ks[2], m, kh * hd, dtype),
+        "wo": dense_init(ks[3], h * hd, m, dtype),
+        "ln2": jnp.ones((m,), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((kh * hd,), dtype)
+        p["bv"] = jnp.zeros((kh * hd,), dtype)
+    if cfg.is_moe:
+        p["moe"] = init_moe(ks[4], m, cfg.d_ff, cfg.num_experts, dtype)
+    else:
+        p["mlp"] = init_mlp(ks[4], m, cfg.d_ff, dtype)
+    return p
+
+
+def _init_mamba_layer(rng, cfg: ModelConfig, dtype) -> dict:
+    k1, k2 = jax.random.split(rng)
+    return {"ln": jnp.ones((cfg.d_model,), dtype),
+            "ssm": init_mamba2(k1, cfg, dtype)}
+
+
+def init_params(rng, cfg: ModelConfig) -> dict:
+    dtype = param_dtype(cfg)
+    k_emb, k_head, k_layers, k_shared, k_fe = jax.random.split(rng, 5)
+    params: Dict[str, Any] = {
+        "embed": init_embedding(k_emb, cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = dense_init(k_head, cfg.d_model, cfg.vocab_size, dtype)
+
+    layer_keys = jax.random.split(k_layers, cfg.num_layers)
+    if cfg.family in ATTN_FAMILIES:
+        params["layers"] = jax.vmap(
+            lambda k: _init_attn_layer(k, cfg, dtype))(layer_keys)
+    elif cfg.family == "ssm":
+        params["layers"] = jax.vmap(
+            lambda k: _init_mamba_layer(k, cfg, dtype))(layer_keys)
+    elif cfg.family == "hybrid":
+        params["layers"] = jax.vmap(
+            lambda k: _init_mamba_layer(k, cfg, dtype))(layer_keys)
+        # one weight-shared attention block (Zamba2)
+        shared_cfg = cfg
+        params["shared_attn"] = _init_attn_layer(k_shared, shared_cfg, dtype)
+    else:
+        raise ValueError(cfg.family)
+
+    if cfg.frontend != "none":
+        params["frontend"] = init_frontend(k_fe, cfg, dtype)
+    return params
+
+
+def param_shapes(cfg: ModelConfig) -> dict:
+    """Shape-only params via eval_shape (no allocation) — dry-run path."""
+    return jax.eval_shape(
+        lambda: init_params(jax.random.key(0), cfg))
+
+
+# ---------------------------------------------------------------------------
+# attention layer apply
+# ---------------------------------------------------------------------------
+
+def _qkv(p: dict, cfg: ModelConfig, h_norm: Array, q_pos: Array
+         ) -> Tuple[Array, Array, Array]:
+    B, S, _ = h_norm.shape
+    hd = cfg.resolved_head_dim
+    q = shard_ctx.act_attn_out(jnp.einsum("bsm,md->bsd", h_norm, p["wq"]))
+    k = shard_ctx.act_attn_out(jnp.einsum("bsm,md->bsd", h_norm, p["wk"]))
+    v = shard_ctx.act_attn_out(jnp.einsum("bsm,md->bsd", h_norm, p["wv"]))
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, cfg.num_heads, hd)
+    k = k.reshape(B, S, cfg.num_kv_heads, hd)
+    v = v.reshape(B, S, cfg.num_kv_heads, hd)
+    q = apply_rope(q, q_pos, cfg.rope_theta)
+    k = apply_rope(k, q_pos, cfg.rope_theta)
+    if S > 64:  # anchor attention layout for long sequences only (the
+        # flash chunk loops need it hoisted; for short block/decode steps
+        # the cache layout governs and extra anchors force weight gathers)
+        q = shard_ctx.act_heads(q)
+        k = shard_ctx.act_heads(k)
+        v = shard_ctx.act_heads(v)
+    return q, k, v
+
+
+def _mlp_part(p: dict, cfg: ModelConfig, x: Array) -> Tuple[Array, dict]:
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.is_moe:
+        out, aux = moe_mlp(p["moe"], h, num_experts=cfg.num_experts,
+                           top_k=cfg.experts_per_token,
+                           capacity_factor=cfg.capacity_factor)
+    else:
+        out, aux = mlp(p["mlp"], h), {"aux_loss": jnp.zeros((), jnp.float32)}
+    return x + shard_ctx.act_bsd(out), aux
+
+
+def _attn_layer_full(p: dict, cfg: ModelConfig, x: Array, positions: Array,
+                     mode: str, window: int) -> Tuple[Array, dict, Tuple]:
+    """Self-attention over the full sequence. Returns rotated (k, v) so
+    prefill can capture them for the cache."""
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = _qkv(p, cfg, h, positions)
+    attn = attention(q, k, v, q_pos=positions, kv_pos=positions,
+                     mode=mode, window=window)
+    B, S = x.shape[:2]
+    attn_flat = shard_ctx.act_attn_out(
+        attn.reshape(B, S, -1).astype(x.dtype))
+    # anchor the TP partial-sum crossing in bf16 (pre-residual): without
+    # this XLA hoists the f32 convert above the all-reduce (2x volume)
+    x = x + shard_ctx.act_bsd(jnp.einsum("bsd,dm->bsm", attn_flat, p["wo"]))
+    x, aux = _mlp_part(p, cfg, x)
+    return shard_ctx.act_bsd(x), aux, (k, v)
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(params: dict, cfg: ModelConfig, tokens: Array,
+                  frontend_feats: Optional[Array]) -> Array:
+    x = embed(params["embed"], tokens)
+    if cfg.frontend != "none":
+        assert frontend_feats is not None, "frontend arch needs features"
+        fe = frontend_embeds(params["frontend"], cfg,
+                             frontend_feats.astype(x.dtype))
+        x = jnp.concatenate([fe, x], axis=1)
+    return shard_ctx.act_bsd(x)
+
+
+def _head(params: dict, cfg: ModelConfig, x: Array) -> Array:
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = unembed(params["embed"], x, transpose=True)
+    else:
+        logits = unembed(params["head"], x, transpose=False)
+    return shard_ctx.logits_bsv(logits)
+
+
+# ---------------------------------------------------------------------------
+# full forward (train / cacheless MDLM)
+# ---------------------------------------------------------------------------
+
+def forward(params: dict, cfg: ModelConfig, tokens: Array, *,
+            mode: Optional[str] = None, window: int = 0,
+            positions: Optional[Array] = None,
+            frontend_feats: Optional[Array] = None,
+            remat: bool = False, remat_group: int = 1) -> Tuple[Array, dict]:
+    """tokens [B, S_tok] -> logits [B, S_total, V] (float32), aux dict.
+
+    ``mode`` defaults to causal for AR families and must be set to "full"
+    for MDLM training/inference on attention archs. ``remat=True`` wraps
+    each scanned layer in jax.checkpoint (training at scale: only the layer
+    boundaries are saved for the backward pass); ``remat_group=g`` (g
+    dividing num_layers) checkpoints GROUPS of g layers instead — 1/g the
+    saved boundaries at unchanged FLOPs, for the pure-FSDP strategy where
+    no mesh axis shards the saved activations.
+    """
+    if mode is None:
+        mode = "causal"
+    x = _embed_inputs(params, cfg, tokens, frontend_feats)
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)
+    ckpt = jax.checkpoint if remat else (lambda f: f)
+
+    if cfg.family in ATTN_FAMILIES:
+        def body(h, lp):
+            lp = shard_ctx.layer_params(lp)
+            h, aux, _ = _attn_layer_full(lp, cfg, h, positions, mode, window)
+            return h, aux["aux_loss"]
+        g = remat_group if remat else 1
+        if g > 1 and cfg.num_layers % g == 0:
+            grouped = jax.tree.map(
+                lambda a: a.reshape((cfg.num_layers // g, g) + a.shape[1:]),
+                params["layers"])
+
+            def gbody(h, glp):
+                return jax.lax.scan(body, h, glp)
+
+            x, aux_losses = jax.lax.scan(jax.checkpoint(gbody), x, grouped)
+        else:
+            x, aux_losses = jax.lax.scan(ckpt(body), x, params["layers"])
+        aux = {"aux_loss": jnp.sum(aux_losses)}
+    elif cfg.family == "ssm":
+        def body(h, lp):
+            y, _, _ = mamba2_forward(lp["ssm"], cfg,
+                                     rms_norm(h, lp["ln"], cfg.norm_eps))
+            return shard_ctx.act_bsd(h + y), jnp.zeros((), jnp.float32)
+        x, _ = jax.lax.scan(ckpt(body), x, params["layers"])
+        aux = {"aux_loss": jnp.zeros((), jnp.float32)}
+    elif cfg.family == "hybrid":
+        x = _hybrid_forward(params, cfg, x, positions, window, remat=remat)
+        aux = {"aux_loss": jnp.zeros((), jnp.float32)}
+    else:
+        raise ValueError(cfg.family)
+    return _head(params, cfg, x), aux
+
+
+def _hybrid_forward(params: dict, cfg: ModelConfig, x: Array,
+                    positions: Array, window: int,
+                    remat: bool = False) -> Array:
+    """Zamba2: groups of ``attn_every`` Mamba layers, shared attention block
+    between groups (weight-tied), then the remainder layers."""
+    every = cfg.attn_every
+    n_sites = cfg.num_layers // every
+    rem = cfg.num_layers % every
+    grouped = jax.tree.map(
+        lambda a: a[: n_sites * every].reshape((n_sites, every) + a.shape[1:]),
+        params["layers"])
+    remainder = jax.tree.map(lambda a: a[n_sites * every:], params["layers"])
+    shared = params["shared_attn"]
+    ckpt = jax.checkpoint if remat else (lambda f: f)
+
+    def mamba_body(h, lp):
+        y, _, _ = mamba2_forward(lp["ssm"], cfg,
+                                 rms_norm(h, lp["ln"], cfg.norm_eps))
+        return shard_ctx.act_bsd(h + y), None
+
+    def group_body(h, glp):
+        h, _ = jax.lax.scan(ckpt(mamba_body), h, glp)
+        h, _, _ = _attn_layer_full(shared, cfg, h, positions, "causal", window)
+        return h, None
+
+    x, _ = jax.lax.scan(ckpt(group_body), x, grouped)
+    if rem:
+        x, _ = jax.lax.scan(ckpt(mamba_body), x, remainder)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# prefill
+# ---------------------------------------------------------------------------
+
+def prefill(params: dict, cfg: ModelConfig, tokens: Array, *, max_len: int,
+            window: int = 0, mode: Optional[str] = None,
+            frontend_feats: Optional[Array] = None) -> Tuple[Array, dict]:
+    """Forward over the prompt; returns (logits, cache).
+
+    ``mode`` defaults to causal (AR serving) — pass ``"full"`` for MDLM
+    decoding where the prompt is encoded bidirectionally (LLaDA semantics).
+    The cache is sized ``max_len`` (or the window for sliding-window decode)
+    and holds the prompt's KV / final SSM state.
+    """
+    x = _embed_inputs(params, cfg, tokens, frontend_feats)
+    B, S, _ = x.shape
+    positions = jnp.arange(S, dtype=jnp.int32)
+    if mode is None:
+        mode = "sliding" if window else "causal"
+    cache = cache_lib.init_cache(cfg, B, max_len, x.dtype, window=window)
+
+    if cfg.family in ATTN_FAMILIES:
+        def body(h, lp):
+            h, _, (k, v) = _attn_layer_full(lp, cfg, h, positions, mode, window)
+            return h, (k, v)
+        x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+        cache["attn"] = _store_prefill_kv(cache["attn"], ks, vs, positions,
+                                          window)
+    elif cfg.family == "ssm":
+        def body(h, lp):
+            y, hf, cs = mamba2_forward(lp["ssm"], cfg,
+                                       rms_norm(h, lp["ln"], cfg.norm_eps))
+            return shard_ctx.act_bsd(h + y), (hf, cs)
+        x, (hf, cs) = jax.lax.scan(body, x, params["layers"])
+        cache["ssm"] = {"state": hf, "conv": cs}
+    elif cfg.family == "hybrid":
+        x, cache = _hybrid_prefill(params, cfg, x, positions, window, cache)
+    return _head(params, cfg, x), cache
+
+
+def _store_prefill_kv(kv_cache: dict, ks: Array, vs: Array, positions: Array,
+                      window: int) -> dict:
+    """ks/vs: [L,B,S,Kh,D]. Keep the window tail when the cache is a ring."""
+    S = ks.shape[2]
+    T = kv_cache["k"].shape[2]
+    if S > T:  # sliding window: only the last T positions survive
+        ks, vs = ks[:, :, S - T:], vs[:, :, S - T:]
+        positions = positions[S - T:]
+        kv_cache["k"] = ks.astype(kv_cache["k"].dtype)
+        kv_cache["v"] = vs.astype(kv_cache["v"].dtype)
+        kv_cache["pos"] = positions.astype(jnp.int32)
+    else:
+        kv_cache["k"] = jax.lax.dynamic_update_slice(
+            kv_cache["k"], ks.astype(kv_cache["k"].dtype), (0, 0, 0, 0, 0))
+        kv_cache["v"] = jax.lax.dynamic_update_slice(
+            kv_cache["v"], vs.astype(kv_cache["v"].dtype), (0, 0, 0, 0, 0))
+        kv_cache["pos"] = cache_lib.pos_write_slice(
+            kv_cache["pos"], positions, jnp.zeros((), jnp.int32))
+    kv_cache["length"] = jnp.asarray(S, jnp.int32)
+    return kv_cache
+
+
+def _hybrid_prefill(params: dict, cfg: ModelConfig, x: Array, positions: Array,
+                    window: int, cache: dict) -> Tuple[Array, dict]:
+    every = cfg.attn_every
+    n_sites = cfg.num_layers // every
+    rem = cfg.num_layers % every
+    grouped = jax.tree.map(
+        lambda a: a[: n_sites * every].reshape((n_sites, every) + a.shape[1:]),
+        params["layers"])
+    remainder = jax.tree.map(lambda a: a[n_sites * every:], params["layers"])
+    shared = params["shared_attn"]
+    mode = "sliding" if window else "causal"
+
+    def mamba_body(h, lp):
+        y, hf, cs = mamba2_forward(lp["ssm"], cfg,
+                                   rms_norm(h, lp["ln"], cfg.norm_eps))
+        return h + y, (hf, cs)
+
+    def group_body(h, glp):
+        h, (hf, cs) = jax.lax.scan(mamba_body, h, glp)
+        h, _, (k, v) = _attn_layer_full(shared, cfg, h, positions, mode, window)
+        return h, (hf, cs, k, v)
+
+    x, (hf_g, cs_g, ks, vs) = jax.lax.scan(group_body, x, grouped)
+    hf = hf_g.reshape((-1,) + hf_g.shape[2:])
+    cs = cs_g.reshape((-1,) + cs_g.shape[2:])
+    if rem:
+        x, (hf_r, cs_r) = jax.lax.scan(mamba_body, x, remainder)
+        hf = jnp.concatenate([hf, hf_r], axis=0)
+        cs = jnp.concatenate([cs, cs_r], axis=0)
+    cache["ssm"] = {"state": hf, "conv": cs}
+    cache["attn"] = _store_prefill_kv(cache["attn"], ks, vs, positions, window)
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# decode step (AR serving; `decode_*` dry-run shapes)
+# ---------------------------------------------------------------------------
+
+def decode_step(params: dict, cfg: ModelConfig, token: Array, cache: dict, *,
+                window: int = 0) -> Tuple[Array, dict]:
+    """token [B, 1] -> (logits [B, 1, V], cache). Writes then attends."""
+    x = embed(params["embed"], token)
+    B = x.shape[0]
+
+    if cfg.family == "ssm":
+        new_cache = _ssm_decode(params["layers"], cfg, x, cache)
+        return _head(params, cfg, new_cache.pop("_x")), new_cache
+    if cfg.family == "hybrid":
+        return _hybrid_decode(params, cfg, x, cache, window)
+
+    kv = cache["attn"]
+    T = kv["k"].shape[2]
+    length = kv["length"]
+    q_pos = length[None].astype(jnp.int32)  # absolute position
+    slot = jnp.where(jnp.asarray(T) > length, length, length % T)
+
+    def body(h, xs):
+        lp, ck, cv = xs
+        hn = rms_norm(h, lp["ln1"], cfg.norm_eps)
+        q, k, v = _qkv(lp, cfg, hn, q_pos)
+        ck, cv = cache_lib.kv_write_slice(ck, cv, k, v, slot)
+        kv_pos = cache_lib.pos_write_slice(kv["pos"], q_pos, slot)
+        kv_valid = kv_pos >= 0
+        if window:
+            kv_valid = kv_valid & (q_pos[-1] - kv_pos < window)
+        attn = attention(q, ck, cv, q_pos=q_pos,
+                         kv_pos=jnp.maximum(kv_pos, 0),
+                         mode="full", kv_valid=kv_valid)
+        h = h + jnp.einsum("bsd,dm->bsm",
+                           attn.reshape(B, 1, -1).astype(h.dtype), lp["wo"])
+        h, _ = _mlp_part(lp, cfg, h)
+        return shard_ctx.act_bsd(h), (ck, cv)
+
+    x, (ck_new, cv_new) = jax.lax.scan(body, x, (params["layers"],
+                                                 kv["k"], kv["v"]))
+    kv = dict(kv, k=ck_new, v=cv_new,
+              pos=cache_lib.pos_write_slice(kv["pos"], q_pos, slot),
+              length=length + 1)
+    return _head(params, cfg, x), dict(cache, attn=kv)
+
+
+def _ssm_decode(layers: dict, cfg: ModelConfig, x: Array, cache: dict) -> dict:
+    ssm = cache["ssm"]
+
+    def body(h, xs):
+        lp, state, conv = xs
+        y, state, conv = mamba2_step(lp["ssm"], cfg,
+                                     rms_norm(h, lp["ln"], cfg.norm_eps)[:, 0],
+                                     state, conv)
+        return h + y[:, None], (state, conv)
+
+    x, (states, convs) = jax.lax.scan(body, x, (layers, ssm["state"],
+                                                ssm["conv"]))
+    return {"ssm": {"state": states, "conv": convs}, "_x": x}
+
+
+def _hybrid_decode(params: dict, cfg: ModelConfig, x: Array, cache: dict,
+                   window: int) -> Tuple[Array, dict]:
+    every = cfg.attn_every
+    n_sites = cfg.num_layers // every
+    rem = cfg.num_layers % every
+    layers = params["layers"]
+    shared = params["shared_attn"]
+    ssm, kv = cache["ssm"], cache["attn"]
+    B = x.shape[0]
+    T = kv["k"].shape[2]
+    length = kv["length"]
+    q_pos = length[None].astype(jnp.int32)
+    slot = jnp.where(jnp.asarray(T) > length, length, length % T)
+    new_pos = cache_lib.pos_write_slice(kv["pos"], q_pos, slot)
+
+    def take(tree, lo, hi):
+        return jax.tree.map(lambda a: a[lo:hi], tree)
+
+    def mamba_body(h, xs):
+        lp, state, conv = xs
+        y, state, conv = mamba2_step(lp["ssm"], cfg,
+                                     rms_norm(h, lp["ln"], cfg.norm_eps)[:, 0],
+                                     state, conv)
+        return h + y[:, None], (state, conv)
+
+    states_out, convs_out, ks_out, vs_out = [], [], [], []
+    for site in range(n_sites):
+        lo, hi = site * every, (site + 1) * every
+        x, (st, cv_state) = jax.lax.scan(
+            mamba_body, x, (take(layers, lo, hi),
+                            ssm["state"][lo:hi], ssm["conv"][lo:hi]))
+        states_out.append(st)
+        convs_out.append(cv_state)
+        # shared attention at this site
+        hn = rms_norm(x, shared["ln1"], cfg.norm_eps)
+        q, k, v = _qkv(shared, cfg, hn, q_pos)
+        ck, cv = cache_lib.kv_write_slice(kv["k"][site], kv["v"][site],
+                                          k, v, slot)
+        ks_out.append(ck)
+        vs_out.append(cv)
+        kv_valid = new_pos >= 0
+        if window:
+            kv_valid = kv_valid & (q_pos[-1] - new_pos < window)
+        attn = attention(q, ck, cv, q_pos=q_pos,
+                         kv_pos=jnp.maximum(new_pos, 0),
+                         mode="full", kv_valid=kv_valid)
+        x = x + jnp.einsum("bsd,dm->bsm",
+                           attn.reshape(B, 1, -1).astype(x.dtype),
+                           shared["wo"])
+        x, _ = _mlp_part(shared, cfg, x)
+    if rem:
+        lo = n_sites * every
+        x, (st, cv_state) = jax.lax.scan(
+            mamba_body, x, (take(layers, lo, cfg.num_layers),
+                            ssm["state"][lo:], ssm["conv"][lo:]))
+        states_out.append(st)
+        convs_out.append(cv_state)
+
+    new_cache = {
+        "ssm": {"state": jnp.concatenate(states_out, 0),
+                "conv": jnp.concatenate(convs_out, 0)},
+        "attn": dict(kv, k=jnp.stack(ks_out), v=jnp.stack(vs_out),
+                     pos=new_pos, length=length + 1),
+    }
+    return _head(params, cfg, x), new_cache
+
+
+# ---------------------------------------------------------------------------
+# diffusion block step (the paper's step)
+# ---------------------------------------------------------------------------
+
+def block_step(params: dict, cfg: ModelConfig, block_tokens: Array,
+               block_start: Array, cache: dict, *, write: bool = False,
+               advance: bool = True, exclude_start: Optional[Array] = None,
+               exclude_len: int = 0, write_slot: Optional[Array] = None,
+               window: int = 0) -> Tuple[Array, dict]:
+    """One denoising forward of the active block against the cache.
+
+    block_tokens [B, bs] (masked positions hold cfg.mask_token_id);
+    block_start: [] int32 absolute position of the block's first token.
+    Bidirectional within the block; the context is whatever the cache holds.
+
+    ``write=True`` commits this forward's K/V into the cache at slot
+    ``length`` (Fast-dLLM prefix-cache semantics); ``advance=False`` keeps
+    ``length`` unchanged so the same region can be re-written — the
+    dual-cache refresh (suffix K/V recomputed per block).
+    ``exclude_start/len`` masks a cache position range from attention —
+    dual-cache block steps exclude their own (stale) slots, attending
+    [prefix cache ∥ fresh block ∥ suffix cache] exactly.
+    """
+    assert cfg.supports_mdlm, f"{cfg.name} is causal-only (DESIGN.md)"
+    x = embed(params["embed"], block_tokens)
+    B, bs, _ = x.shape
+    kv = cache["attn"]
+    q_pos = block_start + jnp.arange(bs, dtype=jnp.int32)
+    slot = kv["length"] if write_slot is None else         jnp.asarray(write_slot, jnp.int32)
+
+    def body(h, xs):
+        lp, ck, cv = xs
+        hn = rms_norm(h, lp["ln1"], cfg.norm_eps)
+        q, k, v = _qkv(lp, cfg, hn, q_pos)
+        ck2, cv2 = cache_lib.kv_write_slice(ck, cv, k, v, slot)
+        kv_pos = cache_lib.pos_write_slice(kv["pos"], q_pos, slot)
+        kv_valid = kv_pos >= 0
+        if exclude_start is not None:
+            # drop the stale copies of the active block held in the cache
+            slot_ids = jnp.arange(kv_pos.shape[0], dtype=jnp.int32)
+            stale = (slot_ids >= exclude_start) &                 (slot_ids < exclude_start + exclude_len)
+            kv_valid = kv_valid & ~stale
+        if window:
+            kv_valid = kv_valid & (q_pos[-1] - kv_pos < window)
+        attn = attention(q, ck2, cv2, q_pos=q_pos,
+                         kv_pos=jnp.maximum(kv_pos, 0),
+                         mode="full", kv_valid=kv_valid)
+        h = h + jnp.einsum("bsd,dm->bsm",
+                           attn.reshape(B, bs, -1).astype(h.dtype), lp["wo"])
+        h, _ = _mlp_part(lp, cfg, h)
+        return shard_ctx.act_bsd(h), (ck2, cv2)
+
+    x, (ck_new, cv_new) = jax.lax.scan(body, x, (params["layers"],
+                                                 kv["k"], kv["v"]))
+    logits = _head(params, cfg, x)
+    if write:
+        kv = dict(kv, k=ck_new, v=cv_new,
+                  pos=cache_lib.pos_write_slice(kv["pos"], q_pos, slot),
+                  length=kv["length"] + bs if advance else kv["length"])
+        cache = dict(cache, attn=kv)
+    return logits, cache

@@ -1,0 +1,145 @@
+"""Mixture-of-Experts MLP with grouped-capacity einsum dispatch.
+
+Token-choice top-k routing with a per-group capacity (Switch-style dropping).
+Tokens are processed in groups of ``group_size``; each group contributes at
+most ``C_g = ceil(group_size * k * capacity_factor / E)`` slots per expert,
+which keeps the dispatch tensor at ``B*S*k*E*C_g/g`` elements — small enough
+for XLA while remaining a pure einsum formulation that GSPMD can shard over
+the expert (model) axis, generating the all-to-all automatically.
+
+Router runs in float32. Returns (output, aux) where aux carries the
+load-balancing loss (Switch: E * sum_e f_e * P_e) and router entropy.
+"""
+from __future__ import annotations
+
+import math
+import os
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+from repro.sharding import ctx as shard_ctx
+
+Array = jax.Array
+
+
+def init_moe(rng, d_model: int, d_ff: int, num_experts: int, dtype) -> dict:
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    e = num_experts
+    return {
+        "router": dense_init(k1, d_model, e, jnp.float32),
+        "wi_gate": (jax.random.normal(k2, (e, d_model, d_ff), jnp.float32)
+                    / math.sqrt(d_model)).astype(dtype),
+        "wi_up": (jax.random.normal(k3, (e, d_model, d_ff), jnp.float32)
+                  / math.sqrt(d_model)).astype(dtype),
+        "wo": (jax.random.normal(k4, (e, d_ff, d_model), jnp.float32)
+               / math.sqrt(d_ff)).astype(dtype),
+    }
+
+
+def _group_size(seq: int) -> int:
+    # 128 beats 256: expert_in/partial tensors scale with E*C_g and
+    # C_g = ceil(g*k*cf/E) — smaller groups cut the dispatch working set
+    # and its collectives ~2x at equal drop behaviour (§Perf iteration 4)
+    for g in (128, 64, 32, 16, 8, 4, 2, 1):
+        if seq % g == 0:
+            return min(g, seq)
+    return 1
+
+
+MOE_IMPL = os.environ.get("REPRO_MOE_IMPL", "einsum")  # einsum | scatter
+
+
+def moe_mlp(params: dict, x: Array, *, num_experts: int, top_k: int,
+            capacity_factor: float = 1.25,
+            impl: str = "") -> Tuple[Array, dict]:
+    """x: [B, S, M] -> ([B, S, M], aux).
+
+    ``impl="einsum"`` — one-hot dispatch/combine einsums (baseline; simple,
+    but XLA materialises an [BG,E,Tg,M] partial product: heavy collectives).
+    ``impl="scatter"`` — segment-sum dispatch + gather combine: only the
+    routed token activations move (§Perf winner for MoE prefill).
+    """
+    B, S, M = x.shape
+    E, K = num_experts, top_k
+    g = _group_size(S)
+    G = S // g
+    Tg = g * K  # routed rows per group
+    C = max(1, math.ceil(g * K * capacity_factor / E))
+
+    # ---- routing (float32) ----
+    logits = jnp.einsum("bsm,me->bse", x.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)  # [B,S,K]
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # load-balancing aux (Switch)
+    density = jnp.mean(
+        jax.nn.one_hot(gate_idx[..., 0], E, dtype=jnp.float32), axis=(0, 1))
+    mean_probs = jnp.mean(probs, axis=(0, 1))
+    aux_loss = E * jnp.sum(density * mean_probs)
+
+    # ---- grouped dispatch ----
+    # dispatch/combine tensors are built DIRECTLY in the compute dtype:
+    # one-hots are exact in bf16 and the f32 variants doubled every MoE
+    # collective (measured; EXPERIMENTS.md §Perf)
+    idx = gate_idx.reshape(B, G, Tg)          # expert id per routed row
+    w = gate_vals.reshape(B, G, Tg)
+    onehot_f = jax.nn.one_hot(idx, E, dtype=jnp.float32)     # [B,G,Tg,E]
+    pos = jnp.cumsum(onehot_f, axis=2) - onehot_f            # slot in expert
+    pos = jnp.sum(pos * onehot_f, axis=-1)                   # [B,G,Tg]
+    keep = pos < C
+    onehot = onehot_f.astype(x.dtype)
+    cap_oh = jax.nn.one_hot(pos.astype(jnp.int32), C, dtype=x.dtype)
+    disp = onehot[..., None] * cap_oh[..., None, :]          # [B,G,Tg,E,C]
+    disp = disp * keep[..., None, None].astype(x.dtype)
+    combine = disp * w[..., None, None].astype(x.dtype)
+
+    xg = x.reshape(B, G, g, M)
+    x_rep = jnp.repeat(xg, K, axis=2)  # [B,G,Tg,M] rows aligned with idx
+
+    impl = impl or MOE_IMPL
+    if impl == "scatter":
+        # slot id e*C+c per routed row; dropped rows -> overflow slot E*C
+        slots = jnp.where(keep, idx * C + pos.astype(jnp.int32), E * C)
+        slots = slots.astype(jnp.int32)
+
+        def disp_one(xb, sb):  # [Tg, M], [Tg] -> [E*C+1, M]
+            return jax.ops.segment_sum(xb, sb, num_segments=E * C + 1)
+
+        buf = jax.vmap(jax.vmap(disp_one))(x_rep, slots)       # [B,G,EC+1,M]
+        expert_in = buf[:, :, :E * C].reshape(B, G, E, C, M)
+        expert_in = jnp.moveaxis(expert_in, 2, 1)              # [B,E,G,C,M]
+        expert_in = shard_ctx.moe_expert(expert_in)
+    else:
+        disp = shard_ctx.moe_dispatch(disp)
+        x_rep = shard_ctx.moe_tokens(x_rep)
+        expert_in = jnp.einsum("bgtm,bgtec->begcm", x_rep, disp)
+        expert_in = shard_ctx.moe_expert(expert_in)
+
+    gate = jnp.einsum("begcm,emf->begcf", expert_in, params["wi_gate"])
+    up = jnp.einsum("begcm,emf->begcf", expert_in, params["wi_up"])
+    h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    expert_out = jnp.einsum("begcf,efm->begcm", h, params["wo"])
+    expert_out = shard_ctx.moe_expert(expert_out)
+
+    if impl == "scatter":
+        out_ec = jnp.moveaxis(expert_out, 1, 2).reshape(B, G, E * C, M)
+        out_ec = jnp.pad(out_ec, ((0, 0), (0, 0), (0, 1), (0, 0)))  # overflow
+        y_rep = jnp.take_along_axis(out_ec, slots[..., None], axis=2)
+        y_rep = y_rep * w[..., None].astype(x.dtype)
+        y = jnp.sum(y_rep.reshape(B, G, g, K, M), axis=3).reshape(B, S, M)
+    else:
+        combine = shard_ctx.moe_dispatch(combine)
+        y_rep = jnp.einsum("begcm,bgtec->bgtm", expert_out, combine)
+        y = jnp.sum(y_rep.reshape(B, G, g, K, M), axis=3).reshape(B, S, M)
+
+    aux = {
+        "aux_loss": aux_loss,
+        "router_entropy": -jnp.mean(jnp.sum(probs * jnp.log(probs + 1e-9), -1)),
+        "dropped_frac": 1.0 - jnp.mean(keep.astype(jnp.float32)),
+    }
+    return y, aux

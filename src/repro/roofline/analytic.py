@@ -1,0 +1,201 @@
+"""First-order analytic FLOPs / HBM-bytes / footprint model per device.
+
+Why this exists: XLA:CPU's ``cost_analysis``/``memory_analysis`` count
+while-loop bodies ONCE (our models scan over layers, so they undercount by
+~num_layers) and report garbage ``temp_size``. The dry-run records the raw
+HLO numbers, but the roofline terms in EXPERIMENTS.md are driven by this
+analytic model + the trip-count-corrected collective parse
+(``analysis.collective_bytes_corrected``). The model counts exactly what
+the implementation does (e.g. our flash attention computes masked pairs, so
+causal attention costs S not S/2; MoE costs include the k-fold dispatch).
+
+All outputs are per device, using the sharding rules' divisibility logic.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.config.base import ModelConfig, ShapeConfig
+from repro.models.frontend import frontend_len
+
+
+@dataclass
+class MeshInfo:
+    batch_shards: int   # pod * data
+    tp: int             # model axis size
+
+    @classmethod
+    def from_mesh(cls, mesh) -> "MeshInfo":
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        return cls(batch_shards=sizes.get("pod", 1) * sizes.get("data", 1),
+                   tp=sizes.get("model", 1))
+
+    @property
+    def chips(self) -> int:
+        return self.batch_shards * self.tp
+
+
+def _div(n: int, k: int) -> int:
+    return k if n % k == 0 else 1
+
+
+def _bytes(cfg: ModelConfig) -> int:
+    return 2 if cfg.dtype == "bfloat16" else 4
+
+
+def flops_per_device(cfg: ModelConfig, shape: ShapeConfig, kind: str,
+                     mesh_info: MeshInfo, *, window: int = 0,
+                     block_size: int = 32) -> float:
+    """Forward (+backward for train) matmul FLOPs, per device."""
+    mi = mesh_info
+    B = shape.global_batch
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    H, K = cfg.num_heads, cfg.num_kv_heads
+    V, F, L = cfg.vocab_size, cfg.d_ff, cfg.num_layers
+
+    if kind == "train":
+        S_tok, ctx, n_pos = shape.seq_len, shape.seq_len, shape.seq_len
+    elif kind == "prefill":
+        S_tok, ctx, n_pos = shape.seq_len, shape.seq_len, shape.seq_len
+    elif kind == "block":
+        S_tok, ctx, n_pos = block_size, shape.seq_len, block_size
+    else:  # decode
+        S_tok = 1
+        ctx = min(shape.seq_len, window) if window else shape.seq_len
+        n_pos = 1
+
+    tokens = B * S_tok  # positions processed this step
+    dp = _div(B, mi.batch_shards)  # batch shards actually usable
+
+    def shard(total: float, out_dim: int) -> float:
+        return total / (dp * _div(out_dim, mi.tp))
+
+    fl = 0.0
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        q = 2 * tokens * d * H * hd
+        kv = 2 * tokens * d * 2 * K * hd
+        o = 2 * tokens * H * hd * d
+        attn_mm = 2 * 2 * tokens * ctx * H * hd  # scores + AV, masked incl.
+        fl += L * (shard(q + o, H * hd) + shard(kv, K * hd) +
+                   shard(attn_mm, H))
+        if cfg.is_moe:
+            mlp = 2 * 3 * tokens * cfg.experts_per_token * d * F
+            router = 2 * tokens * d * cfg.num_experts
+            fl += L * (mlp / (dp * _div(cfg.num_experts, mi.tp)) +
+                       router / dp)
+        else:
+            fl += L * shard(2 * 3 * tokens * d * F, F)
+    else:  # ssm / hybrid
+        di, X, N, Pd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+        c = min(64, S_tok)
+        in_p = 2 * tokens * d * (2 * di + 2 * X + N)
+        out_p = 2 * tokens * di * d
+        ssd = tokens * (2 * c * X + 2 * c * N * Pd + 4 * N * Pd * X)
+        conv = 2 * tokens * cfg.conv_width * (di + 2 * X)
+        per_layer = shard(in_p + out_p, di) + (ssd + conv) / dp
+        fl += L * per_layer
+        if cfg.family == "hybrid":
+            n_sites = L // cfg.attn_every
+            q = 2 * tokens * d * H * hd
+            kv = 2 * tokens * d * 2 * K * hd
+            o = 2 * tokens * H * hd * d
+            attn_mm = 2 * 2 * tokens * ctx * H * hd
+            mlp = 2 * 3 * tokens * d * F
+            fl += n_sites * (shard(q + o + mlp, F) + shard(kv, K * hd) +
+                             shard(attn_mm, H))
+
+    # unembed head: train = every position; prefill = last position only
+    head_tokens = tokens if kind in ("train", "block") else (
+        B if kind == "prefill" else B)
+    fl += 2 * head_tokens * d * V / (dp * _div(V, mi.tp))
+
+    if kind == "train":
+        fl *= 3.0  # fwd + bwd(2x)
+        fl += 20.0 * cfg.param_count() / mi.chips  # optimizer update
+    return fl
+
+
+def hbm_bytes_per_device(cfg: ModelConfig, shape: ShapeConfig, kind: str,
+                         mesh_info: MeshInfo, *, window: int = 0,
+                         block_size: int = 32) -> float:
+    """First-order HBM traffic per device per step."""
+    mi = mesh_info
+    by = _bytes(cfg)
+    B = shape.global_batch
+    d, L = cfg.d_model, cfg.num_layers
+    dp = _div(B, mi.batch_shards)
+    if kind == "decode":
+        S_tok = 1
+        ctx = min(shape.seq_len, window) if window else shape.seq_len
+    elif kind == "block":
+        S_tok, ctx = block_size, shape.seq_len
+    else:
+        S_tok = shape.seq_len - 0
+        ctx = shape.seq_len
+    tokens_loc = B * S_tok / dp
+
+    # weights: model-parallel part stays sharded; FSDP part is all-gathered
+    # into HBM and read in full each step.
+    w_read = cfg.param_count() * by / mi.tp
+    if cfg.is_moe:
+        # only routed experts' weights are *used*, but dense-dispatch reads
+        # all resident experts once
+        pass
+
+    act_io = 12.0 * L * tokens_loc * d * by  # residual/norm/proj io
+    kv_cache_io = 0.0
+    if cfg.has_attention:
+        kd = cfg.num_kv_heads * cfg.resolved_head_dim
+        kv_shard = _div(cfg.num_kv_heads, mi.tp)
+        if kv_shard == 1:
+            kv_shard = _div(cfg.resolved_head_dim, mi.tp)
+        n_kv_layers = L if cfg.family != "hybrid" else L // max(cfg.attn_every, 1)
+        if kind in ("decode", "block"):
+            # read the whole cache once per step
+            kv_cache_io = n_kv_layers * (B / dp) * ctx * 2 * kd * by / kv_shard
+        else:
+            # flash re-reads K,V once per q-chunk (q_chunk=512)
+            nq = max(S_tok // 512, 1)
+            kv_cache_io = n_kv_layers * (B / dp) * ctx * 2 * kd * by * nq \
+                / _div(cfg.num_heads, mi.tp)
+    total = w_read + act_io + kv_cache_io
+    if kind == "train":
+        total = 3.0 * (act_io + kv_cache_io) + w_read * 2  # bwd reads + grads
+        total += 20.0 * cfg.param_count() / mi.chips  # adam m/v io (f32)
+    return total
+
+
+def footprint_bytes_per_device(args_bytes: float, cfg: ModelConfig,
+                               shape: ShapeConfig, kind: str,
+                               mesh_info: MeshInfo,
+                               remat_group: int = 1) -> float:
+    """Static args + an activation working-set estimate (the 'fits' proof)."""
+    mi = mesh_info
+    by = _bytes(cfg)
+    B = shape.global_batch
+    dp = _div(B, mi.batch_shards)
+    S = shape.seq_len if kind in ("train", "prefill") else 32
+    act = 0.0
+    if kind == "train":
+        # remat + sequence-parallel training: only layer-boundary residuals
+        # are saved, sharded [B/dp, S/tp, d]; plus one layer's recompute
+        # working set (~6 full-seq tensors) and the FSDP gather buffers.
+        sp = _div(S, mi.tp)
+        g = max(remat_group, 1)
+        act = 2.0 * (cfg.num_layers / g) * (B / dp) * (S / sp) * \
+            cfg.d_model * by
+        # one checkpoint group in flight during backward (inner-scan saves)
+        act += 6.0 * g * (B / dp) * S * cfg.d_model * by
+        if cfg.is_moe:
+            act += 3.0 * (B / dp) * S * cfg.experts_per_token * \
+                cfg.d_model * by / _div(cfg.num_experts, mi.tp)
+        # largest gathered weight (FSDP all-gather buffer, double-buffered)
+        per_layer_w = (cfg.param_count() - 2 * cfg.vocab_size * cfg.d_model) \
+            / max(cfg.num_layers, 1)
+        act += 2.0 * per_layer_w * by / mi.tp
+        # logits + cotangent for the loss (f32, vocab sharded when divisible)
+        act += 2.0 * (B / dp) * S * \
+            (cfg.vocab_size / _div(cfg.vocab_size, mi.tp)) * 4
+    elif kind == "prefill":
+        act = 8.0 * (B / dp) * S * cfg.d_model * by
+    return args_bytes + act

@@ -1,0 +1,52 @@
+"""Append the generated §Tables section to EXPERIMENTS.md from the dry-run
+JSONs (idempotent: replaces everything after the marker).
+
+  PYTHONPATH=src python -m repro.roofline.finalize
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.roofline.report import (ROOT, dryrun_table, load, roofline_table)
+
+MARKER = "\n---\n\n## §Tables (generated"
+
+
+def main() -> None:
+    exp = ROOT / "EXPERIMENTS.md"
+    text = exp.read_text()
+    if MARKER in text:
+        text = text[: text.index(MARKER)]
+
+    parts = [text, MARKER + " by `python -m repro.roofline.finalize`)\n"]
+    for mesh in ("16x16", "2x16x16"):
+        recs = load(mesh)
+        parts.append("\n#### Dry-run — " + mesh + "\n")
+        parts.append(dryrun_table(recs, mesh).split("\n", 2)[2])
+        parts.append("")
+    recs = load("16x16")
+    parts.append("\n#### Roofline terms (single pod, per step)\n")
+    parts.append(roofline_table(recs, "16x16").split("\n", 2)[2])
+
+    # the paper's block-step rows (all MDLM archs with a block dry-run)
+    parts.append("\n#### Paper's diffusion block_step (32k prefix cache)\n")
+    parts.append("| arch | mesh | compute | memory | collective | "
+                 "footprint GiB |")
+    parts.append("|---|---|---|---|---|---|")
+    for f in sorted((ROOT / "experiments" / "dryrun").glob(
+            "*__decode_32k__*__block.json")):
+        r = json.loads(f.read_text())
+        t = r["roofline"]
+        tag = "x".join(map(str, r["mesh"]))
+        parts.append(
+            f"| {r['arch']} | {tag} | {t['compute_s']*1e3:.2f}ms | "
+            f"{t['memory_s']*1e3:.2f}ms | {t['collective_s']*1e3:.2f}ms |"
+            f" {r['memory']['footprint_bytes_per_dev']/2**30:.2f} |")
+
+    exp.write_text("\n".join(parts) + "\n")
+    print(f"wrote §Tables into {exp}")
+
+
+if __name__ == "__main__":
+    main()

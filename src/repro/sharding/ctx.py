@@ -1,0 +1,218 @@
+"""Activation sharding-constraint context.
+
+Model code is mesh-agnostic; launchers activate a constraint policy around
+tracing and the model calls ``act_bsd`` / ``logits_bsv`` at a few anchor
+points (post-embed, scan-body boundaries, head input). Without an active
+policy these are identity — tests and single-host runs are unaffected.
+
+Why: GSPMD left to itself can pick feature-dim sharding for activations
+(observed: batch-replicated f32[256,4096,3072] all-reduces). Anchoring
+activations to batch sharding at layer boundaries keeps propagation sane —
+the standard MaxText-style fix.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@jax.custom_vjp
+def _grad_cast_bf16(x):
+    """Identity forward; cotangent cast to bf16 (§Perf H2: keeps the whole
+    backward residual stream — and therefore every backward collective and
+    weight all-gather — in bf16 instead of f32 hoisted from the loss)."""
+    return x
+
+
+def _gc_fwd(x):
+    return x, None
+
+
+def _gc_bwd(_, ct):
+    return (ct.astype(jnp.bfloat16).astype(ct.dtype)
+            if ct.dtype == jnp.float32 else ct,)
+
+
+def _gc_bwd_real(_, ct):
+    return (ct.astype(jnp.bfloat16),) if ct.dtype == jnp.float32 else (ct,)
+
+
+_grad_cast_bf16.defvjp(_gc_fwd, _gc_bwd_real)
+
+_STATE = threading.local()
+
+
+def _current() -> Optional[dict]:
+    return getattr(_STATE, "policy", None)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, *, model_axis: str = "model",
+                        seq_shard: bool = True,
+                        anchor_layer_params: bool = False,
+                        bf16_grads: bool = False,
+                        strategy: str = "tp"):
+    """``seq_shard``: Megatron-style sequence parallelism — layer-boundary
+    activations are additionally sharded over the model axis on the sequence
+    dim (when divisible). GSPMD then materialises the TP boundary as
+    reduce-scatter + all-gather instead of all-reduce and, crucially, the
+    residuals saved for the backward pass are 1/tp the size — this is what
+    lets the 67B/110B train_4k configs fit HBM (DESIGN.md §6)."""
+    batch = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    if strategy == "fsdp":
+        batch = batch + ("model",)
+        seq_shard = False  # no TP -> nothing to sequence-shard against
+    prev = _current()
+    _STATE.policy = {"mesh": mesh, "batch": batch, "model": model_axis,
+                     "seq_shard": seq_shard,
+                     "anchor_layer_params": anchor_layer_params,
+                     "bf16_grads": bf16_grads}
+    try:
+        yield
+    finally:
+        _STATE.policy = prev
+
+
+def _constrain(x, spec: P):
+    pol = _current()
+    if pol is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(pol["mesh"], spec))
+
+
+def _batch_axes_for(x, pol) -> Optional[Tuple[str, ...]]:
+    sizes = dict(zip(pol["mesh"].axis_names, pol["mesh"].devices.shape))
+    n = 1
+    for a in pol["batch"]:
+        n *= sizes[a]
+    if x.shape[0] % n == 0:
+        return pol["batch"]
+    if "data" in sizes and x.shape[0] % sizes["data"] == 0:
+        return ("data",)
+    return None
+
+
+def act_bsd(x):
+    """[B, S, D] activations: batch-sharded; sequence over the model axis
+    when sequence-parallelism is on and S divides."""
+    pol = _current()
+    if pol is None:
+        return x
+    if pol.get("bf16_grads") and jnp.issubdtype(x.dtype, jnp.floating):
+        x = _grad_cast_bf16(x)
+    axes = _batch_axes_for(x, pol)
+    seq_ax = None
+    if pol.get("seq_shard") and x.ndim >= 3:
+        sizes = dict(zip(pol["mesh"].axis_names, pol["mesh"].devices.shape))
+        if x.shape[1] % sizes[pol["model"]] == 0 and x.shape[1] > 1:
+            seq_ax = pol["model"]
+    return _constrain(x, P(axes, seq_ax, *([None] * (x.ndim - 2))))
+
+
+def logits_bsv(x):
+    """[..., V] logits: batch-sharded + vocab over model if divisible."""
+    pol = _current()
+    if pol is None:
+        return x
+    sizes = dict(zip(pol["mesh"].axis_names, pol["mesh"].devices.shape))
+    axes = _batch_axes_for(x, pol)
+    v_ax = pol["model"] if x.shape[-1] % sizes[pol["model"]] == 0 else None
+    if axes and pol["model"] in axes:
+        v_ax = None
+    mid = [None] * (x.ndim - 2)
+    return _constrain(x, P(axes, *mid, v_ax))
+
+
+def act_heads(x):
+    """[B, S, H, D] q/k/v tensors: heads over the model axis when divisible
+    (Megatron attention layout), sequence replicated. Anchoring these BEFORE
+    the flash-attention chunk loops hoists the SP all-gather out of the
+    loops (otherwise GSPMD reshards every (q-chunk, kv-chunk) tile)."""
+    pol = _current()
+    if pol is None or x.ndim != 4:
+        return x
+    sizes = dict(zip(pol["mesh"].axis_names, pol["mesh"].devices.shape))
+    axes = _batch_axes_for(x, pol)
+    h_ax = pol["model"] if x.shape[2] % sizes[pol["model"]] == 0 else None
+    if axes and pol["model"] in axes:
+        h_ax = None  # pure-FSDP: model axis already in the batch group
+    return _constrain(x, P(axes, None, h_ax, None))
+
+
+def act_attn_out(x):
+    """[B, S, H*D] attention output entering wo: contraction dim sharded
+    over model -> wo produces partial sums -> reduce-scatter back to the
+    sequence-parallel residual."""
+    pol = _current()
+    if pol is None or x.ndim != 3:
+        return x
+    sizes = dict(zip(pol["mesh"].axis_names, pol["mesh"].devices.shape))
+    axes = _batch_axes_for(x, pol)
+    f_ax = pol["model"] if x.shape[2] % sizes[pol["model"]] == 0 else None
+    if axes and pol["model"] in axes:
+        f_ax = None
+    return _constrain(x, P(axes, None, f_ax))
+
+
+def layer_params(lp):
+    """Re-anchor one scanned layer's params to their FSDP/TP sharding inside
+    the scan body (enabled by the launcher via ``anchor_layer_params``).
+    Identity unless a policy is active — tests/single-host unaffected."""
+    pol = _current()
+    if pol is None or not pol.get("anchor_layer_params"):
+        return lp
+    from repro.sharding import rules
+    specs = rules.layer_param_specs(lp, pol["mesh"])
+    flat_lp, treedef = jax.tree_util.tree_flatten(lp)
+    flat_sp = treedef.flatten_up_to(specs)
+    out = [_constrain(x, s) for x, s in zip(flat_lp, flat_sp)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def moe_expert(x):
+    """[B, E, ...] expert-major tensors: experts over the model axis.
+    Anchoring the dispatched tokens here makes the token->expert crossing a
+    single all-to-all instead of AR+gather chains (§Perf, qwen3 prefill)."""
+    pol = _current()
+    if pol is None or x.ndim < 2:
+        return x
+    sizes = dict(zip(pol["mesh"].axis_names, pol["mesh"].devices.shape))
+    axes = _batch_axes_for(x, pol)
+    e_ax = pol["model"] if x.shape[1] % sizes[pol["model"]] == 0 else None
+    if axes and pol["model"] in axes:
+        e_ax = None
+    rest = [None] * (x.ndim - 2)
+    return _constrain(x, P(axes, e_ax, *rest))
+
+
+def moe_dispatch(x):
+    """[B, G, Tg, E, C] dispatch/combine one-hots: experts over the model
+    axis (dim 3). With disp expert-sharded and tokens replicated over the
+    model axis, the dispatch einsum is LOCAL per expert shard — XLA then
+    moves only the [B,G,Tg,M] activations (one gather + one partial-sum
+    reduce per layer) instead of materialising [BG,E,Tg,M] partials."""
+    pol = _current()
+    if pol is None or x.ndim != 5:
+        return x
+    sizes = dict(zip(pol["mesh"].axis_names, pol["mesh"].devices.shape))
+    axes = _batch_axes_for(x, pol)
+    e_ax = pol["model"] if x.shape[3] % sizes[pol["model"]] == 0 else None
+    if axes and pol["model"] in axes:
+        e_ax = None
+    return _constrain(x, P(axes, None, None, e_ax, None))
+
+
+def moe_tokens(x):
+    """[B, G, Tg, M] routed-token activations: replicated over the model
+    axis (so the local dispatch contraction can proceed)."""
+    pol = _current()
+    if pol is None or x.ndim != 4:
+        return x
+    axes = _batch_axes_for(x, pol)
+    return _constrain(x, P(axes, None, None, None))

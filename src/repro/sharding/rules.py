@@ -1,0 +1,211 @@
+"""Sharding rules: logical-axis PartitionSpecs with divisibility fallback.
+
+Strategy (DESIGN.md §6):
+  * weights: FSDP over ``data`` on the d_model (input) dim × tensor/expert
+    parallel over ``model`` on heads / d_ff / experts / vocab — each applied
+    only when the dim is divisible by the mesh axis size, else replicated
+    (e.g. smollm's 9 heads, mamba2's 3352-wide in_proj).
+  * activations/batch: ``(pod, data)``.
+  * KV cache: batch over ``data`` (or T when batch=1), kv-heads over
+    ``model`` when divisible, else head_dim over ``model`` (deepseek kv=8 <
+    16: D=128 shards; the resulting per-layer score all-reduce is the
+    collective-term hillclimb target).
+  * optimizer state: same spec as its parameter.
+
+Only params, step inputs and step outputs are constrained; intermediates are
+left to GSPMD propagation (the §Perf pass adds targeted constraints).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config.base import ModelConfig
+
+# logical dim names per param leaf key; leaves under 'layers' get a leading
+# stacked dim, leaves under 'moe' a leading expert dim (handled below).
+_LOGICAL = {
+    "embed": ("vocab", "embed"),
+    "head": ("embed", "vocab"),
+    "wq": ("embed", "tp_out"),
+    "wk": ("embed", "kv_out"),
+    "wv": ("embed", "kv_out"),
+    "wo": ("tp_out", "embed"),
+    "bq": ("tp_out",),
+    "bk": ("kv_out",),
+    "bv": ("kv_out",),
+    "wi_gate": ("embed", "ff"),
+    "wi_up": ("embed", "ff"),
+    "router": ("embed", "none"),
+    "in_proj": ("embed", "tp_out"),
+    "out_proj": ("tp_out", "embed"),
+    "proj": ("none", "embed"),
+}
+_MOE_LOGICAL = {
+    "wi_gate": ("expert", "embed", "ff"),
+    "wi_up": ("expert", "embed", "ff"),
+    "wo": ("expert", "ff", "embed"),
+    "router": ("embed", "none"),
+}
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+
+
+def _fsdp_group(mesh: Mesh, strategy: str):
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    if strategy == "fsdp":
+        axes.append("model")  # ZeRO-3: the whole mesh is one FSDP group
+    return tuple(axes)
+
+
+def _map_axis(logical: str, size: int, mesh: Mesh,
+              fsdp_axis: str = "data", model_axis: str = "model",
+              strategy: str = "tp"):
+    if logical in ("vocab", "tp_out", "kv_out", "ff", "expert", "ssm"):
+        if strategy == "fsdp":
+            return None  # no tensor parallelism: weights gathered at use
+        return model_axis if size % _axis_size(mesh, model_axis) == 0 \
+            else None
+    if logical == "embed":
+        if strategy == "serve":
+            # serving: weights resident (TP-sharded only) — FSDP here would
+            # re-gather every weight on every decode step (§Perf, llada
+            # block step: 4 GiB/step of f32 weight gathers)
+            return None
+        # FSDP group: (pod, data) for TP strategy (multi-pod: a 778B llama4
+        # + AdamW state only fits with the pod axis in the group); the FULL
+        # mesh for the pure-FSDP/ZeRO-3 strategy (§Perf).
+        group = _fsdp_group(mesh, strategy)
+        while group:
+            n = int(np.prod([_axis_size(mesh, a) for a in group]))
+            if size % n == 0:
+                return group if len(group) > 1 else group[0]
+            group = group[1:]
+        return None
+    return None
+
+
+def param_specs(cfg: ModelConfig, params_shape: Any, mesh: Mesh,
+                strategy: str = "tp"):
+    """PartitionSpec pytree matching ``params_shape`` (an eval_shape tree)."""
+
+    def leaf_spec(path, leaf) -> P:
+        keys = [str(getattr(p, "key", "")) for p in path]
+        name = keys[-1]
+        stacked = "layers" in keys
+        in_moe = "moe" in keys
+        logical = _MOE_LOGICAL.get(name) if in_moe else _LOGICAL.get(name)
+        if logical is None:
+            # norms, biases w/o rule, conv, ssm scalars -> replicate
+            # (respecting the stacked layer dim)
+            return P()
+        dims = list(logical)
+        if stacked:
+            dims = ["stack"] + dims
+        assert len(dims) == len(leaf.shape), (keys, leaf.shape, dims)
+        spec = []
+        used = set()  # a mesh axis may appear at most once per spec
+        for logical_dim, size in zip(dims, leaf.shape):
+            if logical_dim in ("none", "stack"):
+                spec.append(None)
+                continue
+            ax = _map_axis(logical_dim, size, mesh, strategy=strategy)
+            parts = ax if isinstance(ax, tuple) else (ax,)
+            if any(a in used for a in parts if a):
+                ax = None
+            else:
+                used.update(a for a in parts if a)
+            spec.append(ax)
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params_shape)
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def data_spec(shape: Tuple[int, ...], mesh: Mesh,
+              strategy: str = "tp") -> P:
+    """[B, ...] arrays: batch over (pod, data) — or the whole mesh for the
+    pure-FSDP strategy."""
+    axes = batch_axes(mesh) + (("model",) if strategy == "fsdp" else ())
+    n = int(np.prod([_axis_size(mesh, a) for a in axes]))
+    if shape and shape[0] % n == 0:
+        return P(axes)
+    # try data only
+    if shape and shape[0] % _axis_size(mesh, "data") == 0:
+        return P("data")
+    return P()
+
+
+def cache_specs(cfg: ModelConfig, cache_shape: Any, mesh: Mesh):
+    """Specs for the decode cache pytree (shapes from eval_shape)."""
+    d_model_ax = _axis_size(mesh, "model")
+    d_data_ax = _axis_size(mesh, "data")
+
+    def leaf_spec(path, leaf) -> P:
+        keys = [str(getattr(p, "key", "")) for p in path]
+        name = keys[-1]
+        if name in ("k", "v"):
+            L, B, T, K, D = leaf.shape
+            b_ax = "data" if B % d_data_ax == 0 else None
+            t_ax = "data" if (b_ax is None and T % d_data_ax == 0) else None
+            k_ax = "model" if K % d_model_ax == 0 else None
+            d_ax = "model" if (k_ax is None and D % d_model_ax == 0) else None
+            return P(None, b_ax, t_ax, k_ax, d_ax)
+        if name == "state":  # [L,B,N,Pd,X]
+            L, B, N, Pd, X = leaf.shape
+            b_ax = "data" if B % d_data_ax == 0 else None
+            n_ax = "model" if N % d_model_ax == 0 else None
+            return P(None, b_ax, n_ax, None, None)
+        if name == "conv":  # [L,B,w-1,C]
+            L, B, W, C = leaf.shape
+            b_ax = "data" if B % d_data_ax == 0 else None
+            c_ax = "model" if C % d_model_ax == 0 else None
+            return P(None, b_ax, None, c_ax)
+        return P()  # pos, length
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache_shape)
+
+
+def to_named(tree_specs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def layer_param_specs(lp_tree, mesh: Mesh):
+    """Specs for ONE layer's param slice (no leading stack dim) — used to
+    re-anchor the scanned layer params inside the scan body. The transpose
+    of with_sharding_constraint is the same constraint, so anchoring here
+    forces per-layer weight GRADIENTS to be reduce-scattered to the FSDP
+    shard instead of all-reduced in full (the §Perf H1 lever)."""
+
+    def leaf_spec(path, leaf) -> P:
+        keys = [str(getattr(p, "key", "")) for p in path]
+        name = keys[-1]
+        in_moe = "moe" in keys
+        logical = _MOE_LOGICAL.get(name) if in_moe else _LOGICAL.get(name)
+        if logical is None or len(logical) != len(leaf.shape):
+            return P()
+        spec = []
+        used = set()
+        for logical_dim, size in zip(logical, leaf.shape):
+            if logical_dim == "none":
+                spec.append(None)
+                continue
+            ax = _map_axis(logical_dim, size, mesh)
+            parts = ax if isinstance(ax, tuple) else (ax,)
+            if any(a in used for a in parts if a):
+                ax = None
+            else:
+                used.update(a for a in parts if a)
+            spec.append(ax)
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, lp_tree)

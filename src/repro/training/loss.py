@@ -1,0 +1,96 @@
+"""Training losses: LLaDA-style masked-diffusion and AR cross-entropy.
+
+MDLM loss (LLaDA, eq. 3): sample a mask ratio t ~ U(0,1) per sequence, mask
+each maskable token independently with prob t, predict the masked tokens
+with a bidirectional forward, and weight the CE by 1/t (the discrete
+diffusion ELBO). ``loss_mask`` restricts masking/eval to the response
+region (SFT form: prompts are never masked, matching the decode-time
+conditioning).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.models import model as M
+
+Array = jax.Array
+
+
+def cross_entropy(logits: Array, targets: Array) -> Array:
+    """Per-position CE (float32). logits [..., V], targets [...] int."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return lse - tgt
+
+
+def mdlm_loss(params, cfg: ModelConfig, rng, tokens: Array,
+              loss_mask: Optional[Array] = None, *, mask_id: int,
+              frontend_feats: Optional[Array] = None,
+              t_min: float = 1e-3, remat: bool = False,
+              remat_group: int = 1,
+              loss_weights: Optional[Array] = None) -> Tuple[Array, dict]:
+    """tokens [B, S]; loss_mask [B, S] bool (True = maskable/eval).
+
+    ``loss_weights`` (float [B,S], default 1): per-position CE weights —
+    the SFT pipeline down-weights EOS padding so the few answer tokens
+    dominate the objective instead of the trivial EOS fill."""
+    B, S = tokens.shape
+    if loss_mask is None:
+        loss_mask = jnp.ones((B, S), bool)
+    k_t, k_m = jax.random.split(rng)
+    t = jax.random.uniform(k_t, (B, 1), minval=t_min, maxval=1.0)
+    noise = jax.random.uniform(k_m, (B, S))
+    masked = (noise < t) & loss_mask
+    # guarantee at least one masked position per sequence (degenerate draws)
+    any_masked = jnp.any(masked, axis=1, keepdims=True)
+    first_maskable = jnp.argmax(loss_mask, axis=1)
+    force = jax.nn.one_hot(first_maskable, S, dtype=bool) & ~any_masked
+    masked = masked | (force & loss_mask)
+
+    noised = jnp.where(masked, mask_id, tokens)
+    logits, aux = M.forward(params, cfg, noised, mode="full",
+                            frontend_feats=frontend_feats, remat=remat,
+                            remat_group=remat_group)
+    # frontend archs prepend embeddings: align logits to the token region
+    if logits.shape[1] != S:
+        logits = logits[:, logits.shape[1] - S:]
+    ce = cross_entropy(logits, tokens)
+    w = masked.astype(jnp.float32) / t  # 1/t ELBO weight
+    if loss_weights is not None:
+        w = w * loss_weights
+    denom = jnp.sum(masked * (loss_weights if loss_weights is not None
+                              else 1.0))
+    loss = jnp.sum(ce * w) / jnp.maximum(denom, 1)
+    n_masked = jnp.sum(masked)
+    metrics = {
+        "loss": loss,
+        "ce_masked": jnp.sum(ce * masked) / jnp.maximum(n_masked, 1),
+        "mask_frac": n_masked / jnp.maximum(jnp.sum(loss_mask), 1),
+        "aux_loss": aux["aux_loss"],
+    }
+    return loss + 0.01 * aux["aux_loss"], metrics
+
+
+def ar_loss(params, cfg: ModelConfig, tokens: Array,
+            loss_mask: Optional[Array] = None, *,
+            frontend_feats: Optional[Array] = None,
+            remat: bool = False, remat_group: int = 1) -> Tuple[Array, dict]:
+    """Next-token CE for causal families. tokens [B, S]."""
+    B, S = tokens.shape
+    if loss_mask is None:
+        loss_mask = jnp.ones((B, S), bool)
+    logits, aux = M.forward(params, cfg, tokens, mode="causal",
+                            frontend_feats=frontend_feats, remat=remat,
+                            remat_group=remat_group)
+    if logits.shape[1] != S:
+        logits = logits[:, logits.shape[1] - S:]
+    ce = cross_entropy(logits[:, :-1], tokens[:, 1:])
+    w = loss_mask[:, 1:].astype(jnp.float32)
+    loss = jnp.sum(ce * w) / jnp.maximum(jnp.sum(w), 1)
+    metrics = {"loss": loss, "aux_loss": aux["aux_loss"]}
+    return loss + 0.01 * aux["aux_loss"], metrics

@@ -1,0 +1,86 @@
+"""AdamW + schedules in pure JAX (no optax in this container)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.tree import tree_norm, tree_zeros_like
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    clip_norm: float = 1.0
+    # "float32" (default) or "bfloat16" — half-precision moments halve the
+    # optimizer HBM footprint (needed for the 778B llama4 config)
+    state_dtype: str = "float32"
+
+
+def schedule(ocfg: OptConfig, step) -> jax.Array:
+    """Linear warmup -> cosine decay to min_lr_frac."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(ocfg.warmup_steps, 1), 1.0)
+    progress = jnp.clip((step - ocfg.warmup_steps) /
+                        jnp.maximum(ocfg.total_steps - ocfg.warmup_steps, 1),
+                        0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * progress))
+    frac = ocfg.min_lr_frac + (1.0 - ocfg.min_lr_frac) * cos
+    return ocfg.lr * warm * frac
+
+
+def init_opt_state(params, state_dtype: str = "float32") -> dict:
+    dt = jnp.bfloat16 if state_dtype == "bfloat16" else jnp.float32
+    zeros = lambda t: jax.tree.map(lambda x: jnp.zeros(x.shape, dt), t)
+    return {
+        "m": zeros(params),
+        "v": zeros(params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(params, grads, state, ocfg: OptConfig) -> Tuple[dict, dict, dict]:
+    """Returns (new_params, new_state, metrics). Global-norm clipping."""
+    step = state["step"] + 1
+    gnorm = tree_norm(grads)
+    scale = jnp.minimum(1.0, ocfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = schedule(ocfg, step)
+    b1, b2 = ocfg.beta1, ocfg.beta2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    state_dt = jnp.bfloat16 if ocfg.state_dtype == "bfloat16" \
+        else jnp.float32
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g)
+        mhat = m32 / bc1
+        vhat = v32 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + ocfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            delta = delta + ocfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return new_p, m32.astype(state_dt), v32.astype(state_dt)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, {"m": new_m, "v": new_v, "step": step}, metrics

@@ -1,0 +1,17 @@
+import os
+
+# Tests must see the real (single) CPU device — the 512-device override is
+# strictly for the dry-run driver (see repro/launch/dryrun.py).
+assert "xla_force_host_platform_device_count" not in \
+    os.environ.get("XLA_FLAGS", ""), \
+    "do not run tests with the dry-run XLA_FLAGS set"
+
+import jax
+import pytest
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.key(0)

@@ -1,0 +1,69 @@
+import pytest
+
+from repro.config.base import INPUT_SHAPES
+from repro.config.registry import get_config, list_archs
+
+ASSIGNED = {
+    "mamba2-130m": ("ssm", 24, 768),
+    "qwen3-moe-235b-a22b": ("moe", 94, 4096),
+    "deepseek-67b": ("dense", 95, 8192),
+    "qwen1.5-0.5b": ("dense", 24, 1024),
+    "qwen1.5-110b": ("dense", 80, 8192),
+    "zamba2-1.2b": ("hybrid", 38, 2048),
+    "llama4-maverick-400b-a17b": ("moe", 48, 5120),
+    "internvl2-76b": ("vlm", 80, 8192),
+    "smollm-135m": ("dense", 30, 576),
+    "musicgen-large": ("audio", 48, 2048),
+}
+
+
+def test_all_assigned_archs_present():
+    archs = list_archs()
+    for a in ASSIGNED:
+        assert a in archs
+    assert "llada-8b" in archs  # the paper's own model
+
+
+@pytest.mark.parametrize("arch", sorted(ASSIGNED))
+def test_config_matches_assignment(arch):
+    fam, L, d = ASSIGNED[arch]
+    cfg = get_config(arch)
+    assert cfg.family == fam
+    assert cfg.num_layers == L
+    assert cfg.d_model == d
+    assert cfg.citation
+
+
+@pytest.mark.parametrize("arch,lo,hi", [
+    ("deepseek-67b", 60e9, 75e9),
+    ("qwen1.5-110b", 100e9, 120e9),
+    ("qwen3-moe-235b-a22b", 220e9, 250e9),
+    ("mamba2-130m", 0.10e9, 0.16e9),
+    ("smollm-135m", 0.10e9, 0.16e9),
+    ("zamba2-1.2b", 0.9e9, 1.4e9),
+    ("llada-8b", 7e9, 9e9),
+])
+def test_param_counts_match_names(arch, lo, hi):
+    assert lo <= get_config(arch).param_count() <= hi
+
+
+def test_moe_active_params():
+    cfg = get_config("qwen3-moe-235b-a22b")
+    act = cfg.active_param_count()
+    assert 18e9 <= act <= 26e9  # "a22b"
+    assert act < cfg.param_count() / 5
+
+
+@pytest.mark.parametrize("arch", sorted(ASSIGNED))
+def test_reduced_variants_are_small(arch):
+    r = get_config(arch).reduced()
+    assert r.num_layers == 2
+    assert r.d_model <= 512
+    assert r.num_experts <= 4
+    assert r.param_count() < 20e6
+
+
+def test_input_shapes():
+    assert INPUT_SHAPES["train_4k"].kind == "train"
+    assert INPUT_SHAPES["long_500k"].seq_len == 524288
+    assert INPUT_SHAPES["decode_32k"].is_decode

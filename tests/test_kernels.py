@@ -1,0 +1,82 @@
+"""Pallas kernel validation: interpret=True vs the pure-jnp oracles,
+sweeping shapes and dtypes (deliverable c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.confidence import fused_confidence_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.ref import attention_ref, confidence_ref
+
+
+@pytest.mark.parametrize("R,V", [(1, 128), (13, 1000), (32, 4096), (7, 513)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_confidence_kernel_sweep(rng, R, V, dtype):
+    x = (jax.random.normal(rng, (R, V)) * 4).astype(dtype)
+    conf, tok = fused_confidence_pallas(x, vocab_tile=256, interpret=True)
+    conf_ref, tok_ref = confidence_ref(x)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(conf), np.asarray(conf_ref),
+                               rtol=tol, atol=tol)
+    np.testing.assert_array_equal(np.asarray(tok), np.asarray(tok_ref))
+
+
+def test_confidence_kernel_tie_break(rng):
+    """Equal maxima across vocab tiles must pick the FIRST (jnp.argmax)."""
+    x = jnp.zeros((4, 512))
+    x = x.at[:, 100].set(5.0).at[:, 400].set(5.0)
+    _, tok = fused_confidence_pallas(x, vocab_tile=128, interpret=True)
+    assert (np.asarray(tok) == 100).all()
+
+
+def test_confidence_kernel_extreme_logits():
+    x = jnp.asarray([[1e4, -1e4, 0.0, 1e4 - 1.0] + [0.0] * 124])
+    conf, tok = fused_confidence_pallas(x, vocab_tile=64, interpret=True)
+    assert int(tok[0]) == 0
+    assert np.isfinite(float(conf[0]))
+
+
+@pytest.mark.parametrize("B,H,S,T,D,causal", [
+    (1, 2, 64, 64, 32, True),
+    (2, 1, 48, 96, 64, False),
+    (1, 1, 33, 65, 16, False),   # ragged: exercises padding path
+    (1, 2, 128, 128, 64, True),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_kernel_sweep(rng, B, H, S, T, D, causal, dtype):
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (B, H, S, D), dtype)
+    k = jax.random.normal(ks[1], (B, H, T, D), dtype)
+    v = jax.random.normal(ks[2], (B, H, T, D), dtype)
+    off = T - S if causal else 0
+    out = flash_attention_pallas(q, k, v, causal=causal, q_offset=off,
+                                 q_tile=32, kv_tile=32, interpret=True)
+    if causal and S != T:
+        scale = 1.0 / np.sqrt(D)
+        s = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                       k.astype(jnp.float32)) * scale
+        qi = jnp.arange(S)[:, None] + off
+        ki = jnp.arange(T)[None, :]
+        s = jnp.where(ki <= qi, s, -1e30)
+        ref = jnp.einsum("bhst,bhtd->bhsd", jax.nn.softmax(s, -1),
+                         v.astype(jnp.float32))
+    else:
+        ref = attention_ref(q, k, v, causal=causal).astype(jnp.float32)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), rtol=tol,
+                               atol=tol)
+
+
+def test_ops_dispatch_cpu(rng):
+    """On CPU the ops layer must route to the reference implementations."""
+    from repro.kernels import ops
+    x = jax.random.normal(rng, (4, 16, 256))
+    conf, tok = ops.fused_confidence(x)
+    conf_ref, tok_ref = confidence_ref(x.reshape(-1, 256))
+    np.testing.assert_allclose(np.asarray(conf).reshape(-1),
+                               np.asarray(conf_ref), rtol=1e-5)
+    q = jax.random.normal(rng, (1, 2, 16, 8))
+    out = ops.flash_attention(q, q, q, causal=True)
+    assert out.shape == q.shape

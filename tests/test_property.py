@@ -1,0 +1,112 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config.base import DecodeConfig
+from repro.core.calibrate import CalibrationProfile, build_table
+from repro.core.confidence import confidence_ref
+from repro.core.decoder import _unmask_choice
+from repro.data import tokenizer as tok
+from repro.kernels.ref import confidence_ref as kconf
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 8), st.integers(2, 300))
+@settings(**SETTINGS)
+def test_confidence_invariants(seed, rows, vocab):
+    rng = np.random.default_rng(seed)
+    logits = jnp.asarray(rng.normal(size=(rows, vocab)) * 5, jnp.float32)
+    conf, toks = confidence_ref(logits)
+    conf, toks = np.asarray(conf), np.asarray(toks)
+    assert ((conf > 0) & (conf <= 1.0 + 1e-6)).all()
+    assert (toks == np.argmax(np.asarray(logits), -1)).all()
+    # confidence >= uniform probability
+    assert (conf >= 1.0 / vocab - 1e-6).all()
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_unmask_choice_properties(seed):
+    rng = np.random.default_rng(seed)
+    B, bs = 2, 8
+    mask_id = 99
+    conf = jnp.asarray(rng.uniform(size=(B, bs)), jnp.float32)
+    toks = jnp.asarray(rng.integers(0, 50, size=(B, bs)), jnp.int32)
+    block = jnp.asarray(
+        np.where(rng.uniform(size=(B, bs)) < 0.5, mask_id,
+                 rng.integers(0, 50, size=(B, bs))), jnp.int32)
+    tau = jnp.asarray(rng.uniform(), jnp.float32)
+    unmask = np.asarray(_unmask_choice(conf, toks, block,
+                                       jnp.asarray(mask_id), tau, 0))
+    masked = np.asarray(block) == mask_id
+    # never unmasks an already-decoded position
+    assert not (unmask & ~masked).any()
+    # progress guarantee: any row with masked positions unmasks >= 1
+    for b in range(B):
+        if masked[b].any():
+            assert unmask[b].any()
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 4), st.integers(1, 6),
+       st.sampled_from(["mean", "q1", "median", "q3", "min-whisker"]),
+       st.sampled_from(["block", "step-block"]),
+       st.floats(0.5, 1.0), st.floats(0.0, 0.5))
+@settings(**SETTINGS)
+def test_calibrated_table_bounds(seed, nb, sc, metric, mode, cap, slack):
+    rng = np.random.default_rng(seed)
+    conf = rng.uniform(size=(nb, sc, 4)).astype(np.float32)
+    valid = rng.uniform(size=(nb, sc, 4)) < 0.7
+    prof = CalibrationProfile(conf, valid, np.full(nb, sc, np.int32))
+    dcfg = DecodeConfig(max_new_tokens=nb * 4, block_size=4, policy="osdt",
+                        mode=mode, metric=metric, cap=cap, slack=slack,
+                        max_steps_per_block=sc)
+    table = build_table(prof, dcfg)
+    assert table.shape == (nb, sc)
+    assert np.isfinite(table).all()
+    # Algorithm 1 line 17: tau_eff = min(tau, kappa) * (1 - eps)
+    assert (table <= cap * (1 - slack) + 1e-6).all()
+    assert (table >= 0).all()
+
+
+@given(st.text(max_size=60), st.booleans(), st.booleans())
+@settings(**SETTINGS)
+def test_tokenizer_roundtrip(text, bos, eos):
+    ids = tok.encode(text, bos=bos, eos=eos)
+    assert tok.decode(ids) == text
+    assert all(0 <= i < tok.VOCAB for i in ids)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 64))
+@settings(**SETTINGS)
+def test_rope_preserves_norm(seed, pos):
+    from repro.models.layers import apply_rope
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(1, 3, 2, 16)), jnp.float32)
+    y = apply_rope(x, jnp.full((3,), pos), 1e4)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1), rtol=1e-4)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_adamw_decreases_quadratic(seed):
+    from repro.training.optimizer import (OptConfig, adamw_update,
+                                          init_opt_state)
+    rng = np.random.default_rng(seed)
+    target = jnp.asarray(rng.normal(size=(8,)), jnp.float32)
+    params = {"w": jnp.zeros((8,))}
+    ocfg = OptConfig(lr=0.1, weight_decay=0.0, warmup_steps=0,
+                     total_steps=100)
+    state = init_opt_state(params)
+    loss0 = float(jnp.sum((params["w"] - target) ** 2))
+    for _ in range(50):
+        grads = {"w": 2 * (params["w"] - target)}
+        params, state, _ = adamw_update(params, grads, state, ocfg)
+    assert float(jnp.sum((params["w"] - target) ** 2)) < loss0 * 0.5

@@ -1,0 +1,88 @@
+"""Roofline machinery: HLO collective parsing + term math."""
+import numpy as np
+import pytest
+
+from repro.config.base import INPUT_SHAPES
+from repro.config.registry import get_config
+from repro.roofline import analysis
+from repro.roofline.analytic import MeshInfo, flops_per_device
+
+FAKE_HLO = """\
+HloModule test
+
+%wide.cond (p: (s32[])) -> pred[] {
+  %p = (s32[]) parameter(0)
+  %c = s32[] constant(7)
+  %i = s32[] get-tuple-element(%p), index=0
+  ROOT %cmp = pred[] compare(%i, %c), direction=LT
+}
+
+%wide.body (p: (s32[])) -> (s32[]) {
+  %p = (s32[]) parameter(0)
+  %ag = f32[8,128]{1,0} all-gather(%x), dimensions={0}
+  %ar = f32[64]{0} all-reduce(%y), to_apply=%sum
+  ROOT %t = (s32[]) tuple(%i)
+}
+
+ENTRY %main (a: f32[8,128]) -> f32[8,128] {
+  %a = f32[8,128] parameter(0)
+  %w = (s32[]) while(%init), condition=%wide.cond, body=%wide.body
+  %cp = f32[16,16]{1,0} collective-permute(%a), source_target_pairs={{0,1}}
+  ROOT %r = f32[8,128] add(%a, %a)
+}
+"""
+
+
+def test_collective_parse_with_trip_counts():
+    out = analysis.collective_bytes(FAKE_HLO)
+    # all-gather 8*128*4 = 4096 B x 7 trips
+    assert out["all-gather"] == 4096 * 7
+    # all-reduce 64*4 x 2 (ring) x 7
+    assert out["all-reduce"] == 64 * 4 * 2 * 7
+    # entry collective counted once
+    assert out["collective-permute"] == 16 * 16 * 4
+
+
+def test_roofline_terms():
+    t = analysis.roofline(197e12, 819e9, 50e9)
+    assert t["compute_s"] == pytest.approx(1.0)
+    assert t["memory_s"] == pytest.approx(1.0)
+    assert t["collective_s"] == pytest.approx(1.0)
+    t2 = analysis.roofline(1e12, 819e9 * 10, 0)
+    assert t2["dominant"] == "memory_s"
+
+
+def test_analytic_flops_scaling():
+    """Model FLOPs must scale ~linearly with tokens and inversely with
+    usable shards."""
+    cfg = get_config("deepseek-67b")
+    mi256 = MeshInfo(batch_shards=16, tp=16)
+    mi512 = MeshInfo(batch_shards=32, tp=16)
+    f_train = flops_per_device(cfg, INPUT_SHAPES["train_4k"], "train", mi256)
+    f_train2 = flops_per_device(cfg, INPUT_SHAPES["train_4k"], "train", mi512)
+    assert f_train / f_train2 == pytest.approx(2.0, rel=0.05)
+    # train flops/token ~ 3x prefill flops/token on same tokens
+    f_pre = flops_per_device(cfg, INPUT_SHAPES["prefill_32k"], "prefill",
+                             mi256)
+    tokens_train = 256 * 4096
+    tokens_pre = 32 * 32768
+    ratio = (f_train / tokens_train) / (f_pre / tokens_pre)
+    # 3x matmul work, diluted by prefill's 8x longer attention context
+    assert 1.5 < ratio < 4.0
+
+
+def test_decode_flops_tiny_vs_prefill():
+    cfg = get_config("qwen1.5-110b")
+    mi = MeshInfo(batch_shards=16, tp=16)
+    f_dec = flops_per_device(cfg, INPUT_SHAPES["decode_32k"], "decode", mi)
+    f_pre = flops_per_device(cfg, INPUT_SHAPES["prefill_32k"], "prefill", mi)
+    assert f_dec < f_pre / 100
+
+
+def test_moe_flops_use_active_params():
+    moe = get_config("qwen3-moe-235b-a22b")
+    mi = MeshInfo(batch_shards=16, tp=16)
+    f = flops_per_device(moe, INPUT_SHAPES["train_4k"], "train", mi)
+    # rough: 3 * 2 * active_params * tokens / chips (+attention)
+    est = 3 * 2 * moe.active_param_count() * 256 * 4096 / 256
+    assert 0.3 * est < f < 4 * est
