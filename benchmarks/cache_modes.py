@@ -31,21 +31,30 @@ def run(csv_rows: List[str], verbose: bool = True) -> None:
     dcfg = common.default_dcfg()
     table = jnp.asarray(policies.static_table(dcfg))
 
+    # attention-impl dimension: "auto" = generic full-buffer XLA path,
+    # "kernel" = the length-aware dispatch (Pallas on TPU, bounded flash
+    # here). "none" mode runs full forwards — no cached attention to swap.
     for mode in ("none", "prefix", "dual"):
-        gen = make_generate_fn(cfg, dcfg, cache_mode=mode)
-        gen(params, prompts[:BATCH], table, mask).tokens.block_until_ready()
-        toks, nfe = [], 0
-        t0 = time.perf_counter()
-        for i in range(0, N_EVAL, BATCH):
-            r = gen(params, prompts[i:i + BATCH], table, mask)
-            toks.append(np.asarray(r.tokens))
-            nfe += int(r.nfe)
-        wall = time.perf_counter() - t0
-        tokens = np.concatenate(toks)
-        acc = common.score_generations(TASK, samples, tokens)
-        row = (f"cache_modes/{TASK}/{mode},{wall / tokens.size * 1e6:.2f},"
-               f"acc={acc:.3f};nfe={nfe};tok_per_nfe={tokens.size / nfe:.2f};"
-               f"tok_per_s={tokens.size / wall:.1f}")
-        csv_rows.append(row)
-        if verbose:
-            print(row)
+        impls = ("auto",) if mode == "none" else ("auto", "kernel")
+        for impl in impls:
+            gen = make_generate_fn(cfg, dcfg, cache_mode=mode,
+                                   attn_impl=impl)
+            gen(params, prompts[:BATCH], table,
+                mask).tokens.block_until_ready()
+            toks, nfe = [], 0
+            t0 = time.perf_counter()
+            for i in range(0, N_EVAL, BATCH):
+                r = gen(params, prompts[i:i + BATCH], table, mask)
+                toks.append(np.asarray(r.tokens))
+                nfe += int(r.nfe)
+            wall = time.perf_counter() - t0
+            tokens = np.concatenate(toks)
+            acc = common.score_generations(TASK, samples, tokens)
+            row = (f"cache_modes/{TASK}/{mode}/{impl},"
+                   f"{wall / tokens.size * 1e6:.2f},"
+                   f"acc={acc:.3f};nfe={nfe};"
+                   f"tok_per_nfe={tokens.size / nfe:.2f};"
+                   f"tok_per_s={tokens.size / wall:.1f}")
+            csv_rows.append(row)
+            if verbose:
+                print(row)

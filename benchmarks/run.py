@@ -12,8 +12,9 @@ import sys
 from pathlib import Path
 from typing import List
 
-from benchmarks import (cache_modes, fig1_confidence, fig2_cosine,
-                        fig3_5_sweep, kernels_bench, table1_compare)
+from benchmarks import (block_attn, cache_modes, fig1_confidence,
+                        fig2_cosine, fig3_5_sweep, kernels_bench,
+                        table1_compare)
 
 BENCHES = {
     "fig1": fig1_confidence.run,
@@ -22,6 +23,7 @@ BENCHES = {
     "fig3_5": fig3_5_sweep.run,
     "cache_modes": cache_modes.run,
     "kernels": kernels_bench.run,
+    "block_attn": block_attn.run,
 }
 
 

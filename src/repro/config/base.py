@@ -203,6 +203,14 @@ class DecodeConfig:
     cap: float = 0.9              # kappa
     slack: float = 0.1            # epsilon
     max_steps_per_block: int = 0  # 0 -> block_size (worst case 1 tok/step)
+    # attention path for the cached block/decode steps (KERNELS.md):
+    #   auto   — dense/flash by score size (XLA)
+    #   dense  — force masked dense attention
+    #   flash  — length-aware chunked attention (kv scan stops at the
+    #            cache's valid extent)
+    #   kernel — fused Pallas block-attention kernel on TPU, the length-
+    #            aware flash path elsewhere
+    attn_impl: str = "auto"
 
     @property
     def num_blocks(self) -> int:

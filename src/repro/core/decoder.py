@@ -64,7 +64,8 @@ def _unmask_choice(conf: Array, toks: Array, block: Array, mask_id: Array,
 
 def make_generate_fn(cfg: ModelConfig, dcfg: DecodeConfig, *,
                      use_cache: bool = True, quota: int = 0,
-                     use_kernel: bool = False, cache_mode: str = ""):
+                     use_kernel: bool = False, cache_mode: str = "",
+                     attn_impl: str = ""):
     """Build the jitted generate function.
 
     fn(params, prompt [B, P] int32, table [nb, steps_cap] f32, mask_id [])
@@ -74,10 +75,17 @@ def make_generate_fn(cfg: ModelConfig, dcfg: DecodeConfig, *,
     use_cache), "dual" (prefix + suffix: the response region's K/V are
     refreshed once per block so steps see the future masked blocks too —
     Fast-dLLM DualCache), or "none" (vanilla LLaDA full re-forward).
+
+    ``attn_impl`` (default ``dcfg.attn_impl``) selects the block-step
+    attention path — auto | dense | flash | kernel (KERNELS.md). The
+    "none" cache mode runs full forwards and is unaffected.
     """
     assert cfg.supports_mdlm, f"{cfg.name}: diffusion decoding inapplicable"
     if not cache_mode:
         cache_mode = "prefix" if use_cache else "none"
+    if not attn_impl:
+        attn_impl = dcfg.attn_impl
+    assert attn_impl in ("auto", "dense", "flash", "kernel"), attn_impl
     use_cache = cache_mode != "none"
     dual = cache_mode == "dual"
     N, bs = dcfg.max_new_tokens, dcfg.block_size
@@ -115,7 +123,7 @@ def make_generate_fn(cfg: ModelConfig, dcfg: DecodeConfig, *,
                 _, cache = M.block_step(params, cfg, resp,
                                         jnp.asarray(P, jnp.int32), cache,
                                         write=True, advance=False,
-                                        write_slot=P)
+                                        write_slot=P, attn_impl=attn_impl)
                 nfe = nfe + 1
 
             def model_logits(block, full_resp):
@@ -123,11 +131,12 @@ def make_generate_fn(cfg: ModelConfig, dcfg: DecodeConfig, *,
                     logits, _ = M.block_step(
                         params, cfg, block, block_start, cache,
                         write_slot=P + N, exclude_start=start + P,
-                        exclude_len=bs)
+                        exclude_len=bs, attn_impl=attn_impl)
                     return logits
                 if use_cache:
                     logits, _ = M.block_step(params, cfg, block,
-                                             block_start, cache)
+                                             block_start, cache,
+                                             attn_impl=attn_impl)
                     return logits
                 x = jnp.concatenate([prompt, full_resp], axis=1)
                 logits, _ = M.forward(params, cfg, x, mode="full")
@@ -170,7 +179,8 @@ def make_generate_fn(cfg: ModelConfig, dcfg: DecodeConfig, *,
             if use_cache and not dual:
                 # commit the finished block's K/V (Fast-dLLM prefix cache)
                 _, cache = M.block_step(params, cfg, block, block_start,
-                                        cache, write=True)
+                                        cache, write=True,
+                                        attn_impl=attn_impl)
                 nfe = nfe + 1
             return (resp, cache, nfe, conf_rec, val_rec, steps_used)
 
@@ -196,8 +206,9 @@ def result_profile(res: GenerateResult) -> CalibrationProfile:
 # ---------------------------------------------------------------------------
 
 def make_ar_generate_fn(cfg: ModelConfig, *, max_new_tokens: int,
-                        window: int = 0):
+                        window: int = 0, attn_impl: str = "auto"):
     """Greedy AR generation: fn(params, prompt [B, P]) -> tokens [B, N]."""
+    assert attn_impl in ("auto", "dense", "flash", "kernel"), attn_impl
 
     def gen(params, prompt):
         B, P = prompt.shape
@@ -209,7 +220,8 @@ def make_ar_generate_fn(cfg: ModelConfig, *, max_new_tokens: int,
         def step(carry, _):
             tok, cache = carry
             logits, cache = M.decode_step(params, cfg, tok, cache,
-                                          window=window)
+                                          window=window,
+                                          attn_impl=attn_impl)
             nxt = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
             return (nxt, cache), tok
 

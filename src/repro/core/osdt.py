@@ -28,7 +28,7 @@ class OSDTSession:
 
     def __init__(self, params, cfg: ModelConfig, dcfg: DecodeConfig,
                  mask_id: int, *, use_cache: bool = True,
-                 online_ema: float = 0.0):
+                 online_ema: float = 0.0, attn_impl: str = ""):
         """``online_ema`` > 0 enables the beyond-paper ONLINE variant: after
         each Phase-2 generation the threshold table is EMA-updated from that
         generation's own confidence profile (tau <- (1-a)*tau + a*tau_new).
@@ -40,7 +40,8 @@ class OSDTSession:
         self.dcfg = dcfg
         self.mask_id = jnp.asarray(mask_id, jnp.int32)
         self.online_ema = online_ema
-        self._gen = make_generate_fn(cfg, dcfg, use_cache=use_cache)
+        self._gen = make_generate_fn(cfg, dcfg, use_cache=use_cache,
+                                     attn_impl=attn_impl)
         # Phase-1 decodes with the static baseline table
         self._static_table = jnp.asarray(
             policies.static_table(dcfg))

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import compiler_params
+
 Array = jax.Array
 
 
@@ -86,7 +88,7 @@ def fused_confidence_pallas(logits: Array, *, row_tile: int = 8,
         scratch_shapes=[pltpu.VMEM((rt,), jnp.float32),
                         pltpu.VMEM((rt,), jnp.float32),
                         pltpu.VMEM((rt,), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(logits)

@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import compiler_params
+
 Array = jax.Array
 
 NEG_INF = -1.0e30
@@ -103,7 +105,7 @@ def flash_attention_pallas(q: Array, k: Array, v: Array, *,
         scratch_shapes=[pltpu.VMEM((qt,), jnp.float32),
                         pltpu.VMEM((qt,), jnp.float32),
                         pltpu.VMEM((qt, D), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(qf, kf, vf)

@@ -8,12 +8,14 @@ the kernel bodies themselves on CPU.
 from __future__ import annotations
 
 from functools import partial
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.block_attention import (cached_block_attention_pallas,
+                                           kv_limit_from_pos)
 from repro.kernels.confidence import fused_confidence_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 
@@ -58,3 +60,58 @@ def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True
     """q [B,H,S,D], k/v [B,H,T,D] -> [B,H,S,D]."""
     fn = _flash_tpu if _on_tpu() else _flash_ref
     return fn(q, k, v, causal)
+
+
+# ---------------------------------------------------------------------------
+# cached block attention (the diffusion block-step hot path)
+# ---------------------------------------------------------------------------
+
+def _cba_xla(q, cache_k, cache_v, block_k, block_v, kv_pos, slot,
+             block_start, kv_limit, exclude_start, *, exclude_len: int,
+             window: int) -> Array:
+    """Length-aware XLA fallback: ``cached_block_attend`` (the one shared
+    write+mask+attend definition) forced onto the flash path, whose kv
+    loop stops at the padded-length bucket instead of streaming the whole
+    [T] buffer. Imported at call time — the models layer sits above the
+    kernels package."""
+    from repro.models import attention as A
+
+    bs = block_k.shape[1]
+    q_pos = block_start + jnp.arange(bs, dtype=jnp.int32)
+    out, _ = A.cached_block_attend(
+        q, cache_k, cache_v, block_k, block_v, kv_pos, slot=slot,
+        q_pos=q_pos, kv_limit=kv_limit, exclude_start=exclude_start,
+        exclude_len=exclude_len, window=window, impl="flash")
+    return out
+
+
+def cached_block_attention(
+        q: Array, cache_k: Array, cache_v: Array, block_k: Array,
+        block_v: Array, *, kv_pos: Array, slot: Array, block_start: Array,
+        kv_limit: Optional[Array] = None,
+        exclude_start: Optional[Array] = None, exclude_len: int = 0,
+        window: int = 0, interpret: bool = False) -> Array:
+    """Block-step attention against the KV cache, without pre-writing it.
+
+    q [B,bs,H,D]; cache_k/v [B,T,Kh,D]; block_k/v [B,bs,Kh,D]; kv_pos [T].
+    Result equals writing the block at ``slot`` and attending the full
+    buffer with ``block_step``'s mask (pos validity, exclude range, window,
+    bidirectional in-block) — but dead cache tiles beyond ``kv_limit`` are
+    never read: TPU -> the Pallas kernel (tile skipping + native GQA),
+    elsewhere -> the bounded ``attend_flash`` path. ``interpret=True``
+    forces the Pallas kernel in interpret mode (tests/benchmarks).
+    """
+    if kv_limit is None:
+        kv_limit = kv_limit_from_pos(kv_pos)
+    if exclude_start is None:
+        exclude_start = jnp.zeros((), jnp.int32)
+        exclude_len = 0
+    if _on_tpu() or interpret:
+        return cached_block_attention_pallas(
+            q, cache_k, cache_v, block_k, block_v, kv_pos, slot=slot,
+            block_start=block_start, kv_limit=kv_limit,
+            exclude_start=exclude_start, exclude_len=exclude_len,
+            window=window, interpret=interpret)
+    return _cba_xla(q, cache_k, cache_v, block_k, block_v, kv_pos, slot,
+                    block_start, kv_limit, exclude_start,
+                    exclude_len=exclude_len, window=window)

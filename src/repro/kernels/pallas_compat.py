@@ -1,0 +1,15 @@
+"""Version compatibility for Pallas-TPU APIs.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams`` (and the
+old name was later removed); the kernels must run under either spelling.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+_CLS = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+
+def compiler_params(**kwargs):
+    """Build the TPU compiler-params object under old and new jax."""
+    return _CLS(**kwargs)

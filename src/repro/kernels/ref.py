@@ -1,7 +1,7 @@
 """Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -33,3 +33,46 @@ def attention_ref(q: Array, k: Array, v: Array, *, causal: bool) -> Array:
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bhst,bhtd->bhsd", p, v.astype(jnp.float32)
                       ).astype(q.dtype)
+
+
+def cached_block_attention_ref(
+        q: Array, cache_k: Array, cache_v: Array, block_k: Array,
+        block_v: Array, kv_pos: Array, *, slot: Array, block_start: Array,
+        exclude_start: Optional[Array] = None, exclude_len: int = 0,
+        window: int = 0) -> Array:
+    """Oracle for ``block_attention.cached_block_attention_pallas``.
+
+    Emulates ``model.block_step``'s attention literally: write the fresh
+    block's K/V (and positions) into the cache at ``slot``, build the
+    kv-side validity mask, dense-softmax in float32.
+
+    q [B,bs,H,D]; cache_k/v [B,T,Kh,D]; block_k/v [B,bs,Kh,D]; kv_pos [T].
+    """
+    B, bs, H, D = q.shape
+    T, Kh = cache_k.shape[1], cache_k.shape[2]
+    G = H // Kh
+    q_pos = block_start + jnp.arange(bs, dtype=jnp.int32)
+    slot = jnp.asarray(slot, jnp.int32)
+    b0 = jnp.zeros((), jnp.int32)
+    ck = jax.lax.dynamic_update_slice(
+        cache_k, block_k.astype(cache_k.dtype), (b0, slot, b0, b0))
+    cv = jax.lax.dynamic_update_slice(
+        cache_v, block_v.astype(cache_v.dtype), (b0, slot, b0, b0))
+    pos = jax.lax.dynamic_update_slice(kv_pos.astype(jnp.int32),
+                                       q_pos, (slot,))
+    valid = pos >= 0
+    ids = jnp.arange(T, dtype=jnp.int32)
+    if exclude_start is not None and exclude_len:
+        valid &= ~((ids >= exclude_start) & (ids < exclude_start
+                                             + exclude_len))
+    if window:
+        valid &= (q_pos[-1] - pos) < window
+
+    scale = 1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32))
+    qg = q.reshape(B, bs, Kh, G, D).astype(jnp.float32)
+    s = jnp.einsum("bskgd,btkd->bkgst", qg,
+                   ck.astype(jnp.float32)) * scale
+    s = jnp.where(valid[None, None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", p, cv.astype(jnp.float32))
+    return out.reshape(B, bs, H, D).astype(q.dtype)

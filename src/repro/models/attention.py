@@ -22,6 +22,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.models import cache as cache_lib
+
 Array = jax.Array
 
 NEG_INF = -1.0e30
@@ -40,6 +42,29 @@ def mask_bias(q_pos: Array, kv_pos: Array, mode: str, window: int) -> Array:
     else:
         raise ValueError(f"unknown mask mode {mode!r}")
     return keep
+
+
+def cache_valid_mask(kv_pos: Array, *, exclude_start: Optional[Array] = None,
+                     exclude_len: int = 0, window: int = 0,
+                     q_last: Optional[Array] = None) -> Array:
+    """[T] cache-slot validity from post-write slot positions.
+
+    The one definition of the decode-cache mask semantics, shared by
+    ``block_step`` / ``decode_step`` / the kernel dispatch fallback:
+    ``pos >= 0`` (empty slots), minus the stale SLOT-INDEX range
+    ``exclude_start/len`` (dual cache), minus entries outside the sliding
+    ``window`` measured against ``q_last`` (the step's last query
+    position). The Pallas kernel and the ref oracle implement the same
+    rules independently and are cross-checked in tests.
+    """
+    valid = kv_pos >= 0
+    if exclude_start is not None and exclude_len:
+        ids = jnp.arange(kv_pos.shape[0], dtype=jnp.int32)
+        valid &= ~((ids >= exclude_start) & (ids < exclude_start
+                                             + exclude_len))
+    if window:
+        valid &= (q_last - kv_pos) < window
+    return valid
 
 
 def _merge_valid(keep: Array, kv_valid: Optional[Array], batch: int) -> Array:
@@ -72,9 +97,18 @@ def attend_dense(q: Array, k: Array, v: Array, *, q_pos: Array, kv_pos: Array,
 def attend_flash(q: Array, k: Array, v: Array, *, q_pos: Array, kv_pos: Array,
                  mode: str = "causal", window: int = 0,
                  kv_valid: Optional[Array] = None,
-                 q_chunk: int = 512, kv_chunk: int = 1024) -> Array:
-    """Online-softmax attention, scan over q-chunks (outer) and kv-chunks
-    (inner). Peak temporary is [B,K,G,q_chunk,kv_chunk] — independent of S,T.
+                 q_chunk: int = 512, kv_chunk: int = 1024,
+                 kv_limit: Optional[Array] = None) -> Array:
+    """Online-softmax attention: lax.map over q-chunks (outer), fori_loop
+    over kv-chunks (inner). Peak temporary is [B,K,G,q_chunk,kv_chunk] —
+    independent of S,T.
+
+    ``kv_limit`` (traced [] int32) is the length-aware bound: kv entries at
+    index >= kv_limit must already be masked by ``kv_valid``, and the inner
+    loop then runs only ``ceil(kv_limit / kv_chunk)`` iterations (the
+    padded-length bucket) instead of all of T — on a quarter-full cache
+    that is 4x fewer kv chunks touched. T need not divide kv_chunk: the
+    tail chunk is clamped into range and re-covered indices are masked.
     """
     B, S, H, D = q.shape
     T = k.shape[1]
@@ -82,34 +116,43 @@ def attend_flash(q: Array, k: Array, v: Array, *, q_pos: Array, kv_pos: Array,
     G = H // K
     q_chunk = min(q_chunk, S)
     kv_chunk = min(kv_chunk, T)
-    assert S % q_chunk == 0 and T % kv_chunk == 0, (S, q_chunk, T, kv_chunk)
-    nq, nk = S // q_chunk, T // kv_chunk
+    assert S % q_chunk == 0, (S, q_chunk)
+    nq, nk = S // q_chunk, -(-T // kv_chunk)
     scale = 1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32))
 
     qg = q.reshape(B, nq, q_chunk, K, G, D)
     qp = q_pos.reshape(nq, q_chunk)
-    kg = k.reshape(B, nk, kv_chunk, K, D)
-    vg = v.reshape(B, nk, kv_chunk, K, D)
-    kp = kv_pos.reshape(nk, kv_chunk)
     if kv_valid is not None and kv_valid.ndim == 1:
         kv_valid = jnp.broadcast_to(kv_valid[None], (B, T))
-    kval = None if kv_valid is None else kv_valid.reshape(B, nk, kv_chunk)
+    if kv_limit is None:
+        n_live = nk
+    else:
+        n_live = jnp.clip(
+            jax.lax.div(kv_limit.astype(jnp.int32) + kv_chunk - 1,
+                        jnp.asarray(kv_chunk, jnp.int32)), 1, nk)
 
     def one_q_chunk(args):
         qc, qpc = args  # [B,qc,K,G,D], [qc]
 
-        def kv_body(carry, xs):
+        def kv_body(t, carry):
             m, l, acc = carry
-            if kval is None:
-                kc, vc, kpc = xs
-                valid = None
-            else:
-                kc, vc, kpc, valid = xs
+            # clamp the tail chunk into range; indices a previous chunk
+            # already covered are masked out below
+            start = jnp.minimum(t * kv_chunk, T - kv_chunk)
+            kc = jax.lax.dynamic_slice(k, (0, start, 0, 0),
+                                       (B, kv_chunk, K, D))
+            vc = jax.lax.dynamic_slice(v, (0, start, 0, 0),
+                                       (B, kv_chunk, K, D))
+            kpc = jax.lax.dynamic_slice(kv_pos, (start,), (kv_chunk,))
+            owned = (start + jnp.arange(kv_chunk)) >= t * kv_chunk
             s = jnp.einsum("bqkgd,btkd->bkgqt", qc, kc,
                            preferred_element_type=jnp.float32) * scale
-            keep = mask_bias(qpc, kpc, mode, window)[None, None, None]
-            if valid is not None:
-                keep = keep & valid[:, None, None, None, :]
+            keep = mask_bias(qpc, kpc, mode, window)[None, None, None] & \
+                owned[None, None, None, None, :]
+            if kv_valid is not None:
+                vld = jax.lax.dynamic_slice(kv_valid, (0, start),
+                                            (B, kv_chunk))
+                keep = keep & vld[:, None, None, None, :]
             s = jnp.where(keep, s, NEG_INF)
             m_new = jnp.maximum(m, jnp.max(s, axis=-1))
             p = jnp.exp(s - m_new[..., None])
@@ -117,16 +160,12 @@ def attend_flash(q: Array, k: Array, v: Array, *, q_pos: Array, kv_pos: Array,
             l_new = l * corr + jnp.sum(p, axis=-1)
             acc_new = acc * corr[..., None] + jnp.einsum(
                 "bkgqt,btkd->bkgqd", p, vc.astype(jnp.float32))
-            return (m_new, l_new, acc_new), None
+            return (m_new, l_new, acc_new)
 
         m0 = jnp.full((B, K, G, q_chunk), NEG_INF, jnp.float32)
         l0 = jnp.zeros((B, K, G, q_chunk), jnp.float32)
         a0 = jnp.zeros((B, K, G, q_chunk, D), jnp.float32)
-        xs = (jnp.moveaxis(kg, 1, 0), jnp.moveaxis(vg, 1, 0),
-              kp) if kval is None else (
-            jnp.moveaxis(kg, 1, 0), jnp.moveaxis(vg, 1, 0), kp,
-            jnp.moveaxis(kval, 1, 0))
-        (m, l, acc), _ = jax.lax.scan(kv_body, (m0, l0, a0), xs)
+        m, l, acc = jax.lax.fori_loop(0, n_live, kv_body, (m0, l0, a0))
         # guard fully-masked rows (l == 0)
         out = acc / jnp.maximum(l, 1e-30)[..., None]
         return jnp.moveaxis(out, 3, 1)  # [B,qc,K,G,D]
@@ -139,11 +178,52 @@ def attend_flash(q: Array, k: Array, v: Array, *, q_pos: Array, kv_pos: Array,
 def attention(q: Array, k: Array, v: Array, *, q_pos: Array, kv_pos: Array,
               mode: str = "causal", window: int = 0,
               kv_valid: Optional[Array] = None,
-              dense_limit: int = 2 ** 22) -> Array:
-    """Dispatch dense vs chunked by score-matrix size (S*T)."""
+              dense_limit: int = 2 ** 22, impl: str = "auto",
+              kv_limit: Optional[Array] = None) -> Array:
+    """Attention entry point.
+
+    ``impl``: "auto" picks dense vs chunked by score-matrix size (S*T);
+    "dense" / "flash" force a path. ``kv_limit`` makes the flash path
+    length-aware (see ``attend_flash``); entries beyond it must be masked
+    by ``kv_valid``. The Pallas block kernel does not dispatch here — see
+    ``repro.kernels.ops.cached_block_attention``.
+    """
+    assert impl in ("auto", "dense", "flash"), impl
     S, T = q.shape[1], k.shape[1]
-    if S * T <= dense_limit:
+    if impl == "dense" or (impl == "auto" and S * T <= dense_limit
+                           and kv_limit is None):
         return attend_dense(q, k, v, q_pos=q_pos, kv_pos=kv_pos, mode=mode,
                             window=window, kv_valid=kv_valid)
     return attend_flash(q, k, v, q_pos=q_pos, kv_pos=kv_pos, mode=mode,
-                        window=window, kv_valid=kv_valid)
+                        window=window, kv_valid=kv_valid, kv_limit=kv_limit)
+
+
+def cached_block_attend(q: Array, cache_k: Array, cache_v: Array,
+                        block_k: Array, block_v: Array, kv_pos: Array, *,
+                        slot: Array, q_pos: Array,
+                        kv_limit: Optional[Array] = None,
+                        exclude_start: Optional[Array] = None,
+                        exclude_len: int = 0, window: int = 0,
+                        impl: str = "auto"):
+    """The generic (XLA) cached block/decode step attention: write the
+    fresh K/V into the cache buffer at ``slot``, mask with
+    ``cache_valid_mask``, attend bidirectionally. The ONE definition of
+    this sequence — ``block_step``, ``decode_step`` and the off-TPU branch
+    of ``ops.cached_block_attention`` all call it, so the mask/bound
+    semantics cannot drift between impls.
+
+    Returns ``(out, (ck, cv))`` — the written cache buffers, for callers
+    that commit the step (``write=True`` / AR decode).
+    """
+    ck, cv = cache_lib.kv_write_slice(cache_k, cache_v, block_k, block_v,
+                                      slot)
+    pos = cache_lib.pos_write_slice(kv_pos, q_pos, slot)
+    kv_valid = cache_valid_mask(pos, exclude_start=exclude_start,
+                                exclude_len=exclude_len, window=window,
+                                q_last=q_pos[-1])
+    bound = None if kv_limit is None else \
+        jnp.maximum(kv_limit, slot + q_pos.shape[0])
+    out = attention(q, ck, cv, q_pos=q_pos, kv_pos=jnp.maximum(pos, 0),
+                    mode="full", kv_valid=kv_valid, impl=impl,
+                    kv_limit=bound)
+    return out, (ck, cv)

@@ -25,7 +25,8 @@ import jax.numpy as jnp
 
 from repro.config.base import ModelConfig
 from repro.models import cache as cache_lib
-from repro.models.attention import attention
+from repro.models.attention import (attention, cache_valid_mask,
+                                    cached_block_attend)
 from repro.models.frontend import (frontend_embeds, frontend_len,
                                    init_frontend)
 from repro.models.layers import (apply_rope, dense_init, embed, init_embedding,
@@ -385,8 +386,15 @@ def _hybrid_prefill(params: dict, cfg: ModelConfig, x: Array, positions: Array,
 # ---------------------------------------------------------------------------
 
 def decode_step(params: dict, cfg: ModelConfig, token: Array, cache: dict, *,
-                window: int = 0) -> Tuple[Array, dict]:
-    """token [B, 1] -> (logits [B, 1, V], cache). Writes then attends."""
+                window: int = 0, attn_impl: str = "auto"
+                ) -> Tuple[Array, dict]:
+    """token [B, 1] -> (logits [B, 1, V], cache). Writes then attends.
+
+    ``attn_impl``: auto/dense/flash route through ``attention()`` ("flash"
+    bounds the kv scan by the filled length); "kernel" routes through
+    ``ops.cached_block_attention`` with a one-token block (Pallas on TPU).
+    SSM / hybrid families ignore it (no KV attention / shared-block path).
+    """
     x = embed(params["embed"], token)
     B = x.shape[0]
 
@@ -401,19 +409,27 @@ def decode_step(params: dict, cfg: ModelConfig, token: Array, cache: dict, *,
     length = kv["length"]
     q_pos = length[None].astype(jnp.int32)  # absolute position
     slot = jnp.where(jnp.asarray(T) > length, length, length % T)
+    use_kernel = attn_impl == "kernel"
+    kv_limit = None
+    if attn_impl in ("kernel", "flash"):
+        # post-write fill: length+1 slots, capped at T once the ring wraps
+        kv_limit = jnp.minimum(length + 1, jnp.asarray(T, jnp.int32))
+        if use_kernel:
+            from repro.kernels import ops as kops
 
     def body(h, xs):
         lp, ck, cv = xs
         hn = rms_norm(h, lp["ln1"], cfg.norm_eps)
         q, k, v = _qkv(lp, cfg, hn, q_pos)
-        ck, cv = cache_lib.kv_write_slice(ck, cv, k, v, slot)
-        kv_pos = cache_lib.pos_write_slice(kv["pos"], q_pos, slot)
-        kv_valid = kv_pos >= 0
-        if window:
-            kv_valid = kv_valid & (q_pos[-1] - kv_pos < window)
-        attn = attention(q, ck, cv, q_pos=q_pos,
-                         kv_pos=jnp.maximum(kv_pos, 0),
-                         mode="full", kv_valid=kv_valid)
+        if use_kernel:
+            attn = kops.cached_block_attention(
+                q, ck, cv, k, v, kv_pos=kv["pos"], slot=slot,
+                block_start=q_pos[0], kv_limit=kv_limit, window=window)
+            ck, cv = cache_lib.kv_write_slice(ck, cv, k, v, slot)
+        else:
+            attn, (ck, cv) = cached_block_attend(
+                q, ck, cv, k, v, kv["pos"], slot=slot, q_pos=q_pos,
+                kv_limit=kv_limit, window=window, impl=attn_impl)
         h = h + jnp.einsum("bsd,dm->bsm",
                            attn.reshape(B, 1, -1).astype(h.dtype), lp["wo"])
         h, _ = _mlp_part(lp, cfg, h)
@@ -482,9 +498,7 @@ def _hybrid_decode(params: dict, cfg: ModelConfig, x: Array, cache: dict,
                                           k, v, slot)
         ks_out.append(ck)
         vs_out.append(cv)
-        kv_valid = new_pos >= 0
-        if window:
-            kv_valid = kv_valid & (q_pos[-1] - new_pos < window)
+        kv_valid = cache_valid_mask(new_pos, window=window, q_last=q_pos[-1])
         attn = attention(q, ck, cv, q_pos=q_pos,
                          kv_pos=jnp.maximum(new_pos, 0),
                          mode="full", kv_valid=kv_valid)
@@ -517,7 +531,8 @@ def block_step(params: dict, cfg: ModelConfig, block_tokens: Array,
                block_start: Array, cache: dict, *, write: bool = False,
                advance: bool = True, exclude_start: Optional[Array] = None,
                exclude_len: int = 0, write_slot: Optional[Array] = None,
-               window: int = 0) -> Tuple[Array, dict]:
+               window: int = 0, attn_impl: str = "auto"
+               ) -> Tuple[Array, dict]:
     """One denoising forward of the active block against the cache.
 
     block_tokens [B, bs] (masked positions hold cfg.mask_token_id);
@@ -531,6 +546,16 @@ def block_step(params: dict, cfg: ModelConfig, block_tokens: Array,
     ``exclude_start/len`` masks a cache position range from attention —
     dual-cache block steps exclude their own (stale) slots, attending
     [prefix cache ∥ fresh block ∥ suffix cache] exactly.
+
+    ``attn_impl`` selects the attention path (see KERNELS.md):
+      auto / dense / flash — the XLA paths in ``repro.models.attention``
+        ("flash" is length-aware: the kv scan stops at the cache's valid
+        extent instead of streaming the whole buffer);
+      kernel — ``ops.cached_block_attention`` (Pallas on TPU, bounded
+        flash elsewhere). The fresh block's K/V ride as separate operands,
+        so the per-layer cache pre-write is skipped entirely on non-write
+        steps — the generic path copies the full [T] buffer per layer per
+        step just to insert the block.
     """
     assert cfg.supports_mdlm, f"{cfg.name} is causal-only (DESIGN.md)"
     x = embed(params["embed"], block_tokens)
@@ -538,33 +563,40 @@ def block_step(params: dict, cfg: ModelConfig, block_tokens: Array,
     kv = cache["attn"]
     q_pos = block_start + jnp.arange(bs, dtype=jnp.int32)
     slot = kv["length"] if write_slot is None else         jnp.asarray(write_slot, jnp.int32)
+    use_kernel = attn_impl == "kernel"
+    kv_limit = None
+    if attn_impl in ("kernel", "flash"):
+        from repro.kernels import ops as kops
+        # valid cache extent, shared across layers (one [T] reduction)
+        kv_limit = kops.kv_limit_from_pos(kv["pos"])
 
     def body(h, xs):
         lp, ck, cv = xs
         hn = rms_norm(h, lp["ln1"], cfg.norm_eps)
         q, k, v = _qkv(lp, cfg, hn, q_pos)
-        ck2, cv2 = cache_lib.kv_write_slice(ck, cv, k, v, slot)
-        kv_pos = cache_lib.pos_write_slice(kv["pos"], q_pos, slot)
-        kv_valid = kv_pos >= 0
-        if exclude_start is not None:
-            # drop the stale copies of the active block held in the cache
-            slot_ids = jnp.arange(kv_pos.shape[0], dtype=jnp.int32)
-            stale = (slot_ids >= exclude_start) &                 (slot_ids < exclude_start + exclude_len)
-            kv_valid = kv_valid & ~stale
-        if window:
-            kv_valid = kv_valid & (q_pos[-1] - kv_pos < window)
-        attn = attention(q, ck2, cv2, q_pos=q_pos,
-                         kv_pos=jnp.maximum(kv_pos, 0),
-                         mode="full", kv_valid=kv_valid)
+        if use_kernel:
+            attn = kops.cached_block_attention(
+                q, ck, cv, k, v, kv_pos=kv["pos"], slot=slot,
+                block_start=block_start, kv_limit=kv_limit,
+                exclude_start=exclude_start, exclude_len=exclude_len,
+                window=window)
+            kv_out = cache_lib.kv_write_slice(ck, cv, k, v, slot) \
+                if write else None
+        else:
+            attn, kv_out = cached_block_attend(
+                q, ck, cv, k, v, kv["pos"], slot=slot, q_pos=q_pos,
+                kv_limit=kv_limit, exclude_start=exclude_start,
+                exclude_len=exclude_len, window=window, impl=attn_impl)
         h = h + jnp.einsum("bsd,dm->bsm",
                            attn.reshape(B, bs, -1).astype(h.dtype), lp["wo"])
         h, _ = _mlp_part(lp, cfg, h)
-        return shard_ctx.act_bsd(h), (ck2, cv2)
+        return shard_ctx.act_bsd(h), kv_out
 
-    x, (ck_new, cv_new) = jax.lax.scan(body, x, (params["layers"],
-                                                 kv["k"], kv["v"]))
+    x, kv_new = jax.lax.scan(body, x, (params["layers"],
+                                       kv["k"], kv["v"]))
     logits = _head(params, cfg, x)
     if write:
+        ck_new, cv_new = kv_new
         kv = dict(kv, k=ck_new, v=cv_new,
                   pos=cache_lib.pos_write_slice(kv["pos"], q_pos, slot),
                   length=kv["length"] + bs if advance else kv["length"])

@@ -58,7 +58,13 @@ class EngineStats:
 class DiffusionEngine:
     def __init__(self, params, cfg: ModelConfig, dcfg: DecodeConfig, *,
                  batch_size: int = 4, prompt_len: int = 64,
-                 use_cache: bool = True, mask_id: int = tok.MASK_ID):
+                 use_cache: bool = True, mask_id: int = tok.MASK_ID,
+                 attn_impl: str = ""):
+        """``attn_impl`` forces the block-step attention path for every
+        session (auto | dense | flash | kernel — see KERNELS.md); empty
+        keeps ``dcfg.attn_impl`` (default "auto"). Pass "kernel" when
+        serving on TPU: the Pallas block kernel skips dead cache tiles
+        entirely."""
         self.params = params
         self.cfg = cfg
         self.dcfg = dcfg
@@ -66,6 +72,7 @@ class DiffusionEngine:
         self.prompt_len = prompt_len
         self.use_cache = use_cache
         self.mask_id = mask_id
+        self.attn_impl = attn_impl
         self.sessions: Dict[str, OSDTSession] = {}
         self.stats = EngineStats()
 
@@ -73,7 +80,7 @@ class DiffusionEngine:
         if task not in self.sessions:
             self.sessions[task] = OSDTSession(
                 self.params, self.cfg, self.dcfg, self.mask_id,
-                use_cache=self.use_cache)
+                use_cache=self.use_cache, attn_impl=self.attn_impl)
         return self.sessions[task]
 
     def submit(self, requests: List[Request]) -> List[Response]:

@@ -5,7 +5,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the hypothesis dev dependency")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.config.base import DecodeConfig
 from repro.core.calibrate import CalibrationProfile, build_table

@@ -29,7 +29,10 @@ _CHILD = textwrap.dedent("""
         fn, args, in_sh, out_sh = specs_lib.build(cfg, shape, mesh)
         compiled = jax.jit(fn, in_shardings=in_sh,
                            out_shardings=out_sh).lower(*args).compile()
-        results[arch] = float(compiled.cost_analysis().get("flops", 0))
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):  # older jax: one dict per device
+            ca = ca[0]
+        results[arch] = float(ca.get("flops", 0))
     print(json.dumps(results))
 """)
 
@@ -48,9 +51,9 @@ def test_param_specs_respect_divisibility():
         cfg = get_config(arch)
         p_shape = specs_lib.params_shape(cfg)
         specs = rules.param_specs(cfg, p_shape, FakeMesh)
-        flat = jax.tree.flatten_with_path(
+        flat = jax.tree_util.tree_flatten_with_path(
             specs, is_leaf=lambda x: isinstance(x, P))[0]
-        shapes = jax.tree.flatten_with_path(p_shape)[0]
+        shapes = jax.tree_util.tree_flatten_with_path(p_shape)[0]
         for (path, spec), (_, leaf) in zip(flat, shapes):
             used = set()
             for dim, ax in enumerate(spec):
