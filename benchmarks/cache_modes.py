@@ -29,7 +29,11 @@ def run(csv_rows: List[str], verbose: bool = True) -> None:
     mask = jnp.asarray(common.tok.MASK_ID, jnp.int32)
     samples, prompts = common.task_prompts(TASK, N_EVAL)
     dcfg = common.default_dcfg()
-    table = jnp.asarray(policies.static_table(dcfg))
+    # per-slot rank [B, nb, steps_cap] — the serving path's table shape
+    # (every row may carry a different task's table; here they coincide)
+    table = jnp.broadcast_to(
+        jnp.asarray(policies.static_table(dcfg))[None],
+        (BATCH, dcfg.num_blocks, dcfg.steps_cap))
 
     # attention-impl dimension: "auto" = generic full-buffer XLA path,
     # "kernel" = the length-aware dispatch (Pallas on TPU, bounded flash

@@ -14,7 +14,7 @@ from typing import List
 
 from benchmarks import (block_attn, cache_modes, fig1_confidence,
                         fig2_cosine, fig3_5_sweep, kernels_bench,
-                        table1_compare)
+                        scheduler_bench, table1_compare)
 
 BENCHES = {
     "fig1": fig1_confidence.run,
@@ -24,7 +24,22 @@ BENCHES = {
     "cache_modes": cache_modes.run,
     "kernels": kernels_bench.run,
     "block_attn": block_attn.run,
+    "scheduler": scheduler_bench.run,
 }
+
+
+def _merge(out: Path, rows: List[str]) -> List[str]:
+    """Replace same-name rows in the existing csv, keep the rest — a
+    partial run must not clobber previously recorded benchmarks."""
+    fresh = {r.split(",", 1)[0]: r for r in rows}
+    merged: List[str] = []
+    if out.exists():
+        for line in out.read_text().splitlines()[1:]:
+            name = line.split(",", 1)[0]
+            if line.strip() and name not in fresh:
+                merged.append(line)
+    merged.extend(rows)
+    return merged
 
 
 def main() -> None:
@@ -36,8 +51,9 @@ def main() -> None:
     out = Path(__file__).resolve().parents[1] / "experiments" / \
         "bench_results.csv"
     out.parent.mkdir(parents=True, exist_ok=True)
-    out.write_text("name,us_per_call,derived\n" + "\n".join(rows) + "\n")
-    print(f"# wrote {len(rows)} rows -> {out}")
+    merged = _merge(out, rows)
+    out.write_text("name,us_per_call,derived\n" + "\n".join(merged) + "\n")
+    print(f"# wrote {len(rows)} rows ({len(merged)} total) -> {out}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,129 @@
+"""Continuous-batching scheduler vs the PR-1 fixed-batch engine.
+
+Same request stream, same weights, same pre-calibrated per-task tables —
+the only variable is the runtime: the PR-1 engine groups requests by task,
+pads batches by repeating the last prompt, and decodes every row to the
+full ``max_new_tokens``; the scheduler mixes tasks via per-slot tables,
+admits explicit dead slots, and retires rows at EOS so short answers stop
+costing denoising steps.
+
+The stream is length-skewed: the trained bench model EOSes after the short
+synthetic answers, so most rows finish in the first block — exactly the
+regime where per-row lifecycle pays. Reports delivered tokens (post-EOS
+truncation) for BOTH paths, so tokens/s is comparable.
+
+  REPRO_SCHED_BENCH_REQS=8 PYTHONPATH=src:. python -m benchmarks.run scheduler
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Dict, List
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.config.base import EngineConfig
+from repro.core.decoder import make_generate_fn, result_profile
+from repro.core.osdt import CalibrationStore
+from repro.serving.engine import DiffusionEngine
+from repro.serving.scheduler import Request
+
+N_REQS = int(os.environ.get("REPRO_SCHED_BENCH_REQS", "24"))
+BATCH = 4
+TASKS_USED = ("gpqa-syn", "humaneval-syn")
+
+
+def _calibrated_store(params, cfg, dcfg, gen, mask) -> CalibrationStore:
+    """One calibration batch per task; both runtimes share the result."""
+    store = CalibrationStore(dcfg)
+    for task in TASKS_USED:
+        _, prompts = common.task_prompts(task, BATCH, seed=99)
+        res = gen(params, prompts, jnp.asarray(store.static), mask)
+        store.ingest(task, result_profile(res))
+    return store
+
+
+def _pr1_engine(params, gen, store, stream, prompts_by_uid, mask):
+    """The pre-scheduler runtime: per-task batches, pad-by-repeat, full
+    max_new_tokens decode (no live mask, no EOS exit)."""
+    by_task: Dict[str, List[Request]] = {}
+    for r in stream:
+        by_task.setdefault(r.task, []).append(r)
+    delivered, nfe = 0, 0
+    t0 = time.perf_counter()
+    for task, reqs in by_task.items():
+        table = jnp.asarray(store.table(task))
+        for i in range(0, len(reqs), BATCH):
+            chunk = reqs[i:i + BATCH]
+            ids = [prompts_by_uid[r.uid] for r in chunk]
+            while len(ids) < BATCH:   # the PR-1 pad hack
+                ids.append(ids[-1])
+            prompt = jnp.asarray(common.tok.batch_prompts(
+                ids, common.PROMPT_LEN))
+            res = gen(params, prompt, table, mask)
+            toks = np.asarray(res.tokens)
+            nfe += int(res.nfe)
+            for j, _ in enumerate(chunk):
+                row = toks[j].tolist()
+                if common.tok.EOS_ID in row:
+                    row = row[:row.index(common.tok.EOS_ID)]
+                delivered += len(row)
+    wall = time.perf_counter() - t0
+    return delivered, nfe, wall
+
+
+def run(csv_rows: List[str], verbose: bool = True) -> None:
+    cfg, params = common.get_model(verbose=verbose)
+    mask = jnp.asarray(common.tok.MASK_ID, jnp.int32)
+    dcfg = common.default_dcfg()
+    gen = make_generate_fn(cfg, dcfg)
+    store = _calibrated_store(params, cfg, dcfg, gen, mask)
+
+    # length-skewed mixed-task stream (interleaved, not task-grouped)
+    rng = np.random.default_rng(7)
+    stream, prompts_by_uid = [], {}
+    uid = 0
+    for i in range(N_REQS):
+        task = TASKS_USED[i % len(TASKS_USED)]
+        s = common.TASKS[task].make(rng, 1)[0]
+        stream.append(Request(uid, task, s.prompt))
+        prompts_by_uid[uid] = common.tok.encode(
+            s.prompt, bos=True)[-common.PROMPT_LEN:]
+        uid += 1
+
+    # --- PR-1 runtime (warm up the compile, then measure) --------------
+    _ = _pr1_engine(params, gen, store, stream[:BATCH], prompts_by_uid, mask)
+    tok_a, nfe_a, wall_a = _pr1_engine(params, gen, store, stream,
+                                       prompts_by_uid, mask)
+
+    # --- scheduler runtime ---------------------------------------------
+    def sched_run():
+        ecfg = EngineConfig(batch_size=BATCH, prompt_len=common.PROMPT_LEN,
+                            cache_mode="prefix", eos_early_exit=True)
+        eng = DiffusionEngine(params, cfg, dcfg, ecfg=ecfg,
+                              store=CalibrationStore(dcfg))
+        eng.store.tables.update(store.tables)
+        eng.store.profiles.update(store.profiles)
+        t0 = time.perf_counter()
+        out = eng.submit(list(stream))
+        return eng, out, time.perf_counter() - t0
+
+    sched_run()  # warm-up (compile)
+    eng, out, wall_b = sched_run()
+    st = eng.stats
+    tok_b, nfe_b = st.tokens, st.nfe
+    eos_rows = sum(1 for r in out if r.tokens_dropped > 0)
+
+    base = (f"scheduler/skew/pr1_engine,{wall_a / max(tok_a, 1) * 1e6:.2f},"
+            f"nfe={nfe_a};tok={tok_a};tok_per_s={tok_a / wall_a:.1f}")
+    cont = (f"scheduler/skew/continuous,{wall_b / max(tok_b, 1) * 1e6:.2f},"
+            f"nfe={nfe_b};tok={tok_b};tok_per_s={tok_b / wall_b:.1f};"
+            f"eos_rows={eos_rows}/{N_REQS};"
+            f"speedup={(tok_b / wall_b) / (tok_a / wall_a):.2f};"
+            f"nfe_ratio={nfe_a / max(nfe_b, 1):.2f}")
+    for row in (base, cont):
+        csv_rows.append(row)
+        if verbose:
+            print(row)

@@ -222,6 +222,32 @@ class DecodeConfig:
         return self.max_steps_per_block or self.block_size
 
 
+@dataclass(frozen=True)
+class EngineConfig:
+    """Serving-engine / scheduler knobs (SERVING.md).
+
+    The scheduler decodes fixed-shape ``[batch_size, prompt_len]`` batches
+    through ONE compiled program; everything per-request (threshold table,
+    liveness, EOS exit) is a runtime argument.
+    """
+
+    batch_size: int = 4
+    prompt_len: int = 64
+    cache_mode: str = "prefix"    # prefix | dual | none (decoder variants)
+    attn_impl: str = ""           # "" -> DecodeConfig.attn_impl
+    # retire rows at the first completed block containing EOS; dead slots
+    # and retired rows stop forcing denoising steps
+    eos_early_exit: bool = True
+    # npz path for CalibrationStore persistence ("" disables): loaded at
+    # engine construction when no store is passed explicitly, saved after
+    # every new calibration
+    store_path: str = ""
+
+    def resolved_cache_mode(self) -> str:
+        assert self.cache_mode in ("prefix", "dual", "none"), self.cache_mode
+        return self.cache_mode
+
+
 # Canonical assigned input shapes -------------------------------------------
 INPUT_SHAPES = {
     "train_4k": ShapeConfig("train_4k", seq_len=4096, global_batch=256, kind="train"),

@@ -24,7 +24,7 @@ calibration run.
 """
 from __future__ import annotations
 
-from functools import partial
+from functools import lru_cache
 from typing import NamedTuple, Optional, Tuple
 
 import jax
@@ -44,20 +44,30 @@ class GenerateResult(NamedTuple):
     nfe: Array           # [] int32 — model forwards executed
     conf: Array          # [nb, steps_cap, block_size] float32
     conf_valid: Array    # same, bool
-    steps_per_block: Array  # [nb] int32
+    steps_per_block: Array  # [nb] int32 — batch-max steps per block
+    seq_steps: Array     # [B, nb] int32 — steps each row was live+masked
+    live: Array          # [B] bool — row still live at exit (no EOS seen)
 
 
 def _unmask_choice(conf: Array, toks: Array, block: Array, mask_id: Array,
-                   tau: Array, quota: int) -> Array:
-    """Boolean [B, bs] of positions to unmask this step."""
+                   tau: Array, quota: int,
+                   live: Optional[Array] = None) -> Array:
+    """Boolean [B, bs] of positions to unmask this step.
+
+    ``tau`` is scalar or per-row [B] (per-slot threshold tables). The
+    argmax fallback (Algorithm 1 l.19-21) only fires for *live* rows —
+    dead slots / EOS-finished rows must not be forced to denoise.
+    """
     masked = block == mask_id
     conf_m = jnp.where(masked, conf, -jnp.inf)
     if quota > 0:
         order = jnp.argsort(jnp.argsort(-conf_m, axis=-1), axis=-1)
         return (order < quota) & masked
-    unmask = (conf_m > tau) & masked
+    unmask = (conf_m > jnp.reshape(tau, (-1, 1))) & masked
     best = jnp.argmax(conf_m, axis=-1)
     need_fb = (~jnp.any(unmask, axis=-1)) & jnp.any(masked, axis=-1)
+    if live is not None:
+        need_fb = need_fb & live
     fb = jax.nn.one_hot(best, conf.shape[-1], dtype=bool) & need_fb[:, None]
     return unmask | (fb & masked)
 
@@ -66,10 +76,25 @@ def make_generate_fn(cfg: ModelConfig, dcfg: DecodeConfig, *,
                      use_cache: bool = True, quota: int = 0,
                      use_kernel: bool = False, cache_mode: str = "",
                      attn_impl: str = ""):
-    """Build the jitted generate function.
+    """Build (or fetch) the jitted generate function.
 
-    fn(params, prompt [B, P] int32, table [nb, steps_cap] f32, mask_id [])
-      -> GenerateResult
+    fn(params, prompt [B, P] int32, table, mask_id [],
+       live [B] bool = None, eos_id [] = None) -> GenerateResult
+
+    ``table`` is the threshold table — per-slot [B, nb, steps_cap]
+    (continuous-batching: every row may carry a different task's
+    calibrated table) or the legacy shared [nb, steps_cap], which is
+    broadcast over the batch at trace time. Either way it stays a runtime
+    argument: one compiled program serves every policy and task mix.
+
+    ``live`` marks rows that should decode. Dead rows (scheduler pad
+    slots) never trigger the argmax fallback, never keep the step loop
+    alive, and have their masks flushed in one ride-along step — an
+    all-dead block costs zero forwards. ``eos_id`` (pass ``None`` to
+    disable) retires a row once a *completed* block of its response
+    contains EOS: all later blocks are skipped for that row, and the
+    per-block commit / dual refresh forwards are skipped entirely once
+    every row is retired.
 
     ``cache_mode``: "prefix" (Fast-dLLM prefix cache, default when
     use_cache), "dual" (prefix + suffix: the response region's K/V are
@@ -79,24 +104,43 @@ def make_generate_fn(cfg: ModelConfig, dcfg: DecodeConfig, *,
     ``attn_impl`` (default ``dcfg.attn_impl``) selects the block-step
     attention path — auto | dense | flash | kernel (KERNELS.md). The
     "none" cache mode runs full forwards and is unaffected.
+
+    Memoized on the NORMALIZED variant key, so spelling-equivalent calls
+    (e.g. ``use_cache=True`` vs ``cache_mode="prefix"``) share one jitted
+    program — one trace/compile per (cfg, dcfg, variant) process-wide.
     """
-    assert cfg.supports_mdlm, f"{cfg.name}: diffusion decoding inapplicable"
     if not cache_mode:
         cache_mode = "prefix" if use_cache else "none"
+    assert cache_mode in ("prefix", "dual", "none"), cache_mode
     if not attn_impl:
         attn_impl = dcfg.attn_impl
     assert attn_impl in ("auto", "dense", "flash", "kernel"), attn_impl
+    return _make_generate_fn(cfg, dcfg, quota, use_kernel, cache_mode,
+                             attn_impl)
+
+
+@lru_cache(maxsize=None)
+def _make_generate_fn(cfg: ModelConfig, dcfg: DecodeConfig, quota: int,
+                      use_kernel: bool, cache_mode: str, attn_impl: str):
+    assert cfg.supports_mdlm, f"{cfg.name}: diffusion decoding inapplicable"
     use_cache = cache_mode != "none"
     dual = cache_mode == "dual"
     N, bs = dcfg.max_new_tokens, dcfg.block_size
     nb, sc = dcfg.num_blocks, dcfg.steps_cap
 
-    def gen(params, prompt, table, mask_id):
+    def gen(params, prompt, table, mask_id, live=None, eos_id=None):
         B, P = prompt.shape
+        if table.ndim == 2:
+            # legacy shared table: broadcast to the per-slot rank
+            table = jnp.broadcast_to(table[None], (B,) + table.shape)
+        live0 = (jnp.ones((B,), bool) if live is None
+                 else jnp.asarray(live).astype(bool))
+        track_eos = eos_id is not None
         resp = jnp.full((B, N), mask_id, jnp.int32)
         conf_rec = jnp.zeros((nb, sc, bs), jnp.float32)
         val_rec = jnp.zeros((nb, sc, bs), bool)
         steps_used = jnp.zeros((nb,), jnp.int32)
+        seq_steps0 = jnp.zeros((B, nb), jnp.int32)
         nfe = jnp.zeros((), jnp.int32)
 
         if use_cache:
@@ -110,21 +154,28 @@ def make_generate_fn(cfg: ModelConfig, dcfg: DecodeConfig, *,
             cache0 = None
 
         def block_body(b, carry):
-            resp, cache, nfe, conf_rec, val_rec, steps_used = carry
+            resp, cache, nfe, conf_rec, val_rec, steps_used, live, \
+                seq_steps = carry
             start = b * bs
             block0 = jax.lax.dynamic_slice(resp, (jnp.zeros((), jnp.int32),
                                                   start), (B, bs))
             block_start = P + start
+            any_live = jnp.any(live)
 
             if dual:
                 # refresh the whole response region's K/V (suffix cache):
                 # one forward over [resp] against the prompt prefix,
-                # committed at slot P without advancing the length
-                _, cache = M.block_step(params, cfg, resp,
+                # committed at slot P without advancing the length —
+                # skipped outright once no row is live
+                def refresh(cache, nfe):
+                    _, c = M.block_step(params, cfg, resp,
                                         jnp.asarray(P, jnp.int32), cache,
                                         write=True, advance=False,
                                         write_slot=P, attn_impl=attn_impl)
-                nfe = nfe + 1
+                    return c, nfe + 1
+
+                cache, nfe = jax.lax.cond(
+                    any_live, refresh, lambda c, n: (c, n), cache, nfe)
 
             def model_logits(block, full_resp):
                 if dual:
@@ -147,57 +198,91 @@ def make_generate_fn(cfg: ModelConfig, dcfg: DecodeConfig, *,
 
             def cond_fn(st):
                 block, step, *_ = st
-                return (step < sc) & jnp.any(block == mask_id)
+                # only live rows keep the denoising loop alive
+                return (step < sc) & jnp.any((block == mask_id)
+                                             & live[:, None])
 
             def step_fn(st):
-                block, step, resp, nfe, conf_rec, val_rec = st
+                block, step, resp, nfe, conf_rec, val_rec, seq_steps = st
                 logits = model_logits(block, resp)
                 conf, toks = confidence(logits, use_kernel=use_kernel)
                 masked = block == mask_id
-                tau = table[b, jnp.minimum(step, sc - 1)]
+                row_active = live & jnp.any(masked, axis=-1)
+                tau = table[:, b, jnp.minimum(step, sc - 1)]  # [B]
                 unmask = _unmask_choice(conf, toks, block, mask_id, tau,
-                                        quota)
+                                        quota, live)
+                # dead rows flush their masks in whatever step rides along
+                unmask = unmask | (masked & ~live[:, None])
                 new_block = jnp.where(unmask, toks, block)
                 new_resp = jax.lax.dynamic_update_slice(
                     resp, new_block, (jnp.zeros((), jnp.int32), start))
+                # calibration signal: row 0 only, and only while that row
+                # is live — a retired/dead row's ride-along flush step must
+                # not leak garbage confidences into the task's table
+                rec0 = masked[0] & live[0]
                 conf_rec = jax.lax.dynamic_update_slice(
-                    conf_rec, jnp.where(masked[0], conf[0],
-                                        0.0)[None, None, :],
+                    conf_rec, jnp.where(rec0, conf[0], 0.0)[None, None, :],
                     (b, step, jnp.zeros((), jnp.int32)))
                 val_rec = jax.lax.dynamic_update_slice(
-                    val_rec, masked[0][None, None, :],
+                    val_rec, rec0[None, None, :],
                     (b, step, jnp.zeros((), jnp.int32)))
+                seq_steps = seq_steps.at[:, b].add(
+                    row_active.astype(jnp.int32))
                 return (new_block, step + 1, new_resp, nfe + 1, conf_rec,
-                        val_rec)
+                        val_rec, seq_steps)
 
-            block, steps, resp, nfe, conf_rec, val_rec = jax.lax.while_loop(
-                cond_fn, step_fn,
-                (block0, jnp.zeros((), jnp.int32), resp, nfe, conf_rec,
-                 val_rec))
+            block, steps, resp, nfe, conf_rec, val_rec, seq_steps = \
+                jax.lax.while_loop(
+                    cond_fn, step_fn,
+                    (block0, jnp.zeros((), jnp.int32), resp, nfe, conf_rec,
+                     val_rec, seq_steps))
             steps_used = steps_used.at[b].set(steps)
 
+            if track_eos:
+                # rows whose completed prefix contains EOS retire: all
+                # later blocks are skipped for them
+                done = jnp.arange(N, dtype=jnp.int32) < (b + 1) * bs
+                seen = jnp.any((resp == eos_id) & done[None, :], axis=-1)
+                live = live & ~seen
+
             if use_cache and not dual:
-                # commit the finished block's K/V (Fast-dLLM prefix cache)
-                _, cache = M.block_step(params, cfg, block, block_start,
+                # commit the finished block's K/V (Fast-dLLM prefix cache);
+                # pointless — and skipped — once no row remains live
+                def commit(cache, nfe):
+                    _, c = M.block_step(params, cfg, block, block_start,
                                         cache, write=True,
                                         attn_impl=attn_impl)
-                nfe = nfe + 1
-            return (resp, cache, nfe, conf_rec, val_rec, steps_used)
+                    return c, nfe + 1
 
-        carry = (resp, cache0, nfe, conf_rec, val_rec, steps_used)
-        resp, _, nfe, conf_rec, val_rec, steps_used = jax.lax.fori_loop(
-            0, nb, block_body, carry)
-        return GenerateResult(resp, nfe, conf_rec, val_rec, steps_used)
+                cache, nfe = jax.lax.cond(
+                    jnp.any(live), commit, lambda c, n: (c, n), cache, nfe)
+            return (resp, cache, nfe, conf_rec, val_rec, steps_used, live,
+                    seq_steps)
+
+        carry = (resp, cache0, nfe, conf_rec, val_rec, steps_used, live0,
+                 seq_steps0)
+        resp, _, nfe, conf_rec, val_rec, steps_used, live_out, seq_steps = \
+            jax.lax.fori_loop(0, nb, block_body, carry)
+        return GenerateResult(resp, nfe, conf_rec, val_rec, steps_used,
+                              seq_steps, live_out)
 
     return jax.jit(gen)
 
 
-def result_profile(res: GenerateResult) -> CalibrationProfile:
-    """Host-side view of the recorded confidences (Phase-1 output)."""
+def result_profile(res: GenerateResult,
+                   row: Optional[int] = None) -> CalibrationProfile:
+    """Host-side view of the recorded confidences (Phase-1 output).
+
+    ``row``: for a mixed batch, the calibration row's index — its own
+    live step counts become ``steps`` instead of the batch-max while-loop
+    count (``steps_per_block``), which reflects whichever ride-along row
+    denoised slowest. The confidence recording itself is always row 0.
+    """
+    steps = res.steps_per_block if row is None else res.seq_steps[row]
     return CalibrationProfile(
         conf=np.asarray(res.conf),
         valid=np.asarray(res.conf_valid),
-        steps=np.asarray(res.steps_per_block),
+        steps=np.asarray(steps),
     )
 
 

@@ -6,11 +6,19 @@ with metric μ, cap κ, slack ε, and decode every subsequent sequence with it.
 Both phases reuse ONE compiled decode program (the table is a runtime arg),
 so OSDT's overhead is exactly one ordinary generation — the paper's
 "negligible overhead" claim holds structurally.
+
+The calibration state itself lives in a :class:`CalibrationStore` — the
+task → (profile, table) map. It is the *task-level artifact* the paper's
+observation O2 licenses: one calibration amortises over every subsequent
+request of that task, across batches, engine restarts (npz persistence),
+and — via :meth:`CalibrationStore.tables_for` — across *mixed-task* batches
+where every row of one compiled decode call carries its own task's table.
+:class:`OSDTSession` is a thin per-task view over a store, kept for the
+single-task workflow (benchmarks, examples, tests).
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -22,53 +30,167 @@ from repro.core.decoder import (GenerateResult, make_generate_fn,
                                 result_profile)
 
 
-class OSDTSession:
-    """Stateful task session: calibrates on the first request, then serves
-    with the calibrated table."""
+class CalibrationStore:
+    """task → calibration profile + threshold table.
+
+    Tables are host-side float32 ``[num_blocks, steps_cap]`` arrays.
+    Uncalibrated tasks resolve to the Fast-dLLM static table (Phase 1
+    decodes with it; its recording becomes the task's profile).
+    ``save``/``load`` round-trip the whole store through one ``.npz`` so
+    calibration survives process restarts — re-serving a known task after
+    a restart costs zero extra forwards.
+    """
+
+    def __init__(self, dcfg: DecodeConfig):
+        self.dcfg = dcfg
+        self.static = policies.static_table(dcfg)
+        self.profiles: Dict[str, CalibrationProfile] = {}
+        self.tables: Dict[str, np.ndarray] = {}
+
+    # -- queries --------------------------------------------------------
+    def calibrated(self, task: str) -> bool:
+        return task in self.tables
+
+    def tasks(self) -> List[str]:
+        return sorted(self.tables)
+
+    def table(self, task: str) -> np.ndarray:
+        """[nb, steps_cap] — the task's table, or the static fallback."""
+        return self.tables.get(task, self.static)
+
+    def tables_for(self, tasks: Sequence[str]) -> np.ndarray:
+        """Assemble the per-slot table [B, nb, steps_cap] for a mixed
+        batch — one gather, consumed by the decoder as a runtime arg."""
+        return np.stack([self.table(t) for t in tasks]).astype(np.float32)
+
+    # -- updates --------------------------------------------------------
+    def ingest(self, task: str, profile: CalibrationProfile) -> np.ndarray:
+        """One-shot calibration (Phase 1 → table). Returns the table."""
+        tab = build_table(profile, self.dcfg)
+        self.profiles[task] = profile
+        self.tables[task] = tab
+        return tab
+
+    def update_ema(self, task: str, profile: CalibrationProfile,
+                   alpha: float) -> np.ndarray:
+        """Beyond-paper ONLINE variant: EMA the task's table towards the
+        table implied by a fresh profile (zero extra forwards — profiles
+        are recorded during every generation anyway)."""
+        new_tab = build_table(profile, self.dcfg)
+        old = self.tables.get(task)
+        tab = new_tab if old is None else (
+            (1.0 - alpha) * old + alpha * new_tab).astype(np.float32)
+        self.tables[task] = tab
+        return tab
+
+    # -- persistence ----------------------------------------------------
+    @staticmethod
+    def npz_path(path: str) -> str:
+        """np.savez appends '.npz' to bare paths; normalize so save, load,
+        and existence checks all agree on the on-disk name."""
+        return path if path.endswith(".npz") else path + ".npz"
+
+    def save(self, path: str) -> None:
+        path = self.npz_path(path)
+        arrays: Dict[str, np.ndarray] = {
+            "__geometry__": np.asarray(
+                [self.dcfg.num_blocks, self.dcfg.steps_cap,
+                 self.dcfg.block_size], np.int64),
+        }
+        for task, tab in self.tables.items():
+            arrays[f"table::{task}"] = tab
+            prof = self.profiles.get(task)
+            if prof is not None:
+                arrays[f"conf::{task}"] = prof.conf
+                arrays[f"valid::{task}"] = prof.valid
+                arrays[f"steps::{task}"] = prof.steps
+        np.savez(path, **arrays)
+
+    @classmethod
+    def load(cls, path: str, dcfg: DecodeConfig) -> "CalibrationStore":
+        store = cls(dcfg)
+        with np.load(cls.npz_path(path)) as z:
+            geom = z["__geometry__"]
+            assert (int(geom[0]), int(geom[1]), int(geom[2])) == (
+                dcfg.num_blocks, dcfg.steps_cap, dcfg.block_size), (
+                "calibration store saved with a different block geometry")
+            for key in z.files:
+                if not key.startswith("table::"):
+                    continue
+                task = key[len("table::"):]
+                store.tables[task] = z[key].astype(np.float32)
+                if f"conf::{task}" in z.files:
+                    store.profiles[task] = CalibrationProfile(
+                        conf=z[f"conf::{task}"],
+                        valid=z[f"valid::{task}"],
+                        steps=z[f"steps::{task}"])
+        return store
+
+
+class TaskView:
+    """Read-only per-task view over a :class:`CalibrationStore` — the
+    inspection surface the serving engine hands out per task."""
+
+    def __init__(self, store: CalibrationStore, task: str):
+        self.store = store
+        self.task = task
+
+    @property
+    def calibrated(self) -> bool:
+        return self.store.calibrated(self.task)
+
+    @property
+    def table(self) -> Optional[np.ndarray]:
+        return self.store.tables.get(self.task)
+
+    @property
+    def profile(self) -> Optional[CalibrationProfile]:
+        return self.store.profiles.get(self.task)
+
+
+class OSDTSession(TaskView):
+    """Stateful per-task view over a :class:`CalibrationStore`: calibrates
+    on the first request, then serves with the calibrated table."""
 
     def __init__(self, params, cfg: ModelConfig, dcfg: DecodeConfig,
                  mask_id: int, *, use_cache: bool = True,
-                 online_ema: float = 0.0, attn_impl: str = ""):
+                 online_ema: float = 0.0, attn_impl: str = "",
+                 store: Optional[CalibrationStore] = None,
+                 task: str = "default", gen_fn=None):
         """``online_ema`` > 0 enables the beyond-paper ONLINE variant: after
         each Phase-2 generation the threshold table is EMA-updated from that
         generation's own confidence profile (tau <- (1-a)*tau + a*tau_new).
         The paper calibrates once and freezes; the online variant tracks
         drift within a task at zero extra forwards (profiles are recorded
-        anyway). a=0 reproduces the paper exactly."""
+        anyway). a=0 reproduces the paper exactly.
+
+        ``store``/``task`` bind the session to a shared store (serving:
+        many sessions, one store, one compiled program via ``gen_fn``);
+        by default each session owns a private single-task store.
+        """
+        super().__init__(store if store is not None
+                         else CalibrationStore(dcfg), task)
         self.params = params
         self.cfg = cfg
         self.dcfg = dcfg
         self.mask_id = jnp.asarray(mask_id, jnp.int32)
         self.online_ema = online_ema
-        self._gen = make_generate_fn(cfg, dcfg, use_cache=use_cache,
-                                     attn_impl=attn_impl)
-        # Phase-1 decodes with the static baseline table
-        self._static_table = jnp.asarray(
-            policies.static_table(dcfg))
-        self.table: Optional[jnp.ndarray] = None
-        self.profile: Optional[CalibrationProfile] = None
+        self._gen = gen_fn if gen_fn is not None else make_generate_fn(
+            cfg, dcfg, use_cache=use_cache, attn_impl=attn_impl)
         self.total_nfe = 0
         self.total_tokens = 0
 
-    @property
-    def calibrated(self) -> bool:
-        return self.table is not None
-
     def generate(self, prompt) -> GenerateResult:
         """prompt: [B, P] int32. The first call calibrates (Phase 1)."""
-        if not self.calibrated:
-            res = self._gen(self.params, prompt, self._static_table,
-                            self.mask_id)
-            self.profile = result_profile(res)
-            self.table = jnp.asarray(build_table(self.profile, self.dcfg))
-        else:
-            res = self._gen(self.params, prompt, self.table, self.mask_id)
-            if self.online_ema > 0.0:
-                prof = result_profile(res)
-                if prof.valid.any():
-                    new_tab = build_table(prof, self.dcfg)
-                    a = self.online_ema
-                    self.table = (1.0 - a) * self.table + a *                         jnp.asarray(new_tab)
+        first = not self.calibrated
+        tab = jnp.asarray(self.store.table(self.task))
+        res = self._gen(self.params, prompt, tab, self.mask_id)
+        if first:
+            self.store.ingest(self.task, result_profile(res))
+        elif self.online_ema > 0.0:
+            prof = result_profile(res)
+            if prof.valid.any():
+                self.store.update_ema(self.task, prof, self.online_ema)
         self.total_nfe += int(res.nfe)
         self.total_tokens += int(np.prod(res.tokens.shape))
         return res

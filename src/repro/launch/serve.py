@@ -11,7 +11,7 @@ import jax
 import numpy as np
 
 from repro.checkpoint.checkpoint import restore
-from repro.config.base import DecodeConfig
+from repro.config.base import DecodeConfig, EngineConfig
 from repro.data import tokenizer as tok
 from repro.data.tasks import TASKS
 from repro.models import model as M
@@ -28,6 +28,11 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--block", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=64)
+    ap.add_argument("--cache-mode", default="prefix",
+                    choices=["prefix", "dual", "none"])
+    ap.add_argument("--store", default="",
+                    help="npz path persisting per-task calibration across "
+                         "restarts (SERVING.md)")
     args = ap.parse_args()
 
     from benchmarks.common import bench_config
@@ -39,8 +44,9 @@ def main() -> None:
     dcfg = DecodeConfig(max_new_tokens=args.max_new, block_size=args.block,
                         policy=args.policy, threshold=0.9, mode="block",
                         metric="q1", cap=0.9, slack=0.1)
-    engine = DiffusionEngine(params, cfg, dcfg, batch_size=args.batch,
-                             prompt_len=64)
+    ecfg = EngineConfig(batch_size=args.batch, prompt_len=64,
+                        cache_mode=args.cache_mode, store_path=args.store)
+    engine = DiffusionEngine(params, cfg, dcfg, ecfg=ecfg)
     rng = np.random.default_rng(0)
     samples = TASKS[args.task].make(rng, args.n)
     reqs = [Request(i, args.task, s.prompt) for i, s in enumerate(samples)]

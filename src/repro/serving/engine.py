@@ -1,123 +1,85 @@
-"""Batched diffusion serving engine with per-task OSDT sessions.
+"""Diffusion serving engine — a thin facade over the continuous-batching
+scheduler (``repro.serving.scheduler``, SERVING.md).
 
-Requests carry a ``task`` tag; the engine keeps one OSDT session (and hence
-one calibration profile) per task — the paper's observation O2 says the
-confidence signature is a *task-level* property, so this is the natural
-serving granularity. Requests are grouped by task, padded into fixed
-[batch_size, prompt_len] batches (one compiled program per engine), decoded,
-and detokenised.
+Requests carry a ``task`` tag; the engine keeps ONE
+:class:`~repro.core.osdt.CalibrationStore` (task → calibrated threshold
+table — the paper's observation O2 says the confidence signature is a
+*task-level* property) and ONE compiled decode program. Mixed-task batches
+are the normal case: each slot's table is gathered per row at runtime.
 
-Throughput accounting: NFE (model forwards — the hardware-independent
-driver) and wall-clock tokens/s on this host.
+``submit()`` is the synchronous compatibility surface: enqueue, drain, and
+return responses in uid order. Callers that want batch-granularity control
+(admit/step/retire, per-batch stats) should drive the scheduler directly.
+
+Throughput accounting (``EngineStats``): NFE (model forwards — the
+hardware-independent driver), *delivered* tokens (post-EOS truncation; a
+request that stops early is not credited ``max_new_tokens``), and
+per-request wall = its own queue wait + its batch's decode wall.
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
-import jax.numpy as jnp
-import numpy as np
-
-from repro.config.base import DecodeConfig, ModelConfig
-from repro.core.osdt import OSDTSession
+from repro.config.base import DecodeConfig, EngineConfig, ModelConfig
+from repro.core.osdt import CalibrationStore, TaskView
 from repro.data import tokenizer as tok
+from repro.serving.scheduler import (EngineStats, Request, Response,
+                                     Scheduler)
 
-@dataclass
-class Request:
-    uid: int
-    task: str
-    prompt: str
-
-
-@dataclass
-class Response:
-    uid: int
-    task: str
-    text: str
-    nfe: int
-    wall_s: float
-
-
-@dataclass
-class EngineStats:
-    requests: int = 0
-    tokens: int = 0
-    nfe: int = 0
-    wall_s: float = 0.0
-
-    @property
-    def tokens_per_s(self) -> float:
-        return self.tokens / self.wall_s if self.wall_s else 0.0
-
-    @property
-    def tokens_per_nfe(self) -> float:
-        return self.tokens / self.nfe if self.nfe else 0.0
+__all__ = ["DiffusionEngine", "EngineStats", "Request", "Response",
+           "TaskView"]
 
 
 class DiffusionEngine:
     def __init__(self, params, cfg: ModelConfig, dcfg: DecodeConfig, *,
                  batch_size: int = 4, prompt_len: int = 64,
                  use_cache: bool = True, mask_id: int = tok.MASK_ID,
-                 attn_impl: str = ""):
-        """``attn_impl`` forces the block-step attention path for every
-        session (auto | dense | flash | kernel — see KERNELS.md); empty
-        keeps ``dcfg.attn_impl`` (default "auto"). Pass "kernel" when
-        serving on TPU: the Pallas block kernel skips dead cache tiles
-        entirely."""
+                 eos_id: int = tok.EOS_ID, attn_impl: str = "",
+                 ecfg: Optional[EngineConfig] = None,
+                 store: Optional[CalibrationStore] = None):
+        """``ecfg`` carries the scheduler knobs (cache mode, EOS early
+        exit, calibration persistence — see ``EngineConfig``); when absent
+        one is assembled from the legacy keyword args (batch_size /
+        prompt_len / use_cache / attn_impl), which must stay at their
+        defaults when ``ecfg`` is given — mixing the two would silently
+        drop the legacy values. ``attn_impl`` forces the block-step
+        attention path (auto | dense | flash | kernel — KERNELS.md); pass
+        "kernel" when serving on TPU."""
+        if ecfg is None:
+            ecfg = EngineConfig(batch_size=batch_size,
+                                prompt_len=prompt_len,
+                                cache_mode="prefix" if use_cache else "none",
+                                attn_impl=attn_impl)
+        else:
+            assert (batch_size, prompt_len, use_cache, attn_impl) == \
+                (4, 64, True, ""), \
+                "pass serving knobs via EngineConfig when ecfg is given"
         self.params = params
         self.cfg = cfg
         self.dcfg = dcfg
-        self.batch_size = batch_size
-        self.prompt_len = prompt_len
-        self.use_cache = use_cache
-        self.mask_id = mask_id
-        self.attn_impl = attn_impl
-        self.sessions: Dict[str, OSDTSession] = {}
-        self.stats = EngineStats()
+        self.ecfg = ecfg
+        self.scheduler = Scheduler(params, cfg, dcfg, ecfg=ecfg,
+                                   store=store, mask_id=mask_id,
+                                   eos_id=eos_id)
 
-    def _session(self, task: str) -> OSDTSession:
-        if task not in self.sessions:
-            self.sessions[task] = OSDTSession(
-                self.params, self.cfg, self.dcfg, self.mask_id,
-                use_cache=self.use_cache, attn_impl=self.attn_impl)
-        return self.sessions[task]
+    # -- compat / convenience surface -----------------------------------
+    @property
+    def store(self) -> CalibrationStore:
+        return self.scheduler.store
+
+    @property
+    def stats(self) -> EngineStats:
+        return self.scheduler.stats
+
+    @property
+    def sessions(self) -> Dict[str, TaskView]:
+        """task → read-only calibration view, for every task ever admitted."""
+        return {t: TaskView(self.store, t)
+                for t in self.scheduler.seen_tasks}
 
     def submit(self, requests: List[Request]) -> List[Response]:
-        by_task: Dict[str, List[Request]] = {}
-        for r in requests:
-            by_task.setdefault(r.task, []).append(r)
-        out: List[Response] = []
-        for task, reqs in by_task.items():
-            sess = self._session(task)
-            for i in range(0, len(reqs), self.batch_size):
-                chunk = reqs[i:i + self.batch_size]
-                out.extend(self._run_batch(sess, chunk))
+        """Synchronous drain: enqueue, run to completion, uid order."""
+        self.scheduler.submit(requests)
+        out = self.scheduler.run()
         out.sort(key=lambda r: r.uid)
         return out
-
-    def _run_batch(self, sess: OSDTSession, reqs: List[Request]
-                   ) -> List[Response]:
-        ids = [tok.encode(r.prompt, bos=True)[-self.prompt_len:]
-               for r in reqs]
-        # pad the batch dim by repeating the last prompt (fixed shapes)
-        while len(ids) < self.batch_size:
-            ids.append(ids[-1])
-        prompt = jnp.asarray(tok.batch_prompts(ids, self.prompt_len))
-        t0 = time.perf_counter()
-        res = sess.generate(prompt)
-        tokens = np.asarray(res.tokens)
-        wall = time.perf_counter() - t0
-        nfe = int(res.nfe)
-        n_gen = tokens.shape[1] * len(reqs)
-        self.stats.requests += len(reqs)
-        self.stats.tokens += n_gen
-        self.stats.nfe += nfe
-        self.stats.wall_s += wall
-        resp = []
-        for j, r in enumerate(reqs):
-            row = tokens[j].tolist()
-            if tok.EOS_ID in row:
-                row = row[:row.index(tok.EOS_ID)]
-            resp.append(Response(r.uid, r.task, tok.decode(row), nfe, wall))
-        return resp

@@ -1,0 +1,272 @@
+"""Slot-based continuous-batching scheduler for diffusion decoding.
+
+The decode program is compiled ONCE per engine (fixed ``[batch_size,
+prompt_len]`` shapes); everything that varies per request rides as runtime
+arguments — the per-slot threshold table ``[B, nb, steps_cap]`` gathered
+from the :class:`~repro.core.osdt.CalibrationStore`, the per-slot ``live``
+mask, and the EOS id. That is what lets a *mixed-task* request stream share
+one executable: OSDT's table is a task-level artifact, and here every row
+of a batch may belong to a different task.
+
+Lifecycle (SERVING.md):
+
+  QUEUED --admit--> ACTIVE --decode--> RETIRED (response emitted)
+                 \\-> slots with no request are admitted DEAD: mask-only
+                     prompt rows with ``live=False`` that cost ~zero
+                     denoising steps (the decoder's step loop and
+                     commit/refresh forwards are live-row-aware).
+
+Batch filling is task-affinity-aware only where calibration demands it:
+calibrated tasks mix freely, but at most ONE *uncalibrated* task is
+admitted per batch, its first request pinned to slot 0 — the decoder
+records the confidence profile of row 0, so that row becomes the task's
+one-shot calibration (paper Algorithm 1). Requests of other uncalibrated
+tasks wait for a later batch (lifting this needs all-row profile
+recording — ROADMAP "parallel calibration").
+"""
+from __future__ import annotations
+
+import os
+import time
+from collections import deque
+from dataclasses import dataclass
+from typing import Deque, Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.base import DecodeConfig, EngineConfig, ModelConfig
+from repro.core.decoder import make_generate_fn, result_profile
+from repro.core.osdt import CalibrationStore
+from repro.data import tokenizer as tok
+
+DEAD_TASK = "__dead__"  # pseudo-task of pad slots (resolves to the static table)
+
+
+@dataclass
+class Request:
+    uid: int
+    task: str
+    prompt: str
+
+
+@dataclass
+class Response:
+    uid: int
+    task: str
+    text: str
+    nfe: int          # denoising forwards THIS row needed (its seq_steps)
+    wall_s: float     # queue wait + decode wall of the row's batch
+    queue_s: float = 0.0
+    decode_s: float = 0.0
+    tokens_out: int = 0   # tokens delivered after EOS truncation
+    tokens_dropped: int = 0  # generated but cut at EOS / never unmasked
+
+
+@dataclass
+class RequestState:
+    req: Request
+    t_submit: float
+    t_admit: float = 0.0
+    slot: int = -1
+
+
+@dataclass
+class Slot:
+    """One row of the decode batch. ``state``: free | active | dead."""
+    index: int
+    state: str = "free"
+    rs: Optional[RequestState] = None
+
+    def admit(self, rs: Optional[RequestState]) -> None:
+        self.rs = rs
+        self.state = "active" if rs is not None else "dead"
+        if rs is not None:
+            rs.slot = self.index
+
+    def retire(self) -> None:
+        self.rs = None
+        self.state = "free"
+
+
+@dataclass
+class EngineStats:
+    requests: int = 0
+    tokens: int = 0          # delivered tokens (post-EOS truncation)
+    tokens_dropped: int = 0  # generated-but-truncated tokens
+    nfe: int = 0             # model forwards across all batches
+    wall_s: float = 0.0      # sum of batch decode walls
+    queue_s: float = 0.0     # sum of per-request queue waits
+    batches: int = 0
+    dead_slots: int = 0
+    seq_steps: int = 0       # sum of per-row live denoising steps
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.tokens / self.wall_s if self.wall_s else 0.0
+
+    @property
+    def tokens_per_nfe(self) -> float:
+        return self.tokens / self.nfe if self.nfe else 0.0
+
+
+class Scheduler:
+    """Request queue + slot pool + one compiled decode program.
+
+    ``step()`` admits up to ``batch_size`` queued requests into slots,
+    decodes one batch, retires every slot, and returns the responses.
+    ``run()`` drains the queue. Unfilled slots are admitted DEAD.
+    """
+
+    def __init__(self, params, cfg: ModelConfig, dcfg: DecodeConfig, *,
+                 ecfg: Optional[EngineConfig] = None,
+                 store: Optional[CalibrationStore] = None,
+                 mask_id: int = tok.MASK_ID, eos_id: int = tok.EOS_ID):
+        self.params = params
+        self.cfg = cfg
+        self.dcfg = dcfg
+        self.ecfg = ecfg if ecfg is not None else EngineConfig()
+        mode = self.ecfg.resolved_cache_mode()
+        if store is not None:
+            # an explicitly passed store wins over any on-disk npz (which
+            # the next calibration's save() will then overwrite)
+            self.store = store
+        elif self.ecfg.store_path and os.path.exists(
+                CalibrationStore.npz_path(self.ecfg.store_path)):
+            self.store = CalibrationStore.load(self.ecfg.store_path, dcfg)
+        else:
+            self.store = CalibrationStore(dcfg)
+        self.mask_id = int(mask_id)
+        self.eos_id = int(eos_id)
+        self._mask_arr = jnp.asarray(mask_id, jnp.int32)
+        self._gen = make_generate_fn(cfg, dcfg, cache_mode=mode,
+                                     attn_impl=self.ecfg.attn_impl)
+        self.queue: Deque[RequestState] = deque()
+        self.slots = [Slot(i) for i in range(self.ecfg.batch_size)]
+        self.stats = EngineStats()
+        self.seen_tasks: Dict[str, int] = {}  # task -> requests admitted
+
+    # -- queue ----------------------------------------------------------
+    def submit(self, requests: List[Request]) -> None:
+        now = time.perf_counter()
+        for r in requests:
+            self.queue.append(RequestState(r, now))
+
+    def pending(self) -> int:
+        return len(self.queue)
+
+    # -- batch formation ------------------------------------------------
+    def _fill(self) -> Tuple[List[RequestState], Optional[str]]:
+        """Pop admissible requests (FIFO, task-affinity-aware).
+
+        Returns (picked, calib_task). ``picked[0]`` is the calibration
+        request when ``calib_task`` is not None.
+        """
+        B = self.ecfg.batch_size
+        picked: List[RequestState] = []
+        deferred: List[RequestState] = []
+        calib_task: Optional[str] = None
+        while self.queue and len(picked) < B:
+            rs = self.queue.popleft()
+            t = rs.req.task
+            if self.store.calibrated(t) or t == calib_task:
+                # calibrated tasks mix freely; extra requests of the
+                # admitted-new task ride along (decoded with the static
+                # table this batch; only slot 0 records a profile)
+                picked.append(rs)
+            elif calib_task is None:
+                calib_task = t
+                picked.insert(0, rs)  # pin to slot 0 (the recorded row)
+            else:
+                # a second uncalibrated task waits for a later batch —
+                # only row 0 is recorded, so admitting it now would serve
+                # it uncalibrated without ever calibrating it
+                deferred.append(rs)
+        for rs in reversed(deferred):
+            self.queue.appendleft(rs)
+        return picked, calib_task
+
+    # -- decode ---------------------------------------------------------
+    def step(self) -> List[Response]:
+        picked, calib_task = self._fill()
+        if not picked:
+            return []
+        P = self.ecfg.prompt_len
+        now = time.perf_counter()
+        for slot, rs in zip(self.slots, picked):
+            rs.t_admit = now
+            slot.admit(rs)
+            self.seen_tasks[rs.req.task] = \
+                self.seen_tasks.get(rs.req.task, 0) + 1
+        for slot in self.slots[len(picked):]:
+            slot.admit(None)  # explicit dead slot
+
+        # the slot pool is the source of truth for the batch's runtime
+        # arguments: prompt rows, liveness, and the per-slot table gather
+        rows, tasks = [], []
+        for slot in self.slots:
+            if slot.state == "active":
+                ids = tok.encode(slot.rs.req.prompt, bos=True)[-P:]
+                rows.append(tok.pad_left(ids, P))
+                tasks.append(slot.rs.req.task)
+            else:  # dead slot: mask-only prompt row, live=False
+                rows.append([self.mask_id] * P)
+                tasks.append(DEAD_TASK)
+        prompt = np.asarray(rows, np.int32)
+        live = np.asarray([s.state == "active" for s in self.slots])
+        n_dead = int((~live).sum())
+        tables = self.store.tables_for(tasks)
+
+        t0 = time.perf_counter()
+        res = self._gen(self.params, jnp.asarray(prompt),
+                        jnp.asarray(tables), self._mask_arr,
+                        jnp.asarray(live),
+                        self.eos_id if self.ecfg.eos_early_exit else None)
+        tokens = np.asarray(res.tokens)  # blocks until ready
+        decode_s = time.perf_counter() - t0
+
+        if calib_task is not None:
+            # row=0: the pinned calibration row's own step counts (not the
+            # batch-max, which other tasks' ride-along rows determine)
+            self.store.ingest(calib_task, result_profile(res, row=0))
+            if self.ecfg.store_path:
+                self.store.save(self.ecfg.store_path)
+
+        seq_steps = np.asarray(res.seq_steps)
+        out: List[Response] = []
+        for slot in self.slots:
+            if slot.rs is None:
+                continue
+            j, rs = slot.index, slot.rs
+            row = tokens[j].tolist()
+            if self.eos_id in row:
+                row = row[:row.index(self.eos_id)]
+            row = [t for t in row if t != self.mask_id]
+            queue_s = rs.t_admit - rs.t_submit
+            steps = int(seq_steps[j].sum())
+            out.append(Response(
+                rs.req.uid, rs.req.task, tok.decode(row),
+                nfe=steps, wall_s=queue_s + decode_s, queue_s=queue_s,
+                decode_s=decode_s, tokens_out=len(row),
+                tokens_dropped=tokens.shape[1] - len(row)))
+            self.stats.tokens += len(row)
+            self.stats.tokens_dropped += tokens.shape[1] - len(row)
+            self.stats.queue_s += queue_s
+            self.stats.seq_steps += steps
+        self.stats.requests += len(picked)
+        self.stats.nfe += int(res.nfe)
+        self.stats.wall_s += decode_s
+        self.stats.batches += 1
+        self.stats.dead_slots += n_dead
+        for slot in self.slots:
+            slot.retire()
+        return out
+
+    def run(self) -> List[Response]:
+        out: List[Response] = []
+        while self.queue:
+            got = self.step()
+            if not got:  # nothing admissible (should not happen)
+                break
+            out.extend(got)
+        return out
