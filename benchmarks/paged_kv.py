@@ -1,0 +1,135 @@
+"""Paged vs dense KV cache under a shared-system-prompt serving load.
+
+The scenario ROADMAP's "Paged / shared-prefix KV" item names: >= 8 slots
+all carrying one common system prompt. The dense layout prefills and
+stores that prefix PER SLOT and every slot owns a full [max_len] cache
+row whether its request is short, retired, or the slot is dead; the paged
+layout prefills the prefix ONCE into refcounted shared pages, maps them
+into every slot's page table, and gives dead slots zero pages.
+
+Reported per layout:
+  * KV memory per slot — dense: the full per-row buffer slice; paged:
+    peak allocated pages / batch rows (shared pages amortise, dead slots
+    pin nothing).
+  * tokens/s and task accuracy over the same request stream (same
+    prompts: the scheduler prepends the shared prefix under both
+    layouts) with identical pre-calibrated tables. NOTE the paged run
+    encodes each row's prompt REMAINDER against the shared pages
+    (Fast-dLLM prefix-cache semantics) while dense re-prefills the whole
+    prompt bidirectionally per row — outputs are equivalent in quality,
+    not bit-identical (bit-identity holds at shared_prefix="" and is
+    enforced by tests/test_paged_cache.py).
+
+  REPRO_PAGED_BENCH_REQS=8 PYTHONPATH=src:. python -m benchmarks.run paged_kv
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks import common
+from repro.config.base import DecodeConfig, EngineConfig
+from repro.serving.engine import DiffusionEngine, Request
+from repro.serving.scheduler import Scheduler
+
+N_REQS = int(os.environ.get("REPRO_PAGED_BENCH_REQS", "24"))
+BATCH = 8          # >= 8 slots sharing one system prompt
+PAGE = 8
+PROMPT_LEN = 96    # shared prefix (56 tok) + room for the task prompt
+SHARED = "SYSTEM: you are a terse assistant. answer with one short line. "
+TASKS_USED = ("gpqa-syn", "humaneval-syn")
+
+
+def _dcfg(layout: str) -> DecodeConfig:
+    return common.default_dcfg(cache_layout=layout, page_size=PAGE)
+
+
+def _stream():
+    rng = np.random.default_rng(11)
+    reqs, gold = [], {}
+    for i in range(N_REQS):
+        task = TASKS_USED[i % len(TASKS_USED)]
+        s = common.TASKS[task].make(rng, 1)[0]
+        reqs.append(Request(i, task, s.prompt))
+        gold[i] = (task, s)
+    return reqs, gold
+
+
+def _accuracy(out, gold) -> float:
+    hits = [common.TASKS[gold[r.uid][0]].score(r.text, gold[r.uid][1])
+            for r in out]
+    return float(np.mean(hits)) if hits else 0.0
+
+
+def _run(params, cfg, layout: str, store_tables):
+    dcfg = _dcfg(layout)
+    ecfg = EngineConfig(batch_size=BATCH, prompt_len=PROMPT_LEN,
+                        shared_prefix=SHARED)
+    eng = DiffusionEngine(params, cfg, dcfg, ecfg=ecfg)
+    eng.store.tables.update(store_tables)
+    reqs, gold = _stream()
+    t0 = time.perf_counter()
+    out = eng.submit(reqs)
+    wall = time.perf_counter() - t0
+    return eng, out, wall, gold
+
+
+def _kv_bytes_per_slot(cfg, sched: Scheduler, dcfg: DecodeConfig) -> int:
+    """Peak cache HBM attributable to one slot (k + v, all layers)."""
+    L, Kh, D = cfg.num_layers, cfg.num_kv_heads, cfg.resolved_head_dim
+    itemsize = 2 if cfg.dtype == "bfloat16" else 4
+    row = 2 * L * Kh * D * itemsize
+    max_len = PROMPT_LEN + dcfg.max_new_tokens
+    if sched.paged:
+        return row * dcfg.page_size * sched.stats.pages_peak // BATCH
+    return row * max_len  # every row owns the full buffer slice
+
+
+def run(csv_rows: List[str], verbose: bool = True) -> None:
+    cfg, params = common.get_model(verbose=verbose)
+
+    # calibrate once (dense) and hand BOTH runtimes the same tables so
+    # the comparison is pure cache-layout runtime
+    calib = DiffusionEngine(
+        params, cfg, _dcfg("dense"),
+        ecfg=EngineConfig(batch_size=BATCH, prompt_len=PROMPT_LEN,
+                          shared_prefix=SHARED))
+    calib.submit(_stream()[0][: len(TASKS_USED)])
+    tables = dict(calib.store.tables)
+
+    _run(params, cfg, "dense", tables)   # warm-up (compile)
+    eng_d, out_d, wall_d, gold = _run(params, cfg, "dense", tables)
+    _run(params, cfg, "paged", tables)   # warm-up (compile)
+    eng_p, out_p, wall_p, _ = _run(params, cfg, "paged", tables)
+
+    st_d, st_p = eng_d.stats, eng_p.stats
+    mem_d = _kv_bytes_per_slot(cfg, eng_d.scheduler, _dcfg("dense"))
+    mem_p = _kv_bytes_per_slot(cfg, eng_p.scheduler, _dcfg("paged"))
+    tps_d = st_d.tokens / wall_d
+    tps_p = st_p.tokens / wall_p
+
+    base = (f"paged_kv/shared{BATCH}/dense,"
+            f"{wall_d / max(st_d.tokens, 1) * 1e6:.2f},"
+            f"kv_bytes_per_slot={mem_d};tok={st_d.tokens};"
+            f"tok_per_s={tps_d:.1f};nfe={st_d.nfe};"
+            f"acc={_accuracy(out_d, gold):.2f}")
+    paged = (f"paged_kv/shared{BATCH}/paged,"
+             f"{wall_p / max(st_p.tokens, 1) * 1e6:.2f},"
+             f"kv_bytes_per_slot={mem_p};tok={st_p.tokens};"
+             f"tok_per_s={tps_p:.1f};nfe={st_p.nfe};"
+             f"acc={_accuracy(out_p, gold):.2f};"
+             f"mem_ratio={mem_d / max(mem_p, 1):.2f};"
+             f"pages_peak={st_p.pages_peak}/{st_p.page_capacity};"
+             f"pages_shared={st_p.pages_shared};"
+             f"speedup={tps_p / tps_d:.2f}")
+    for row in (base, paged):
+        csv_rows.append(row)
+        if verbose:
+            print(row)
+
+
+if __name__ == "__main__":
+    run([])

@@ -1,15 +1,20 @@
 """Continuous-batching serving with per-slot OSDT tables (SERVING.md).
 
-    PYTHONPATH=src:. python examples/serve_osdt.py
+    PYTHONPATH=src:. python examples/serve_osdt.py [--paged]
 
 Simulates a mixed request stream across three tasks. The engine keeps ONE
-calibration store and ONE compiled decode program; each task calibrates on
-its first request (pinned to slot 0 of its batch — the task-level
-confidence signature, paper §2) and every later batch mixes tasks freely:
-the per-slot threshold table is gathered at runtime. Rows retire at EOS,
-so short answers stop costing denoising steps. Prints per-task accuracy +
-throughput accounting and the per-request queue/decode split.
+calibration store and ONE compiled decode program; every task calibrates
+on its first admitted request (all rows record profiles, so several new
+tasks calibrate inside one mixed batch) and every batch mixes tasks
+freely: the per-slot threshold table is gathered at runtime. Rows retire
+at EOS, so short answers stop costing denoising steps. With ``--paged``
+the KV cache is a page pool: a shared system prompt is prefilled once
+into refcounted pages, dead slots pin zero pages, and retirement reclaims
+pages for the next batch. Prints per-task accuracy + throughput
+accounting, the per-request queue/decode split, and page occupancy.
 """
+import sys
+
 import numpy as np
 
 from benchmarks import common
@@ -19,12 +24,16 @@ from repro.serving.engine import DiffusionEngine, Request
 
 
 def main() -> None:
+    paged = "--paged" in sys.argv
     cfg, params = common.get_model()
     dcfg = DecodeConfig(max_new_tokens=32, block_size=8, policy="osdt",
                         mode="block", metric="q1", cap=0.8, slack=0.15,
-                        threshold=0.9)
+                        threshold=0.9,
+                        cache_layout="paged" if paged else "dense",
+                        page_size=8)
     ecfg = EngineConfig(batch_size=4, prompt_len=64, cache_mode="prefix",
-                        eos_early_exit=True)
+                        eos_early_exit=True,
+                        shared_prefix="answer briefly. " if paged else "")
     engine = DiffusionEngine(params, cfg, dcfg, ecfg=ecfg)
 
     rng = np.random.default_rng(3)
@@ -57,6 +66,10 @@ def main() -> None:
     print(f"per-request: queue {np.mean(q)*1e3:.1f}ms avg / "
           f"{np.max(q)*1e3:.1f}ms max, decode {np.mean(d)*1e3:.1f}ms avg, "
           f"row steps {np.mean(steps):.1f} avg / {np.max(steps)} max")
+    if st.page_capacity:
+        print(f"pages: capacity={st.page_capacity} peak={st.pages_peak} "
+              f"({st.page_util:.0%}) shared={st.pages_shared} "
+              f"freed={st.pages_freed}")
 
 
 if __name__ == "__main__":

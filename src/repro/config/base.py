@@ -211,6 +211,13 @@ class DecodeConfig:
     #   kernel — fused Pallas block-attention kernel on TPU, the length-
     #            aware flash path elsewhere
     attn_impl: str = "auto"
+    # KV-cache layout (SERVING.md "Paged KV"):
+    #   dense — every batch row owns a [T, Kh, D] buffer slice (the oracle)
+    #   paged — rows map logical pages onto a global page pool through
+    #           per-slot int32 page tables; dead rows pin zero pages and a
+    #           shared system-prompt prefix is stored once (refcounted)
+    cache_layout: str = "dense"
+    page_size: int = 16           # cache slots per page (kernel wants >= 8)
 
     @property
     def num_blocks(self) -> int:
@@ -220,6 +227,10 @@ class DecodeConfig:
     @property
     def steps_cap(self) -> int:
         return self.max_steps_per_block or self.block_size
+
+    def pages_per_seq(self, max_len: int) -> int:
+        """Logical pages covering a ``max_len``-slot cache row."""
+        return -(-max_len // self.page_size)
 
 
 @dataclass(frozen=True)
@@ -242,6 +253,14 @@ class EngineConfig:
     # engine construction when no store is passed explicitly, saved after
     # every new calibration
     store_path: str = ""
+    # paged layout (DecodeConfig.cache_layout == "paged"):
+    # total pool pages; 0 -> auto-size (shared pages + batch_size rows)
+    num_pages: int = 0
+    # common system prompt prepended to every request's prompt; with the
+    # paged layout its KV pages are prefilled ONCE and refcount-mapped
+    # into every slot (the effective shared length rounds down to a page
+    # multiple so decode writes never touch a shared page)
+    shared_prefix: str = ""
 
     def resolved_cache_mode(self) -> str:
         assert self.cache_mode in ("prefix", "dual", "none"), self.cache_mode

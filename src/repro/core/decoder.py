@@ -18,9 +18,10 @@ Unmasking rules per step (all shapes static; decisions are boolean masks):
                confidence > table[block, step]; if none clears it, the
                single most-confident masked position (Algorithm 1 l.19-21).
 
-Always records the calibration signal (conf of masked positions of batch
-element 0 per (block, step)) — it is tiny and makes every run usable as a
-calibration run.
+Always records the calibration signal (conf of masked positions of EVERY
+live batch row per (block, step)) — ``[B, nb, steps_cap, block_size]`` is
+tiny at serving block sizes and lets the scheduler calibrate several new
+tasks inside one mixed batch (one recorded row each).
 """
 from __future__ import annotations
 
@@ -42,8 +43,8 @@ Array = jax.Array
 class GenerateResult(NamedTuple):
     tokens: Array        # [B, max_new_tokens]
     nfe: Array           # [] int32 — model forwards executed
-    conf: Array          # [nb, steps_cap, block_size] float32
-    conf_valid: Array    # same, bool
+    conf: Array          # [B, nb, steps_cap, block_size] float32
+    conf_valid: Array    # same, bool (False once a row retires/dies)
     steps_per_block: Array  # [nb] int32 — batch-max steps per block
     seq_steps: Array     # [B, nb] int32 — steps each row was live+masked
     live: Array          # [B] bool — row still live at exit (no EOS seen)
@@ -75,11 +76,22 @@ def _unmask_choice(conf: Array, toks: Array, block: Array, mask_id: Array,
 def make_generate_fn(cfg: ModelConfig, dcfg: DecodeConfig, *,
                      use_cache: bool = True, quota: int = 0,
                      use_kernel: bool = False, cache_mode: str = "",
-                     attn_impl: str = ""):
+                     attn_impl: str = "", cache_layout: str = "",
+                     shared_prefix_len: int = 0):
     """Build (or fetch) the jitted generate function.
 
     fn(params, prompt [B, P] int32, table, mask_id [],
        live [B] bool = None, eos_id [] = None) -> GenerateResult
+
+    With the PAGED cache layout three trailing runtime args are added:
+    fn(..., pool_k, pool_v, page_table) where pool_k/v
+    [L, num_pages, page_size, Kh, D] is the engine-owned page pool and
+    page_table [B, n_log] maps each row's logical pages onto it (-1 =
+    unmapped; dead rows pin zero pages). The pool is read (and its
+    updated copy used internally) but NOT returned — decode only ever
+    writes pages that are private to this batch's rows, so the caller's
+    pool keeps exactly its pre-call contents (shared-prefix pages
+    survive by construction: copy-on-write boundaries are page-aligned).
 
     ``table`` is the threshold table — per-slot [B, nb, steps_cap]
     (continuous-batching: every row may carry a different task's
@@ -105,6 +117,16 @@ def make_generate_fn(cfg: ModelConfig, dcfg: DecodeConfig, *,
     attention path — auto | dense | flash | kernel (KERNELS.md). The
     "none" cache mode runs full forwards and is unaffected.
 
+    ``cache_layout`` (default ``dcfg.cache_layout``): "dense" keeps the
+    per-row buffer slices; "paged" routes every cache access through the
+    page-table indirection (SERVING.md "Paged KV"). ``shared_prefix_len``
+    (paged only, a page multiple) marks the first ``Sp`` prompt positions
+    as ALREADY PREFILLED in shared pool pages: prefill then encodes only
+    ``prompt[:, Sp:]`` against them (Fast-dLLM prefix semantics — the
+    remainder attends [shared pages ∥ itself]); with ``0`` the paged
+    prefill is the exact bidirectional full-prompt forward and paged
+    decode is token-identical to dense.
+
     Memoized on the NORMALIZED variant key, so spelling-equivalent calls
     (e.g. ``use_cache=True`` vs ``cache_mode="prefix"``) share one jitted
     program — one trace/compile per (cfg, dcfg, variant) process-wide.
@@ -115,20 +137,35 @@ def make_generate_fn(cfg: ModelConfig, dcfg: DecodeConfig, *,
     if not attn_impl:
         attn_impl = dcfg.attn_impl
     assert attn_impl in ("auto", "dense", "flash", "kernel"), attn_impl
+    if not cache_layout:
+        cache_layout = dcfg.cache_layout or "dense"
+    assert cache_layout in ("dense", "paged"), cache_layout
+    if cache_mode == "none":
+        cache_layout = "dense"  # cacheless: nothing to page
+    if cache_layout != "paged":
+        shared_prefix_len = 0
+    else:
+        assert shared_prefix_len % dcfg.page_size == 0, \
+            (shared_prefix_len, dcfg.page_size)
     return _make_generate_fn(cfg, dcfg, quota, use_kernel, cache_mode,
-                             attn_impl)
+                             attn_impl, cache_layout, shared_prefix_len)
 
 
 @lru_cache(maxsize=None)
 def _make_generate_fn(cfg: ModelConfig, dcfg: DecodeConfig, quota: int,
-                      use_kernel: bool, cache_mode: str, attn_impl: str):
+                      use_kernel: bool, cache_mode: str, attn_impl: str,
+                      cache_layout: str = "dense",
+                      shared_prefix_len: int = 0):
     assert cfg.supports_mdlm, f"{cfg.name}: diffusion decoding inapplicable"
     use_cache = cache_mode != "none"
     dual = cache_mode == "dual"
+    paged = cache_layout == "paged"
+    ps, Sp = dcfg.page_size, shared_prefix_len
     N, bs = dcfg.max_new_tokens, dcfg.block_size
     nb, sc = dcfg.num_blocks, dcfg.steps_cap
 
-    def gen(params, prompt, table, mask_id, live=None, eos_id=None):
+    def gen(params, prompt, table, mask_id, live=None, eos_id=None,
+            pool_k=None, pool_v=None, page_table=None):
         B, P = prompt.shape
         if table.ndim == 2:
             # legacy shared table: broadcast to the per-slot rank
@@ -137,8 +174,8 @@ def _make_generate_fn(cfg: ModelConfig, dcfg: DecodeConfig, quota: int,
                  else jnp.asarray(live).astype(bool))
         track_eos = eos_id is not None
         resp = jnp.full((B, N), mask_id, jnp.int32)
-        conf_rec = jnp.zeros((nb, sc, bs), jnp.float32)
-        val_rec = jnp.zeros((nb, sc, bs), bool)
+        conf_rec = jnp.zeros((B, nb, sc, bs), jnp.float32)
+        val_rec = jnp.zeros((B, nb, sc, bs), bool)
         steps_used = jnp.zeros((nb,), jnp.int32)
         seq_steps0 = jnp.zeros((B, nb), jnp.int32)
         nfe = jnp.zeros((), jnp.int32)
@@ -147,8 +184,35 @@ def _make_generate_fn(cfg: ModelConfig, dcfg: DecodeConfig, quota: int,
             # dual cache reserves a scratch slot region for the in-flight
             # block beyond [prompt | response]
             max_len = P + N + (bs if dual else 0)
-            _, cache0 = M.prefill(params, cfg, prompt, max_len=max_len,
-                                  mode="full")
+            if paged:
+                assert pool_k is not None and page_table is not None, \
+                    "paged layout: pass pool_k, pool_v, page_table"
+                n_log = -(-max_len // ps)
+                assert page_table.shape == (B, n_log), \
+                    (page_table.shape, (B, n_log))
+                assert Sp < P, (Sp, P)
+                kv0 = {"kp": pool_k, "vp": pool_v,
+                       "pt": page_table.astype(jnp.int32),
+                       "pos": jnp.full((max_len,), -1, jnp.int32),
+                       "length": jnp.zeros((), jnp.int32)}
+                if Sp:
+                    # shared pages already hold [0, Sp): mark them valid
+                    # and encode only the per-row remainder against them
+                    kv0["pos"] = kv0["pos"].at[:Sp].set(
+                        jnp.arange(Sp, dtype=jnp.int32))
+                    kv0["length"] = jnp.asarray(Sp, jnp.int32)
+                    _, cache0 = M.block_step(
+                        params, cfg, prompt[:, Sp:],
+                        jnp.asarray(Sp, jnp.int32), {"attn": kv0},
+                        write=True, attn_impl=attn_impl, page_size=ps)
+                else:
+                    _, cache0 = M.prefill(params, cfg, prompt,
+                                          max_len=max_len, mode="full",
+                                          cache={"attn": kv0},
+                                          page_size=ps)
+            else:
+                _, cache0 = M.prefill(params, cfg, prompt, max_len=max_len,
+                                      mode="full")
             nfe = nfe + 1
         else:
             cache0 = None
@@ -171,7 +235,8 @@ def _make_generate_fn(cfg: ModelConfig, dcfg: DecodeConfig, quota: int,
                     _, c = M.block_step(params, cfg, resp,
                                         jnp.asarray(P, jnp.int32), cache,
                                         write=True, advance=False,
-                                        write_slot=P, attn_impl=attn_impl)
+                                        write_slot=P, attn_impl=attn_impl,
+                                        page_size=ps)
                     return c, nfe + 1
 
                 cache, nfe = jax.lax.cond(
@@ -182,12 +247,13 @@ def _make_generate_fn(cfg: ModelConfig, dcfg: DecodeConfig, quota: int,
                     logits, _ = M.block_step(
                         params, cfg, block, block_start, cache,
                         write_slot=P + N, exclude_start=start + P,
-                        exclude_len=bs, attn_impl=attn_impl)
+                        exclude_len=bs, attn_impl=attn_impl, page_size=ps)
                     return logits
                 if use_cache:
                     logits, _ = M.block_step(params, cfg, block,
                                              block_start, cache,
-                                             attn_impl=attn_impl)
+                                             attn_impl=attn_impl,
+                                             page_size=ps)
                     return logits
                 x = jnp.concatenate([prompt, full_resp], axis=1)
                 logits, _ = M.forward(params, cfg, x, mode="full")
@@ -216,16 +282,17 @@ def _make_generate_fn(cfg: ModelConfig, dcfg: DecodeConfig, quota: int,
                 new_block = jnp.where(unmask, toks, block)
                 new_resp = jax.lax.dynamic_update_slice(
                     resp, new_block, (jnp.zeros((), jnp.int32), start))
-                # calibration signal: row 0 only, and only while that row
-                # is live — a retired/dead row's ride-along flush step must
-                # not leak garbage confidences into the task's table
-                rec0 = masked[0] & live[0]
+                # calibration signal: EVERY live row (the scheduler picks
+                # which rows become task profiles) — a retired/dead row's
+                # ride-along flush step must not leak garbage confidences
+                # into any task's table
+                rec = masked & live[:, None]
+                z0 = jnp.zeros((), jnp.int32)
                 conf_rec = jax.lax.dynamic_update_slice(
-                    conf_rec, jnp.where(rec0, conf[0], 0.0)[None, None, :],
-                    (b, step, jnp.zeros((), jnp.int32)))
+                    conf_rec, jnp.where(rec, conf, 0.0)[:, None, None, :],
+                    (z0, b, step, z0))
                 val_rec = jax.lax.dynamic_update_slice(
-                    val_rec, rec0[None, None, :],
-                    (b, step, jnp.zeros((), jnp.int32)))
+                    val_rec, rec[:, None, None, :], (z0, b, step, z0))
                 seq_steps = seq_steps.at[:, b].add(
                     row_active.astype(jnp.int32))
                 return (new_block, step + 1, new_resp, nfe + 1, conf_rec,
@@ -251,7 +318,7 @@ def _make_generate_fn(cfg: ModelConfig, dcfg: DecodeConfig, quota: int,
                 def commit(cache, nfe):
                     _, c = M.block_step(params, cfg, block, block_start,
                                         cache, write=True,
-                                        attn_impl=attn_impl)
+                                        attn_impl=attn_impl, page_size=ps)
                     return c, nfe + 1
 
                 cache, nfe = jax.lax.cond(
@@ -271,17 +338,19 @@ def _make_generate_fn(cfg: ModelConfig, dcfg: DecodeConfig, quota: int,
 
 def result_profile(res: GenerateResult,
                    row: Optional[int] = None) -> CalibrationProfile:
-    """Host-side view of the recorded confidences (Phase-1 output).
+    """Host-side view of one row's recorded confidences (Phase-1 output).
 
-    ``row``: for a mixed batch, the calibration row's index — its own
-    live step counts become ``steps`` instead of the batch-max while-loop
-    count (``steps_per_block``), which reflects whichever ride-along row
-    denoised slowest. The confidence recording itself is always row 0.
+    ``row``: the calibration row's index — its recording and its own live
+    step counts become the profile. ``None`` keeps the legacy single-task
+    semantics: row 0's recording with the batch-max while-loop counts
+    (``steps_per_block``) as ``steps``. Every row is recorded, so a mixed
+    batch can yield several task profiles (one ``result_profile`` each).
     """
+    r = 0 if row is None else row
     steps = res.steps_per_block if row is None else res.seq_steps[row]
     return CalibrationProfile(
-        conf=np.asarray(res.conf),
-        valid=np.asarray(res.conf_valid),
+        conf=np.asarray(res.conf)[r],
+        valid=np.asarray(res.conf_valid)[r],
         steps=np.asarray(steps),
     )
 

@@ -62,6 +62,49 @@ def kv_limit_from_pos(kv_pos: Array) -> Array:
     return jnp.max(jnp.where(kv_pos >= 0, ids1, 0))
 
 
+def _acc_init(m_scr, l_scr, acc_scr, n_scr):
+    """Reset the online-softmax scratch at the first kv tile."""
+    m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+    l_scr[...] = jnp.zeros_like(l_scr)
+    acc_scr[...] = jnp.zeros_like(acc_scr)
+    if n_scr is not None:
+        n_scr[0] = 0
+
+
+def _make_accumulate(q_ref, m_scr, l_scr, acc_scr, n_scr):
+    """One online-softmax update over a kv tile, shared by the dense and
+    paged kernel bodies (ONE definition of the softmax math). ``valid``
+    is [1, tile] — kv-side only: "full" mode attention has no q-side
+    mask."""
+    q = q_ref[0, 0].astype(jnp.float32)  # [qt, D]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+
+    def accumulate(k, v, valid):
+        v = jnp.where(valid[0][:, None], v, 0.0)  # don't let pad NaNs leak
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        s = jnp.where(valid, s, NEG_INF)
+        m_old = m_scr[...]
+        m_new = jnp.maximum(m_old, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_old - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+        if n_scr is not None:
+            n_scr[0] += 1
+
+    return accumulate
+
+
+def _acc_finish(o_ref, cnt_ref, m_scr, l_scr, acc_scr, n_scr):
+    """Normalise and write the output tile (guarding fully-masked rows)."""
+    l = jnp.maximum(l_scr[...], 1e-30)
+    o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+    if cnt_ref is not None:
+        cnt_ref[0, 0, 0] = n_scr[0]
+
+
 def _kernel(s_ref, q_ref, ck_ref, cv_ref, bk_ref, bv_ref, pos_ref,
             *refs, nk: int, nkk: int, kt: int, bt: int, bs: int, T: int,
             exclude_len: int, window: int, count_tiles: bool):
@@ -77,31 +120,9 @@ def _kernel(s_ref, q_ref, ck_ref, cv_ref, bk_ref, bv_ref, pos_ref,
 
     @pl.when(j == 0)
     def _init():
-        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
-        l_scr[...] = jnp.zeros_like(l_scr)
-        acc_scr[...] = jnp.zeros_like(acc_scr)
-        if count_tiles:
-            n_scr[0] = 0
+        _acc_init(m_scr, l_scr, acc_scr, n_scr)
 
-    q = q_ref[0, 0].astype(jnp.float32)  # [qt, D]
-    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
-
-    def accumulate(k, v, valid):
-        """Online-softmax update; ``valid`` is [1, tile] (kv-side only —
-        "full" mode attention has no q-side mask)."""
-        v = jnp.where(valid[0][:, None], v, 0.0)  # don't let pad NaNs leak
-        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
-        s = jnp.where(valid, s, NEG_INF)
-        m_old = m_scr[...]
-        m_new = jnp.maximum(m_old, jnp.max(s, axis=-1))
-        p = jnp.exp(s - m_new[:, None])
-        corr = jnp.exp(m_old - m_new)
-        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1)
-        acc_scr[...] = acc_scr[...] * corr[:, None] + jnp.dot(
-            p, v, preferred_element_type=jnp.float32)
-        m_scr[...] = m_new
-        if count_tiles:
-            n_scr[0] += 1
+    accumulate = _make_accumulate(q_ref, m_scr, l_scr, acc_scr, n_scr)
 
     is_cache = j < nk
     tile_live = (j * kt) < kv_limit
@@ -139,10 +160,7 @@ def _kernel(s_ref, q_ref, ck_ref, cv_ref, bk_ref, bv_ref, pos_ref,
 
     @pl.when(j == nkk - 1)
     def _finish():
-        l = jnp.maximum(l_scr[...], 1e-30)
-        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
-        if count_tiles:
-            cnt_ref[0, 0, 0] = n_scr[0]
+        _acc_finish(o_ref, cnt_ref, m_scr, l_scr, acc_scr, n_scr)
 
 
 def cached_block_attention_pallas(
@@ -272,6 +290,217 @@ def cached_block_attention_pallas(
     )(scalars, qf, cache_k, cache_v, block_k, block_v, pos2d)
 
     out = res[0]  # out_shape is a list, so the result is too
+    out = out[:, :, :R].reshape(B, Kh, G, bs, D)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, bs, H, D)
+    if debug_tile_counts:
+        return out, res[1]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# paged variant: page-table indirection via scalar prefetch
+# ---------------------------------------------------------------------------
+
+def _paged_kernel(s_ref, pt_ref, q_ref, ck_ref, cv_ref, bk_ref, bv_ref,
+                  pos_ref, *refs, n_log: int, nkk: int, ps: int, bt: int,
+                  bs: int, T: int, exclude_len: int, window: int,
+                  count_tiles: bool):
+    """Per-page body. Identical online-softmax math to ``_kernel``; the
+    differences are (a) kv tiles are POOL pages routed per row by the
+    scalar-prefetched page table (the BlockSpec index maps below), and
+    (b) a tile is live only if it is both inside ``kv_limit`` AND mapped
+    for this row — dead rows touch zero cache pages."""
+    if count_tiles:
+        o_ref, cnt_ref, m_scr, l_scr, acc_scr, n_scr = refs
+    else:
+        o_ref, m_scr, l_scr, acc_scr = refs
+        cnt_ref = n_scr = None
+    b = pl.program_id(0)
+    j = pl.program_id(3)
+    kv_limit = s_ref[0]
+    slot = s_ref[1]
+    exc0 = s_ref[2]
+
+    @pl.when(j == 0)
+    def _init():
+        _acc_init(m_scr, l_scr, acc_scr, n_scr)
+
+    accumulate = _make_accumulate(q_ref, m_scr, l_scr, acc_scr, n_scr)
+
+    is_cache = j < n_log
+    jm = jnp.minimum(j, n_log - 1)
+    page_mapped = pt_ref[b, jm] >= 0
+    tile_live = is_cache & ((j * ps) < kv_limit) & page_mapped
+
+    @pl.when(tile_live)
+    def _cache_tile():
+        k = ck_ref[0, :, 0, :].astype(jnp.float32)  # [ps, D]
+        v = cv_ref[0, :, 0, :].astype(jnp.float32)
+        pos = pos_ref[...]                          # [1, ps] int32
+        ids = jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1) + j * ps
+        valid = (pos >= 0) & (ids < kv_limit) & (ids < T)
+        valid &= ~((ids >= slot) & (ids < slot + bs))
+        if exclude_len:
+            valid &= ~((ids >= exc0) & (ids < exc0 + exclude_len))
+        if window:
+            qmax = s_ref[3] + bs - 1
+            valid &= (qmax - pos) < window
+        accumulate(k, v, valid)
+
+    @pl.when(~is_cache)
+    def _block_tile():
+        jb = j - n_log
+        k = bk_ref[0, :, 0, :].astype(jnp.float32)  # [bt, D]
+        v = bv_ref[0, :, 0, :].astype(jnp.float32)
+        r = jax.lax.broadcasted_iota(jnp.int32, (1, bt), 1) + jb * bt
+        valid = r < bs
+        if exclude_len:
+            ids = slot + r
+            valid &= ~((ids >= exc0) & (ids < exc0 + exclude_len))
+        if window:
+            valid &= (bs - 1 - r) < window
+        accumulate(k, v, valid)
+
+    @pl.when(j == nkk - 1)
+    def _finish():
+        _acc_finish(o_ref, cnt_ref, m_scr, l_scr, acc_scr, n_scr)
+
+
+def paged_block_attention_pallas(
+        q: Array, pool_k: Array, pool_v: Array, block_k: Array,
+        block_v: Array, kv_pos: Array, page_table: Array, *, slot: Array,
+        block_start: Array, kv_limit: Optional[Array] = None,
+        exclude_start: Optional[Array] = None, exclude_len: int = 0,
+        window: int = 0, debug_tile_counts: bool = False,
+        interpret: bool = False) -> Union[Array, Tuple[Array, Array]]:
+    """Block attention against a PAGED cache: pool pages are DMA'd
+    directly — the dense [B, T] view is never materialised.
+
+    q         [B, bs, H, D]    block queries, RoPE applied
+    pool_k/v  [P, ps, Kh, D]   page pool for one layer (no batch dim!)
+    block_k/v [B, bs, Kh, D]   the block's fresh K/V
+    kv_pos    [T] int32        logical-slot positions (shared across rows)
+    page_table[B, n_log] int32 physical page per (row, logical page);
+                               -1 = unmapped (dead row / reclaimed)
+    slot/block_start/kv_limit/exclude/window — as the dense kernel.
+
+    The page table rides as a second scalar-prefetch operand, so the kv
+    BlockSpec index maps resolve (row, logical page) → physical pool page
+    before the tile's DMA is issued; tiles that are beyond ``kv_limit``
+    OR unmapped clamp to the row's last live page (no new DMA) and skip
+    compute via ``pl.when`` — the paged mirror of the dense kernel's
+    ``kv_limit`` mechanism, which additionally skips *holes* (dead rows,
+    reclaimed pages), not just the tail. One kv tile == one page, so
+    ``page_size`` must be a multiple of 8 (float32 sublane tiling).
+    """
+    B, bs, H, D = q.shape
+    Pg, ps = pool_k.shape[0], pool_k.shape[1]
+    Kh = pool_k.shape[2]
+    T = kv_pos.shape[0]
+    n_log = page_table.shape[1]
+    assert n_log * ps >= T, (n_log, ps, T)
+    assert ps % 8 == 0, f"page_size {ps} must be a multiple of 8"
+    G = H // Kh
+    if kv_limit is None:
+        kv_limit = kv_limit_from_pos(kv_pos)
+    if exclude_start is None:
+        exclude_start = jnp.zeros((), jnp.int32)
+        exclude_len = 0
+
+    R = G * bs
+    qt = min(128, _round_up(R, 8))
+    Rp = _round_up(R, qt)
+    qf = q.reshape(B, bs, Kh, G, D).transpose(0, 2, 3, 1, 4)
+    qf = qf.reshape(B, Kh, R, D)
+    if Rp != R:
+        qf = jnp.pad(qf, ((0, 0), (0, 0), (0, Rp - R), (0, 0)))
+    nq = Rp // qt
+
+    bt = min(ps, _round_up(bs, 8))
+    bsp = _round_up(bs, bt)
+    nbk = bsp // bt
+    if bsp != bs:
+        pad = ((0, 0), (0, bsp - bs), (0, 0), (0, 0))
+        block_k = jnp.pad(block_k, pad)
+        block_v = jnp.pad(block_v, pad)
+    nkk = n_log + nbk
+
+    Tp = n_log * ps
+    pos2d = kv_pos.astype(jnp.int32)
+    if Tp != T:
+        pos2d = jnp.pad(pos2d, (0, Tp - T), constant_values=-1)
+    pos2d = pos2d.reshape(1, Tp)
+    scalars = jnp.stack([
+        jnp.asarray(kv_limit, jnp.int32).reshape(()),
+        jnp.asarray(slot, jnp.int32).reshape(()),
+        jnp.asarray(exclude_start, jnp.int32).reshape(()),
+        jnp.asarray(block_start, jnp.int32).reshape(()),
+    ])
+    pt = page_table.astype(jnp.int32)
+
+    def live_m1(s):
+        return jnp.maximum(pl.cdiv(s[0], ps) - 1, 0)
+
+    def page_for(b, j, s, pt):
+        # route tile j of row b to its pool page; dead/unmapped tiles
+        # clamp to the row's last live mapped page so the revisited block
+        # index issues no new DMA (compute is skipped by tile_live)
+        jm = jnp.minimum(j, live_m1(s))
+        return jnp.maximum(pt[b, jm], 0)
+
+    kernel = functools.partial(
+        _paged_kernel, n_log=n_log, nkk=nkk, ps=ps, bt=bt, bs=bs, T=T,
+        exclude_len=exclude_len, window=window,
+        count_tiles=debug_tile_counts)
+
+    out_shape = [jax.ShapeDtypeStruct((B, Kh, Rp, D), q.dtype)]
+    out_specs = [
+        pl.BlockSpec((1, 1, qt, D), lambda b, h, i, j, s, pt: (b, h, i, 0)),
+    ]
+    scratch = [pltpu.VMEM((qt,), jnp.float32),
+               pltpu.VMEM((qt,), jnp.float32),
+               pltpu.VMEM((qt, D), jnp.float32)]
+    if debug_tile_counts:
+        out_shape.append(jax.ShapeDtypeStruct((B, Kh, nq), jnp.int32))
+        out_specs.append(
+            pl.BlockSpec((1, 1, 1), lambda b, h, i, j, s, pt: (b, h, i)))
+        scratch.append(pltpu.SMEM((1,), jnp.int32))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Kh, nq, nkk),
+        in_specs=[
+            pl.BlockSpec((1, 1, qt, D),
+                         lambda b, h, i, j, s, pt: (b, h, i, 0)),
+            pl.BlockSpec((1, ps, 1, D),
+                         lambda b, h, i, j, s, pt: (
+                             page_for(b, j, s, pt), 0, h, 0)),
+            pl.BlockSpec((1, ps, 1, D),
+                         lambda b, h, i, j, s, pt: (
+                             page_for(b, j, s, pt), 0, h, 0)),
+            pl.BlockSpec((1, bt, 1, D),
+                         lambda b, h, i, j, s, pt: (
+                             b, jnp.maximum(j - n_log, 0), h, 0)),
+            pl.BlockSpec((1, bt, 1, D),
+                         lambda b, h, i, j, s, pt: (
+                             b, jnp.maximum(j - n_log, 0), h, 0)),
+            pl.BlockSpec((1, ps),
+                         lambda b, h, i, j, s, pt: (
+                             0, jnp.minimum(j, live_m1(s)))),
+        ],
+        out_specs=out_specs,
+        scratch_shapes=scratch,
+    )
+    res = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        compiler_params=compiler_params(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(scalars, pt, qf, pool_k, pool_v, block_k, block_v, pos2d)
+
+    out = res[0]
     out = out[:, :, :R].reshape(B, Kh, G, bs, D)
     out = out.transpose(0, 3, 1, 2, 4).reshape(B, bs, H, D)
     if debug_tile_counts:

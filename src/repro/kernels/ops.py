@@ -15,7 +15,8 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.block_attention import (cached_block_attention_pallas,
-                                           kv_limit_from_pos)
+                                           kv_limit_from_pos,
+                                           paged_block_attention_pallas)
 from repro.kernels.confidence import fused_confidence_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 
@@ -115,3 +116,44 @@ def cached_block_attention(
     return _cba_xla(q, cache_k, cache_v, block_k, block_v, kv_pos, slot,
                     block_start, kv_limit, exclude_start,
                     exclude_len=exclude_len, window=window)
+
+
+def paged_block_attention(
+        q: Array, pool_k: Array, pool_v: Array, block_k: Array,
+        block_v: Array, *, kv_pos: Array, page_table: Array, slot: Array,
+        block_start: Array, page_size: int,
+        kv_limit: Optional[Array] = None,
+        exclude_start: Optional[Array] = None, exclude_len: int = 0,
+        window: int = 0, interpret: bool = False) -> Array:
+    """Paged-layout block-step attention dispatch.
+
+    q [B,bs,H,D]; pool_k/v [P,ps,Kh,D] (one layer of the page pool);
+    block_k/v [B,bs,Kh,D]; kv_pos [T]; page_table [B, n_log] (-1 =
+    unmapped). TPU (or ``interpret=True``) -> the paged Pallas kernel,
+    which DMAs pool pages in place and skips dead/unmapped pages;
+    elsewhere -> gather the dense logical view through the page table and
+    run the length-aware ``paged_cached_block_attend`` flash path, which
+    is bit-identical to the dense layout's fallback for fully-mapped
+    rows (the equivalence suite's contract).
+    """
+    if kv_limit is None:
+        kv_limit = kv_limit_from_pos(kv_pos)
+    if exclude_start is None:
+        exclude_start = jnp.zeros((), jnp.int32)
+        exclude_len = 0
+    if _on_tpu() or interpret:
+        return paged_block_attention_pallas(
+            q, pool_k, pool_v, block_k, block_v, kv_pos, page_table,
+            slot=slot, block_start=block_start, kv_limit=kv_limit,
+            exclude_start=exclude_start, exclude_len=exclude_len,
+            window=window, interpret=interpret)
+    from repro.models import attention as A
+
+    bs = block_k.shape[1]
+    q_pos = block_start + jnp.arange(bs, dtype=jnp.int32)
+    out, _ = A.paged_cached_block_attend(
+        q, pool_k, pool_v, block_k, block_v, page_table, kv_pos,
+        slot=slot, q_pos=q_pos, page_size=page_size, kv_limit=kv_limit,
+        exclude_start=exclude_start, exclude_len=exclude_len,
+        window=window, impl="flash")
+    return out

@@ -76,3 +76,59 @@ def cached_block_attention_ref(
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bkgst,btkd->bskgd", p, cv.astype(jnp.float32))
     return out.reshape(B, bs, H, D).astype(q.dtype)
+
+
+def paged_block_attention_ref(
+        q: Array, pool_k: Array, pool_v: Array, block_k: Array,
+        block_v: Array, kv_pos: Array, page_table: Array, *, slot: Array,
+        block_start: Array, exclude_start: Optional[Array] = None,
+        exclude_len: int = 0, window: int = 0) -> Array:
+    """Oracle for ``block_attention.paged_block_attention_pallas``.
+
+    Gathers each row's dense logical [T, Kh, D] view through its page
+    table (unmapped slots read page 0 and are masked), then defers to the
+    dense oracle with a per-row validity refinement: the result must
+    equal dense attention over the materialised view.
+
+    q [B,bs,H,D]; pool_k/v [P,ps,Kh,D]; block_k/v [B,bs,Kh,D];
+    kv_pos [T]; page_table [B, n_log].
+    """
+    B, bs, H, D = q.shape
+    ps = pool_k.shape[1]
+    T = kv_pos.shape[0]
+    Kh = pool_k.shape[2]
+    G = H // Kh
+    slots = jnp.arange(T, dtype=jnp.int32)
+    lp, off = slots // ps, slots % ps
+    pp = page_table[:, lp]                       # [B, T]
+    mapped = pp >= 0
+    pp = jnp.maximum(pp, 0)
+    ck = pool_k[pp, off[None]]                   # [B, T, Kh, D]
+    cv = pool_v[pp, off[None]]
+
+    q_pos = block_start + jnp.arange(bs, dtype=jnp.int32)
+    slot = jnp.asarray(slot, jnp.int32)
+    b0 = jnp.zeros((), jnp.int32)
+    ck = jax.lax.dynamic_update_slice(
+        ck, block_k.astype(ck.dtype), (b0, slot, b0, b0))
+    cv = jax.lax.dynamic_update_slice(
+        cv, block_v.astype(cv.dtype), (b0, slot, b0, b0))
+    pos = jax.lax.dynamic_update_slice(kv_pos.astype(jnp.int32),
+                                       q_pos, (slot,))
+    ids = jnp.arange(T, dtype=jnp.int32)
+    in_block = (ids >= slot) & (ids < slot + bs)
+    valid = (pos >= 0)[None] & (mapped | in_block[None])  # [B, T]
+    if exclude_start is not None and exclude_len:
+        valid &= ~((ids >= exclude_start) & (ids < exclude_start
+                                             + exclude_len))[None]
+    if window:
+        valid &= ((q_pos[-1] - pos) < window)[None]
+
+    scale = 1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32))
+    qg = q.reshape(B, bs, Kh, G, D).astype(jnp.float32)
+    s = jnp.einsum("bskgd,btkd->bkgst", qg,
+                   ck.astype(jnp.float32)) * scale
+    s = jnp.where(valid[:, None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", p, cv.astype(jnp.float32))
+    return out.reshape(B, bs, H, D).astype(q.dtype)

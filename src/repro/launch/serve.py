@@ -30,6 +30,17 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=64)
     ap.add_argument("--cache-mode", default="prefix",
                     choices=["prefix", "dual", "none"])
+    ap.add_argument("--cache-layout", default="dense",
+                    choices=["dense", "paged"],
+                    help="paged: page-pool KV with per-slot page tables — "
+                         "dead slots pin zero pages (SERVING.md)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="cache slots per page (paged layout)")
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="page-pool capacity; 0 = auto-size for the batch")
+    ap.add_argument("--shared-prefix", default="",
+                    help="system prompt prefilled once into refcounted "
+                         "shared pages and mapped into every slot")
     ap.add_argument("--store", default="",
                     help="npz path persisting per-task calibration across "
                          "restarts (SERVING.md)")
@@ -43,9 +54,13 @@ def main() -> None:
 
     dcfg = DecodeConfig(max_new_tokens=args.max_new, block_size=args.block,
                         policy=args.policy, threshold=0.9, mode="block",
-                        metric="q1", cap=0.9, slack=0.1)
+                        metric="q1", cap=0.9, slack=0.1,
+                        cache_layout=args.cache_layout,
+                        page_size=args.page_size)
     ecfg = EngineConfig(batch_size=args.batch, prompt_len=64,
-                        cache_mode=args.cache_mode, store_path=args.store)
+                        cache_mode=args.cache_mode, store_path=args.store,
+                        num_pages=args.num_pages,
+                        shared_prefix=args.shared_prefix)
     engine = DiffusionEngine(params, cfg, dcfg, ecfg=ecfg)
     rng = np.random.default_rng(0)
     samples = TASKS[args.task].make(rng, args.n)
@@ -57,6 +72,10 @@ def main() -> None:
     print(f"# {st.requests} requests  acc={hits / len(samples):.2f}  "
           f"tokens/s={st.tokens_per_s:.1f}  NFE={st.nfe}  "
           f"tokens/NFE={st.tokens_per_nfe:.2f}")
+    if st.page_capacity:
+        print(f"# pages: capacity={st.page_capacity} "
+              f"peak={st.pages_peak} ({st.page_util:.0%}) "
+              f"shared={st.pages_shared} freed={st.pages_freed}")
     for r in out[:3]:
         print(f"  [{r.uid}] {r.text!r}")
 

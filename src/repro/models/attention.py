@@ -204,13 +204,19 @@ def cached_block_attend(q: Array, cache_k: Array, cache_v: Array,
                         kv_limit: Optional[Array] = None,
                         exclude_start: Optional[Array] = None,
                         exclude_len: int = 0, window: int = 0,
-                        impl: str = "auto"):
+                        impl: str = "auto",
+                        row_valid: Optional[Array] = None):
     """The generic (XLA) cached block/decode step attention: write the
     fresh K/V into the cache buffer at ``slot``, mask with
     ``cache_valid_mask``, attend bidirectionally. The ONE definition of
     this sequence — ``block_step``, ``decode_step`` and the off-TPU branch
     of ``ops.cached_block_attention`` all call it, so the mask/bound
     semantics cannot drift between impls.
+
+    ``row_valid`` [B, T] adds a per-row slot mask on top of the shared
+    positional validity — the paged layout passes its page-mapped mask so
+    rows with unmapped pages (dead scheduler slots) attend nothing from
+    the cache. The fresh block always stays valid.
 
     Returns ``(out, (ck, cv))`` — the written cache buffers, for callers
     that commit the step (``write=True`` / AR decode).
@@ -221,9 +227,43 @@ def cached_block_attend(q: Array, cache_k: Array, cache_v: Array,
     kv_valid = cache_valid_mask(pos, exclude_start=exclude_start,
                                 exclude_len=exclude_len, window=window,
                                 q_last=q_pos[-1])
+    if row_valid is not None:
+        S = q_pos.shape[0]
+        ids = jnp.arange(kv_pos.shape[0], dtype=jnp.int32)
+        in_block = (ids >= slot) & (ids < slot + S)
+        kv_valid = kv_valid[None] & (row_valid | in_block[None])
     bound = None if kv_limit is None else \
         jnp.maximum(kv_limit, slot + q_pos.shape[0])
     out = attention(q, ck, cv, q_pos=q_pos, kv_pos=jnp.maximum(pos, 0),
                     mode="full", kv_valid=kv_valid, impl=impl,
                     kv_limit=bound)
     return out, (ck, cv)
+
+
+def paged_cached_block_attend(q: Array, pool_k: Array, pool_v: Array,
+                              block_k: Array, block_v: Array,
+                              page_table: Array, kv_pos: Array, *,
+                              slot: Array, q_pos: Array, page_size: int,
+                              kv_limit: Optional[Array] = None,
+                              exclude_start: Optional[Array] = None,
+                              exclude_len: int = 0, window: int = 0,
+                              impl: str = "auto"):
+    """Paged-layout XLA block/decode step attention for ONE layer.
+
+    Gathers the dense logical view [B, T, Kh, D] through the page table,
+    then runs the exact ``cached_block_attend`` sequence on it — paged
+    decode is therefore *bit-identical* to dense for rows whose pages are
+    all mapped (the equivalence suite's contract). Unmapped slots are
+    masked per row. Returns ``(out, mapped)``; committing the block into
+    the POOL is a separate ``cache_lib.paged_kv_write`` (the gathered
+    view is a temporary).
+    """
+    T = kv_pos.shape[0]
+    ck, cv, mapped = cache_lib.paged_kv_gather(pool_k, pool_v, page_table,
+                                               T, page_size=page_size)
+    out, _ = cached_block_attend(
+        q, ck, cv, block_k, block_v, kv_pos, slot=slot, q_pos=q_pos,
+        kv_limit=kv_limit, exclude_start=exclude_start,
+        exclude_len=exclude_len, window=window, impl=impl,
+        row_valid=mapped)
+    return out, mapped

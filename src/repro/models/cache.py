@@ -1,8 +1,8 @@
-"""Decode caches: attention KV (optionally ring/sliding-window), SSM state.
+"""Decode caches: attention KV (dense or paged), SSM state.
 
 All caches are plain dict pytrees so they jit/shard/donate cleanly.
 
-KV cache layout (stacked over layers for ``lax.scan``):
+Dense KV layout (stacked over layers for ``lax.scan``):
   k, v  : [L, B, T, Kh, D]   (rotary already applied to k)
   pos   : [T] int32          absolute position held in each slot, -1 = empty
   length: [] int32           total tokens written so far
@@ -10,10 +10,25 @@ KV cache layout (stacked over layers for ``lax.scan``):
 When ``T < full sequence`` the cache is a ring buffer (sliding window):
 slot = length % T. Validity is ``pos >= 0`` and, for windowed attention,
 ``q_pos - pos < window`` — both checked at attention time.
+
+Paged KV layout (SERVING.md "Paged KV"): rows do not own buffer slices.
+A global page pool holds every row's K/V in ``page_size``-slot pages and
+each row maps logical slot ``t`` to pool page ``pt[b, t // ps]``:
+  kp, vp: [L, P, ps, Kh, D]  the page pool (P physical pages)
+  pt    : [B, n_log] int32   per-row page table, -1 = unmapped
+  pos   : [T] int32          logical-slot positions, shared across rows
+                             (the batch decodes in lockstep, as dense)
+  length: [] int32
+
+Unmapped pages read as garbage and MUST be masked (``paged_valid_mask``)
+— dead scheduler slots map nothing and pin zero pages. Writes through an
+unmapped entry are dropped. Page ownership (free list, refcounts for
+shared system-prompt prefixes, reclaim on retirement) is host-side state:
+:class:`PageAllocator`, driven by the serving scheduler.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -61,15 +76,210 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype,
 
 def kv_write_slice(cache_k: Array, cache_v: Array, k_new: Array, v_new: Array,
                    start: Array) -> tuple[Array, Array]:
-    """Write [B,S,Kh,D] chunk at slot ``start`` (no ring wrap: caller ensures
-    start+S <= T for chunked writes)."""
-    b0 = jnp.zeros((), jnp.int32)
-    idx = (b0, start.astype(jnp.int32), b0, b0)
-    ck = jax.lax.dynamic_update_slice(cache_k, k_new.astype(cache_k.dtype), idx)
-    cv = jax.lax.dynamic_update_slice(cache_v, v_new.astype(cache_v.dtype), idx)
-    return ck, cv
+    """Write a [B,S,Kh,D] chunk at slot ``start``, wrap-aware.
+
+    The contiguous case (``start + S <= T``) is one dynamic_update_slice.
+    When the write crosses the end of a ring buffer it wraps to slot 0 via
+    a modular scatter — previously ``dynamic_update_slice``'s silent
+    start-index clamping corrupted the window tail (the chunk landed at
+    ``T - S`` instead of wrapping).
+    """
+    start = start.astype(jnp.int32)
+    S, T = k_new.shape[1], cache_k.shape[1]
+    k_new = k_new.astype(cache_k.dtype)
+    v_new = v_new.astype(cache_v.dtype)
+    if S >= T:  # chunk covers the whole ring: only the last T survive
+        # (a full modular scatter would have duplicate indices, whose
+        # apply order — hence which token wins a slot — is undefined)
+        k_new, v_new = k_new[:, S - T:], v_new[:, S - T:]
+        idx = (start + S - T + jnp.arange(T, dtype=jnp.int32)) % T
+        return (cache_k.at[:, idx].set(k_new, mode="drop"),
+                cache_v.at[:, idx].set(v_new, mode="drop"))
+
+    def contiguous(ck, cv):
+        b0 = jnp.zeros((), jnp.int32)
+        idx = (b0, start, b0, b0)
+        return (jax.lax.dynamic_update_slice(ck, k_new, idx),
+                jax.lax.dynamic_update_slice(cv, v_new, idx))
+
+    def wrapped(ck, cv):
+        idx = (start + jnp.arange(S, dtype=jnp.int32)) % T
+        return (ck.at[:, idx].set(k_new, mode="drop"),
+                cv.at[:, idx].set(v_new, mode="drop"))
+
+    return jax.lax.cond(start + S <= T, contiguous, wrapped,
+                        cache_k, cache_v)
 
 
 def pos_write_slice(pos: Array, positions: Array, start: Array) -> Array:
-    return jax.lax.dynamic_update_slice(
-        pos, positions.astype(jnp.int32), (start.astype(jnp.int32),))
+    """Wrap-aware companion of :func:`kv_write_slice` for the [T] pos row."""
+    start = start.astype(jnp.int32)
+    S, T = positions.shape[0], pos.shape[0]
+    positions = positions.astype(jnp.int32)
+    if S >= T:  # only the last T survive (see kv_write_slice)
+        positions = positions[S - T:]
+        idx = (start + S - T + jnp.arange(T, dtype=jnp.int32)) % T
+        return pos.at[idx].set(positions, mode="drop")
+
+    def contiguous(p):
+        return jax.lax.dynamic_update_slice(p, positions, (start,))
+
+    def wrapped(p):
+        idx = (start + jnp.arange(S, dtype=jnp.int32)) % T
+        return p.at[idx].set(positions, mode="drop")
+
+    return jax.lax.cond(start + S <= T, contiguous, wrapped, pos)
+
+
+# ---------------------------------------------------------------------------
+# paged KV: pool init, gather/scatter through page tables (traced)
+# ---------------------------------------------------------------------------
+
+def init_paged_kv_cache(num_layers: int, batch: int, max_len: int,
+                        kv_heads: int, head_dim: int, dtype, *,
+                        page_size: int, num_pages: int) -> dict:
+    """Fresh paged cache: zeroed pool, fully unmapped tables."""
+    n_log = -(-max_len // page_size)
+    return {
+        "kp": jnp.zeros((num_layers, num_pages, page_size, kv_heads,
+                         head_dim), dtype),
+        "vp": jnp.zeros((num_layers, num_pages, page_size, kv_heads,
+                         head_dim), dtype),
+        "pt": jnp.full((batch, n_log), -1, jnp.int32),
+        "pos": jnp.full((max_len,), -1, jnp.int32),
+        "length": jnp.zeros((), jnp.int32),
+    }
+
+
+def identity_page_table(batch: int, max_len: int, page_size: int
+                        ) -> jnp.ndarray:
+    """[B, n_log] table mapping row b's logical page j to physical page
+    ``b * n_log + j`` — the trivial private layout (tests/benchmarks)."""
+    n_log = -(-max_len // page_size)
+    return (jnp.arange(batch, dtype=jnp.int32)[:, None] * n_log
+            + jnp.arange(n_log, dtype=jnp.int32)[None, :])
+
+
+def _page_index(page_table: Array, start: Array, S: int, page_size: int
+                ) -> Tuple[Array, Array]:
+    """(physical page [B,S], in-page offset [S]) for logical slots
+    ``start + arange(S)``. Unmapped entries come back negative — callers
+    clamp (gather) or drop (scatter)."""
+    slots = start.astype(jnp.int32) + jnp.arange(S, dtype=jnp.int32)
+    lp = slots // page_size
+    off = slots % page_size
+    n_log = page_table.shape[1]
+    lp_safe = jnp.clip(lp, 0, n_log - 1)
+    pp = page_table[:, lp_safe]                       # [B, S]
+    pp = jnp.where(((lp >= 0) & (lp < n_log))[None], pp, -1)
+    return pp, off
+
+
+def paged_kv_gather(pool_k: Array, pool_v: Array, page_table: Array,
+                    max_len: int, *, page_size: int
+                    ) -> Tuple[Array, Array, Array]:
+    """Materialise the dense logical view [B, T, Kh, D] of a paged row set.
+
+    ``pool_k/v`` are per-layer [P, ps, Kh, D]. Returns (k, v, mapped)
+    where ``mapped`` [B, T] flags slots whose page is mapped — unmapped
+    slots gather page 0 (finite garbage) and MUST be masked by the
+    caller's validity. This is the XLA fallback path; the Pallas kernel
+    reads pages in place instead.
+    """
+    pp, off = _page_index(page_table, jnp.zeros((), jnp.int32), max_len,
+                          page_size)
+    mapped = pp >= 0
+    pp = jnp.maximum(pp, 0)
+    k = pool_k[pp, off[None]]                         # [B, T, Kh, D]
+    v = pool_v[pp, off[None]]
+    return k, v, mapped
+
+
+def paged_kv_write(pool_k: Array, pool_v: Array, k_new: Array, v_new: Array,
+                   page_table: Array, start: Array, *, page_size: int
+                   ) -> Tuple[Array, Array]:
+    """Scatter a [B,S,Kh,D] chunk at logical slot ``start`` through the
+    page table into per-layer pools [P, ps, Kh, D]. Writes through
+    unmapped entries are dropped (dead rows own no pages). Rows must not
+    share the pages they write — the scheduler's copy-on-write page
+    layout guarantees written logical ranges map private pages."""
+    pp, off = _page_index(page_table, start, k_new.shape[1], page_size)
+    oob = pool_k.shape[0]  # sentinel physical page -> mode="drop"
+    pp = jnp.where(pp < 0, oob, pp)
+    off = jnp.broadcast_to(off[None], pp.shape)
+    pk = pool_k.at[pp, off].set(k_new.astype(pool_k.dtype), mode="drop")
+    pv = pool_v.at[pp, off].set(v_new.astype(pool_v.dtype), mode="drop")
+    return pk, pv
+
+
+def paged_kv_write_layers(pool_k: Array, pool_v: Array, ks: Array, vs: Array,
+                          page_table: Array, start: Array, *,
+                          page_size: int) -> Tuple[Array, Array]:
+    """All-layer variant (prefill): pools [L, P, ps, Kh, D], chunks
+    [L, B, S, Kh, D]."""
+    pp, off = _page_index(page_table, start, ks.shape[2], page_size)
+    oob = pool_k.shape[1]
+    pp = jnp.where(pp < 0, oob, pp)
+    off = jnp.broadcast_to(off[None], pp.shape)
+    pk = pool_k.at[:, pp, off].set(ks.astype(pool_k.dtype), mode="drop")
+    pv = pool_v.at[:, pp, off].set(vs.astype(pool_v.dtype), mode="drop")
+    return pk, pv
+
+
+# ---------------------------------------------------------------------------
+# page ownership (host-side; the serving scheduler drives this)
+# ---------------------------------------------------------------------------
+
+class PageAllocator:
+    """Free-list page allocator with refcounted sharing.
+
+    Pure host state over physical page ids ``[0, num_pages)`` — the pool
+    arrays themselves live on device. ``alloc`` hands out private pages
+    (refcount 1), ``share`` takes an extra reference on existing pages
+    (shared system-prompt prefix mapped into another slot), ``free``
+    drops one reference and returns zero-ref pages to the free list.
+    Admission control: the scheduler checks :attr:`available` before
+    admitting a request and keeps a permanent reference on shared-prefix
+    pages so batch retirement never reclaims them.
+    """
+
+    def __init__(self, num_pages: int):
+        assert num_pages > 0, num_pages
+        self.num_pages = num_pages
+        self._free: List[int] = list(range(num_pages - 1, -1, -1))
+        self._refs = [0] * num_pages
+
+    @property
+    def available(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return self.num_pages - len(self._free)
+
+    def refcount(self, page: int) -> int:
+        return self._refs[page]
+
+    def alloc(self, n: int) -> List[int]:
+        if n > len(self._free):
+            raise MemoryError(
+                f"page pool exhausted: want {n}, have {len(self._free)}")
+        pages = [self._free.pop() for _ in range(n)]
+        for p in pages:
+            self._refs[p] = 1
+        return pages
+
+    def share(self, pages: Sequence[int]) -> None:
+        for p in pages:
+            if self._refs[p] <= 0:  # real raise: -O must not strip this
+                raise ValueError(f"sharing an unallocated page {p}")
+            self._refs[p] += 1
+
+    def free(self, pages: Sequence[int]) -> None:
+        for p in pages:
+            if self._refs[p] <= 0:  # a double free would silently hand a
+                # live (possibly shared-prefix) page to the next alloc
+                raise ValueError(f"double free of page {p}")
+            self._refs[p] -= 1
+            if self._refs[p] == 0:
+                self._free.append(p)

@@ -26,7 +26,8 @@ import jax.numpy as jnp
 from repro.config.base import ModelConfig
 from repro.models import cache as cache_lib
 from repro.models.attention import (attention, cache_valid_mask,
-                                    cached_block_attend)
+                                    cached_block_attend,
+                                    paged_cached_block_attend)
 from repro.models.frontend import (frontend_embeds, frontend_len,
                                    init_frontend)
 from repro.models.layers import (apply_rope, dense_init, embed, init_embedding,
@@ -291,28 +292,52 @@ def _hybrid_forward(params: dict, cfg: ModelConfig, x: Array,
 
 def prefill(params: dict, cfg: ModelConfig, tokens: Array, *, max_len: int,
             window: int = 0, mode: Optional[str] = None,
-            frontend_feats: Optional[Array] = None) -> Tuple[Array, dict]:
+            frontend_feats: Optional[Array] = None,
+            cache: Optional[dict] = None,
+            page_size: int = 0) -> Tuple[Array, dict]:
     """Forward over the prompt; returns (logits, cache).
 
     ``mode`` defaults to causal (AR serving) — pass ``"full"`` for MDLM
     decoding where the prompt is encoded bidirectionally (LLaDA semantics).
     The cache is sized ``max_len`` (or the window for sliding-window decode)
     and holds the prompt's KV / final SSM state.
+
+    ``cache`` (attention families only): an externally-owned PAGED cache
+    dict — the prompt's K/V scatter through its page table into the page
+    pool instead of a freshly allocated dense buffer (``page_size`` must
+    match the pool's). The serving scheduler uses this to prefill a shared
+    system-prompt prefix once into refcounted pages.
     """
     x = _embed_inputs(params, cfg, tokens, frontend_feats)
     B, S, _ = x.shape
     positions = jnp.arange(S, dtype=jnp.int32)
     if mode is None:
         mode = "sliding" if window else "causal"
-    cache = cache_lib.init_cache(cfg, B, max_len, x.dtype, window=window)
+    if cache is not None:
+        assert cfg.family in ATTN_FAMILIES and "kp" in cache["attn"], \
+            "external prefill cache must be a paged attention cache"
+        assert page_size > 0 and not window
+    else:
+        cache = cache_lib.init_cache(cfg, B, max_len, x.dtype, window=window)
 
     if cfg.family in ATTN_FAMILIES:
         def body(h, lp):
             h, _, (k, v) = _attn_layer_full(lp, cfg, h, positions, mode, window)
             return h, (k, v)
         x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
-        cache["attn"] = _store_prefill_kv(cache["attn"], ks, vs, positions,
-                                          window)
+        kv = cache["attn"]
+        if "kp" in kv:  # paged: scatter through the page table
+            kp, vp = cache_lib.paged_kv_write_layers(
+                kv["kp"], kv["vp"], ks, vs, kv["pt"],
+                jnp.zeros((), jnp.int32), page_size=page_size)
+            cache["attn"] = dict(
+                kv, kp=kp, vp=vp,
+                pos=cache_lib.pos_write_slice(kv["pos"], positions,
+                                              jnp.zeros((), jnp.int32)),
+                length=jnp.asarray(S, jnp.int32))
+        else:
+            cache["attn"] = _store_prefill_kv(cache["attn"], ks, vs,
+                                              positions, window)
     elif cfg.family == "ssm":
         def body(h, lp):
             y, hf, cs = mamba2_forward(lp["ssm"], cfg,
@@ -386,14 +411,16 @@ def _hybrid_prefill(params: dict, cfg: ModelConfig, x: Array, positions: Array,
 # ---------------------------------------------------------------------------
 
 def decode_step(params: dict, cfg: ModelConfig, token: Array, cache: dict, *,
-                window: int = 0, attn_impl: str = "auto"
-                ) -> Tuple[Array, dict]:
+                window: int = 0, attn_impl: str = "auto",
+                page_size: int = 0) -> Tuple[Array, dict]:
     """token [B, 1] -> (logits [B, 1, V], cache). Writes then attends.
 
     ``attn_impl``: auto/dense/flash route through ``attention()`` ("flash"
     bounds the kv scan by the filled length); "kernel" routes through
     ``ops.cached_block_attention`` with a one-token block (Pallas on TPU).
     SSM / hybrid families ignore it (no KV attention / shared-block path).
+    A paged cache (``"kp"`` present) routes through the page table — no
+    ring variant (``window`` must be 0).
     """
     x = embed(params["embed"], token)
     B = x.shape[0]
@@ -405,7 +432,11 @@ def decode_step(params: dict, cfg: ModelConfig, token: Array, cache: dict, *,
         return _hybrid_decode(params, cfg, x, cache, window)
 
     kv = cache["attn"]
-    T = kv["k"].shape[2]
+    paged = "kp" in kv
+    if paged:
+        assert page_size > 0 and not window, \
+            "paged decode_step needs page_size and has no ring variant"
+    T = kv["pos"].shape[0] if paged else kv["k"].shape[2]
     length = kv["length"]
     q_pos = length[None].astype(jnp.int32)  # absolute position
     slot = jnp.where(jnp.asarray(T) > length, length, length % T)
@@ -414,14 +445,27 @@ def decode_step(params: dict, cfg: ModelConfig, token: Array, cache: dict, *,
     if attn_impl in ("kernel", "flash"):
         # post-write fill: length+1 slots, capped at T once the ring wraps
         kv_limit = jnp.minimum(length + 1, jnp.asarray(T, jnp.int32))
-        if use_kernel:
-            from repro.kernels import ops as kops
+    if use_kernel or paged:
+        from repro.kernels import ops as kops
 
     def body(h, xs):
         lp, ck, cv = xs
         hn = rms_norm(h, lp["ln1"], cfg.norm_eps)
         q, k, v = _qkv(lp, cfg, hn, q_pos)
-        if use_kernel:
+        if paged:
+            if use_kernel:
+                attn = kops.paged_block_attention(
+                    q, ck, cv, k, v, kv_pos=kv["pos"],
+                    page_table=kv["pt"], slot=slot, block_start=q_pos[0],
+                    page_size=page_size, kv_limit=kv_limit, window=window)
+            else:
+                attn, _ = paged_cached_block_attend(
+                    q, ck, cv, k, v, kv["pt"], kv["pos"], slot=slot,
+                    q_pos=q_pos, page_size=page_size, kv_limit=kv_limit,
+                    window=window, impl=attn_impl)
+            ck, cv = cache_lib.paged_kv_write(ck, cv, k, v, kv["pt"],
+                                              slot, page_size=page_size)
+        elif use_kernel:
             attn = kops.cached_block_attention(
                 q, ck, cv, k, v, kv_pos=kv["pos"], slot=slot,
                 block_start=q_pos[0], kv_limit=kv_limit, window=window)
@@ -435,9 +479,12 @@ def decode_step(params: dict, cfg: ModelConfig, token: Array, cache: dict, *,
         h, _ = _mlp_part(lp, cfg, h)
         return shard_ctx.act_bsd(h), (ck, cv)
 
-    x, (ck_new, cv_new) = jax.lax.scan(body, x, (params["layers"],
-                                                 kv["k"], kv["v"]))
-    kv = dict(kv, k=ck_new, v=cv_new,
+    x, (ck_new, cv_new) = jax.lax.scan(
+        body, x, (params["layers"],
+                  kv["kp"] if paged else kv["k"],
+                  kv["vp"] if paged else kv["v"]))
+    upd = dict(kp=ck_new, vp=cv_new) if paged else dict(k=ck_new, v=cv_new)
+    kv = dict(kv, **upd,
               pos=cache_lib.pos_write_slice(kv["pos"], q_pos, slot),
               length=length + 1)
     return _head(params, cfg, x), dict(cache, attn=kv)
@@ -531,8 +578,8 @@ def block_step(params: dict, cfg: ModelConfig, block_tokens: Array,
                block_start: Array, cache: dict, *, write: bool = False,
                advance: bool = True, exclude_start: Optional[Array] = None,
                exclude_len: int = 0, write_slot: Optional[Array] = None,
-               window: int = 0, attn_impl: str = "auto"
-               ) -> Tuple[Array, dict]:
+               window: int = 0, attn_impl: str = "auto",
+               page_size: int = 0) -> Tuple[Array, dict]:
     """One denoising forward of the active block against the cache.
 
     block_tokens [B, bs] (masked positions hold cfg.mask_token_id);
@@ -556,11 +603,20 @@ def block_step(params: dict, cfg: ModelConfig, block_tokens: Array,
         so the per-layer cache pre-write is skipped entirely on non-write
         steps — the generic path copies the full [T] buffer per layer per
         step just to insert the block.
+
+    A PAGED cache (``"kp"`` in ``cache["attn"]``, ``page_size`` set)
+    routes through the page table instead: the Pallas kernel DMAs pool
+    pages in place, the XLA paths gather the row's logical view, and
+    ``write=True`` scatters the block into the pool (unmapped rows drop).
     """
     assert cfg.supports_mdlm, f"{cfg.name} is causal-only (DESIGN.md)"
     x = embed(params["embed"], block_tokens)
     B, bs, _ = x.shape
     kv = cache["attn"]
+    paged = "kp" in kv
+    if paged:
+        assert page_size > 0, "paged cache needs page_size"
+        assert not window, "paged layout has no ring/sliding-window variant"
     q_pos = block_start + jnp.arange(bs, dtype=jnp.int32)
     slot = kv["length"] if write_slot is None else         jnp.asarray(write_slot, jnp.int32)
     use_kernel = attn_impl == "kernel"
@@ -571,10 +627,30 @@ def block_step(params: dict, cfg: ModelConfig, block_tokens: Array,
         kv_limit = kops.kv_limit_from_pos(kv["pos"])
 
     def body(h, xs):
-        lp, ck, cv = xs
+        if paged:
+            lp, pk, pv = xs
+        else:
+            lp, ck, cv = xs
         hn = rms_norm(h, lp["ln1"], cfg.norm_eps)
         q, k, v = _qkv(lp, cfg, hn, q_pos)
-        if use_kernel:
+        if paged:
+            if use_kernel:
+                attn = kops.paged_block_attention(
+                    q, pk, pv, k, v, kv_pos=kv["pos"],
+                    page_table=kv["pt"], slot=slot,
+                    block_start=block_start, page_size=page_size,
+                    kv_limit=kv_limit, exclude_start=exclude_start,
+                    exclude_len=exclude_len, window=window)
+            else:
+                attn, _ = paged_cached_block_attend(
+                    q, pk, pv, k, v, kv["pt"], kv["pos"], slot=slot,
+                    q_pos=q_pos, page_size=page_size, kv_limit=kv_limit,
+                    exclude_start=exclude_start, exclude_len=exclude_len,
+                    window=window, impl=attn_impl)
+            kv_out = cache_lib.paged_kv_write(
+                pk, pv, k, v, kv["pt"], slot, page_size=page_size) \
+                if write else None
+        elif use_kernel:
             attn = kops.cached_block_attention(
                 q, ck, cv, k, v, kv_pos=kv["pos"], slot=slot,
                 block_start=block_start, kv_limit=kv_limit,
@@ -592,12 +668,18 @@ def block_step(params: dict, cfg: ModelConfig, block_tokens: Array,
         h, _ = _mlp_part(lp, cfg, h)
         return shard_ctx.act_bsd(h), kv_out
 
-    x, kv_new = jax.lax.scan(body, x, (params["layers"],
-                                       kv["k"], kv["v"]))
+    if paged:
+        x, kv_new = jax.lax.scan(body, x, (params["layers"],
+                                           kv["kp"], kv["vp"]))
+    else:
+        x, kv_new = jax.lax.scan(body, x, (params["layers"],
+                                           kv["k"], kv["v"]))
     logits = _head(params, cfg, x)
     if write:
         ck_new, cv_new = kv_new
-        kv = dict(kv, k=ck_new, v=cv_new,
+        upd = dict(kp=ck_new, vp=cv_new) if paged else \
+            dict(k=ck_new, v=cv_new)
+        kv = dict(kv, **upd,
                   pos=cache_lib.pos_write_slice(kv["pos"], q_pos, slot),
                   length=kv["length"] + bs if advance else kv["length"])
         cache = dict(cache, attn=kv)

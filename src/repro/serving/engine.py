@@ -14,7 +14,11 @@ return responses in uid order. Callers that want batch-granularity control
 Throughput accounting (``EngineStats``): NFE (model forwards — the
 hardware-independent driver), *delivered* tokens (post-EOS truncation; a
 request that stops early is not credited ``max_new_tokens``), and
-per-request wall = its own queue wait + its batch's decode wall.
+per-request wall = its own queue wait + its batch's decode wall. Under
+the paged KV layout (``DecodeConfig.cache_layout="paged"``, SERVING.md
+"Paged KV") the stats additionally surface page-pool occupancy:
+``page_capacity``, ``pages_peak`` / ``page_util``, ``pages_shared``,
+``pages_freed``.
 """
 from __future__ import annotations
 

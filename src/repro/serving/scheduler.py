@@ -16,13 +16,23 @@ Lifecycle (SERVING.md):
                      denoising steps (the decoder's step loop and
                      commit/refresh forwards are live-row-aware).
 
-Batch filling is task-affinity-aware only where calibration demands it:
-calibrated tasks mix freely, but at most ONE *uncalibrated* task is
-admitted per batch, its first request pinned to slot 0 — the decoder
-records the confidence profile of row 0, so that row becomes the task's
-one-shot calibration (paper Algorithm 1). Requests of other uncalibrated
-tasks wait for a later batch (lifting this needs all-row profile
-recording — ROADMAP "parallel calibration").
+Batch filling no longer pins calibration to slot 0: the decoder records
+the confidence profile of EVERY live row, so each *uncalibrated* task's
+first admitted request — whatever slot it lands in — becomes that task's
+one-shot calibration (paper Algorithm 1), and several new tasks calibrate
+inside one mixed batch. Extra requests of a not-yet-calibrated task ride
+along on the static table.
+
+With ``DecodeConfig.cache_layout == "paged"`` the scheduler is the PAGE
+OWNER (SERVING.md "Paged KV"): it holds the device page pool and a host
+:class:`~repro.models.cache.PageAllocator`. Admission allocates each
+request's private pages (and refcount-maps the shared system-prompt
+pages), retirement frees them, and a request is admissible as soon as
+enough *pages* — not a whole dense slot — are free. Dead slots map no
+pages at all. ``EngineConfig.shared_prefix`` is prefilled ONCE into
+refcounted pages at engine construction; every slot's page table then
+maps those pages read-only (copy-on-write boundaries are page-aligned,
+so decode writes never touch them).
 """
 from __future__ import annotations
 
@@ -39,6 +49,8 @@ from repro.config.base import DecodeConfig, EngineConfig, ModelConfig
 from repro.core.decoder import make_generate_fn, result_profile
 from repro.core.osdt import CalibrationStore
 from repro.data import tokenizer as tok
+from repro.models import model as M
+from repro.models.cache import PageAllocator
 
 DEAD_TASK = "__dead__"  # pseudo-task of pad slots (resolves to the static table)
 
@@ -73,19 +85,25 @@ class RequestState:
 
 @dataclass
 class Slot:
-    """One row of the decode batch. ``state``: free | active | dead."""
+    """One row of the decode batch. ``state``: free | active | dead.
+    ``pages``: private pool pages this slot's request owns (paged layout);
+    freed — and shared-prefix references dropped — at retirement."""
     index: int
     state: str = "free"
     rs: Optional[RequestState] = None
+    pages: Optional[List[int]] = None
 
-    def admit(self, rs: Optional[RequestState]) -> None:
+    def admit(self, rs: Optional[RequestState],
+              pages: Optional[List[int]] = None) -> None:
         self.rs = rs
+        self.pages = pages
         self.state = "active" if rs is not None else "dead"
         if rs is not None:
             rs.slot = self.index
 
     def retire(self) -> None:
         self.rs = None
+        self.pages = None
         self.state = "free"
 
 
@@ -100,6 +118,11 @@ class EngineStats:
     batches: int = 0
     dead_slots: int = 0
     seq_steps: int = 0       # sum of per-row live denoising steps
+    # paged layout occupancy (all 0 under the dense layout)
+    page_capacity: int = 0   # total pool pages
+    pages_peak: int = 0      # max pages simultaneously allocated
+    pages_shared: int = 0    # pages pinned by the shared prefix
+    pages_freed: int = 0     # private-page frees at retirement (reclaim)
 
     @property
     def tokens_per_s(self) -> float:
@@ -108,6 +131,11 @@ class EngineStats:
     @property
     def tokens_per_nfe(self) -> float:
         return self.tokens / self.nfe if self.nfe else 0.0
+
+    @property
+    def page_util(self) -> float:
+        return self.pages_peak / self.page_capacity \
+            if self.page_capacity else 0.0
 
 
 class Scheduler:
@@ -139,12 +167,80 @@ class Scheduler:
         self.mask_id = int(mask_id)
         self.eos_id = int(eos_id)
         self._mask_arr = jnp.asarray(mask_id, jnp.int32)
-        self._gen = make_generate_fn(cfg, dcfg, cache_mode=mode,
-                                     attn_impl=self.ecfg.attn_impl)
         self.queue: Deque[RequestState] = deque()
         self.slots = [Slot(i) for i in range(self.ecfg.batch_size)]
         self.stats = EngineStats()
         self.seen_tasks: Dict[str, int] = {}  # task -> requests admitted
+
+        self.paged = dcfg.cache_layout == "paged" and mode != "none"
+        # the shared system prompt is prepended to every row's prompt
+        # under BOTH layouts (same tokens in, comparable runs); the page
+        # rounding applies regardless so the prompts match — only the
+        # paged layout additionally dedups its KV into shared pages
+        self.shared_len = 0           # shared-prefix tokens (page multiple)
+        self._shared_ids: List[int] = []
+        self._shared_pages: List[int] = []
+        if self.ecfg.shared_prefix:
+            ps = dcfg.page_size
+            ids = tok.encode(self.ecfg.shared_prefix, bos=True)
+            # round DOWN to a page multiple (and keep at least one page
+            # of per-row prompt — the cap itself must also round down,
+            # or a prompt_len that is not a page multiple yields a
+            # non-aligned shared length) so decode writes never touch a
+            # shared page — copy-on-write with the copy elided by
+            # alignment
+            cap = (max(self.ecfg.prompt_len - ps, 0) // ps) * ps
+            self.shared_len = min((len(ids) // ps) * ps, cap)
+            self._shared_ids = ids[:self.shared_len]
+        if self.paged:
+            self._init_page_pool(mode)
+        self._gen = make_generate_fn(
+            cfg, dcfg, cache_mode=mode, attn_impl=self.ecfg.attn_impl,
+            cache_layout="paged" if self.paged else "dense",
+            shared_prefix_len=self.shared_len if self.paged else 0)
+
+    # -- page pool (paged layout; SERVING.md "Paged KV") ----------------
+    def _init_page_pool(self, mode: str) -> None:
+        cfg, dcfg, ecfg = self.cfg, self.dcfg, self.ecfg
+        assert cfg.has_attention and cfg.family != "hybrid", \
+            "paged KV needs a pure-attention family"
+        ps = dcfg.page_size
+        B, P = ecfg.batch_size, ecfg.prompt_len
+        self.max_len = P + dcfg.max_new_tokens + \
+            (dcfg.block_size if mode == "dual" else 0)
+        self.n_log = dcfg.pages_per_seq(self.max_len)
+        n_shared = self.shared_len // ps
+        self.private_per_slot = self.n_log - n_shared
+        num_pages = ecfg.num_pages or (n_shared + B * self.private_per_slot)
+        assert num_pages >= n_shared + self.private_per_slot, \
+            f"pool of {num_pages} pages cannot fit one request"
+        self.allocator = PageAllocator(num_pages)
+        L, Kh = cfg.num_layers, cfg.num_kv_heads
+        D = cfg.resolved_head_dim
+        dtype = M.param_dtype(cfg)
+        self._pool_k = jnp.zeros((L, num_pages, ps, Kh, D), dtype)
+        self._pool_v = jnp.zeros((L, num_pages, ps, Kh, D), dtype)
+        self.stats.page_capacity = num_pages
+        if self.shared_len:
+            # prefill the shared prefix ONCE; the scheduler keeps a
+            # permanent reference so retirement never reclaims its pages
+            self._shared_pages = self.allocator.alloc(n_shared)
+            spt = np.full((1, self.n_log), -1, np.int32)
+            spt[0, :n_shared] = self._shared_pages
+            cache = {"attn": {
+                "kp": self._pool_k, "vp": self._pool_v,
+                "pt": jnp.asarray(spt),
+                "pos": jnp.full((self.max_len,), -1, jnp.int32),
+                "length": jnp.zeros((), jnp.int32)}}
+            shared = jnp.asarray(self._shared_ids, jnp.int32)[None]
+            _, cache = M.prefill(self.params, cfg, shared,
+                                 max_len=self.max_len, mode="full",
+                                 cache=cache, page_size=ps)
+            self._pool_k = cache["attn"]["kp"]
+            self._pool_v = cache["attn"]["vp"]
+            self.stats.nfe += 1  # the one-time shared-prefix forward
+        self.stats.pages_shared = len(self._shared_pages)
+        self.stats.pages_peak = self.allocator.in_use
 
     # -- queue ----------------------------------------------------------
     def submit(self, requests: List[Request]) -> None:
@@ -156,59 +252,71 @@ class Scheduler:
         return len(self.queue)
 
     # -- batch formation ------------------------------------------------
-    def _fill(self) -> Tuple[List[RequestState], Optional[str]]:
-        """Pop admissible requests (FIFO, task-affinity-aware).
+    def _fill(self) -> Tuple[List[RequestState], Dict[str, int]]:
+        """Pop admissible requests (FIFO).
 
-        Returns (picked, calib_task). ``picked[0]`` is the calibration
-        request when ``calib_task`` is not None.
+        Returns (picked, calib_rows): ``picked[i]`` lands in slot ``i``;
+        ``calib_rows`` maps each not-yet-calibrated task to the row whose
+        recorded profile will calibrate it (its first admitted request) —
+        every row records, so several new tasks calibrate per batch.
+
+        Paged layout: admission stops once the page pool cannot fit
+        another request's private pages — the pool, not the slot count,
+        is the capacity, so a partially free pool admits partial batches
+        instead of waiting for a whole dense slot's worth of HBM.
         """
         B = self.ecfg.batch_size
+        if self.paged and self.private_per_slot:
+            B = min(B, self.allocator.available // self.private_per_slot)
         picked: List[RequestState] = []
-        deferred: List[RequestState] = []
-        calib_task: Optional[str] = None
+        calib_rows: Dict[str, int] = {}
         while self.queue and len(picked) < B:
             rs = self.queue.popleft()
             t = rs.req.task
-            if self.store.calibrated(t) or t == calib_task:
-                # calibrated tasks mix freely; extra requests of the
-                # admitted-new task ride along (decoded with the static
-                # table this batch; only slot 0 records a profile)
-                picked.append(rs)
-            elif calib_task is None:
-                calib_task = t
-                picked.insert(0, rs)  # pin to slot 0 (the recorded row)
-            else:
-                # a second uncalibrated task waits for a later batch —
-                # only row 0 is recorded, so admitting it now would serve
-                # it uncalibrated without ever calibrating it
-                deferred.append(rs)
-        for rs in reversed(deferred):
-            self.queue.appendleft(rs)
-        return picked, calib_task
+            if not self.store.calibrated(t) and t not in calib_rows:
+                calib_rows[t] = len(picked)
+            picked.append(rs)
+        return picked, calib_rows
 
     # -- decode ---------------------------------------------------------
     def step(self) -> List[Response]:
-        picked, calib_task = self._fill()
+        picked, calib_rows = self._fill()
         if not picked:
             return []
         P = self.ecfg.prompt_len
         now = time.perf_counter()
         for slot, rs in zip(self.slots, picked):
             rs.t_admit = now
-            slot.admit(rs)
+            pages = None
+            if self.paged:
+                # admit = allocate: private pages + a reference on the
+                # shared-prefix pages (_fill guaranteed availability)
+                pages = self.allocator.alloc(self.private_per_slot)
+                self.allocator.share(self._shared_pages)
+            slot.admit(rs, pages)
             self.seen_tasks[rs.req.task] = \
                 self.seen_tasks.get(rs.req.task, 0) + 1
         for slot in self.slots[len(picked):]:
-            slot.admit(None)  # explicit dead slot
+            slot.admit(None)  # explicit dead slot: zero pages
 
         # the slot pool is the source of truth for the batch's runtime
-        # arguments: prompt rows, liveness, and the per-slot table gather
+        # arguments: prompt rows, liveness, per-slot table gather, and
+        # (paged) the page tables
         rows, tasks = [], []
+        n_shared = self.shared_len // self.dcfg.page_size if self.paged \
+            else 0
+        page_tables = np.full((len(self.slots), self.n_log), -1, np.int32) \
+            if self.paged else None
         for slot in self.slots:
             if slot.state == "active":
-                ids = tok.encode(slot.rs.req.prompt, bos=True)[-P:]
-                rows.append(tok.pad_left(ids, P))
+                ids = tok.encode(slot.rs.req.prompt, bos=True)
+                ids = ids[-(P - self.shared_len):]
+                rows.append(self._shared_ids
+                            + tok.pad_left(ids, P - self.shared_len))
                 tasks.append(slot.rs.req.task)
+                if self.paged:
+                    page_tables[slot.index, :n_shared] = self._shared_pages
+                    page_tables[slot.index, n_shared:] = slot.pages
             else:  # dead slot: mask-only prompt row, live=False
                 rows.append([self.mask_id] * P)
                 tasks.append(DEAD_TASK)
@@ -216,50 +324,76 @@ class Scheduler:
         live = np.asarray([s.state == "active" for s in self.slots])
         n_dead = int((~live).sum())
         tables = self.store.tables_for(tasks)
+        if self.paged:
+            self.stats.pages_peak = max(self.stats.pages_peak,
+                                        self.allocator.in_use)
 
-        t0 = time.perf_counter()
-        res = self._gen(self.params, jnp.asarray(prompt),
-                        jnp.asarray(tables), self._mask_arr,
-                        jnp.asarray(live),
-                        self.eos_id if self.ecfg.eos_early_exit else None)
-        tokens = np.asarray(res.tokens)  # blocks until ready
-        decode_s = time.perf_counter() - t0
+        try:
+            t0 = time.perf_counter()
+            args = (self.params, jnp.asarray(prompt), jnp.asarray(tables),
+                    self._mask_arr, jnp.asarray(live),
+                    self.eos_id if self.ecfg.eos_early_exit else None)
+            if self.paged:
+                args += (self._pool_k, self._pool_v,
+                         jnp.asarray(page_tables))
+            res = self._gen(*args)
+            tokens = np.asarray(res.tokens)  # blocks until ready
+            decode_s = time.perf_counter() - t0
 
-        if calib_task is not None:
-            # row=0: the pinned calibration row's own step counts (not the
-            # batch-max, which other tasks' ride-along rows determine)
-            self.store.ingest(calib_task, result_profile(res, row=0))
-            if self.ecfg.store_path:
+            for task, row in calib_rows.items():
+                # each new task calibrates from its own row's recording
+                # and step counts (not the batch-max, which ride-along
+                # rows of other tasks determine)
+                self.store.ingest(task, result_profile(res, row=row))
+            if calib_rows and self.ecfg.store_path:
                 self.store.save(self.ecfg.store_path)
 
-        seq_steps = np.asarray(res.seq_steps)
-        out: List[Response] = []
-        for slot in self.slots:
-            if slot.rs is None:
-                continue
-            j, rs = slot.index, slot.rs
-            row = tokens[j].tolist()
-            if self.eos_id in row:
-                row = row[:row.index(self.eos_id)]
-            row = [t for t in row if t != self.mask_id]
-            queue_s = rs.t_admit - rs.t_submit
-            steps = int(seq_steps[j].sum())
-            out.append(Response(
-                rs.req.uid, rs.req.task, tok.decode(row),
-                nfe=steps, wall_s=queue_s + decode_s, queue_s=queue_s,
-                decode_s=decode_s, tokens_out=len(row),
-                tokens_dropped=tokens.shape[1] - len(row)))
-            self.stats.tokens += len(row)
-            self.stats.tokens_dropped += tokens.shape[1] - len(row)
-            self.stats.queue_s += queue_s
-            self.stats.seq_steps += steps
-        self.stats.requests += len(picked)
-        self.stats.nfe += int(res.nfe)
-        self.stats.wall_s += decode_s
-        self.stats.batches += 1
-        self.stats.dead_slots += n_dead
-        for slot in self.slots:
-            slot.retire()
+            seq_steps = np.asarray(res.seq_steps)
+            out: List[Response] = []
+            for slot in self.slots:
+                if slot.rs is None:
+                    continue
+                j, rs = slot.index, slot.rs
+                row = tokens[j].tolist()
+                if self.eos_id in row:
+                    row = row[:row.index(self.eos_id)]
+                row = [t for t in row if t != self.mask_id]
+                queue_s = rs.t_admit - rs.t_submit
+                steps = int(seq_steps[j].sum())
+                out.append(Response(
+                    rs.req.uid, rs.req.task, tok.decode(row),
+                    nfe=steps, wall_s=queue_s + decode_s, queue_s=queue_s,
+                    decode_s=decode_s, tokens_out=len(row),
+                    tokens_dropped=tokens.shape[1] - len(row)))
+                self.stats.tokens += len(row)
+                self.stats.tokens_dropped += tokens.shape[1] - len(row)
+                self.stats.queue_s += queue_s
+                self.stats.seq_steps += steps
+            self.stats.requests += len(picked)
+            self.stats.nfe += int(res.nfe)
+            self.stats.wall_s += decode_s
+            self.stats.batches += 1
+            self.stats.dead_slots += n_dead
+        except BaseException:
+            # a failed batch must not swallow its requests: put them
+            # back at the head of the queue (FIFO order preserved) so a
+            # retried run() can still serve every uid
+            for rs in reversed(picked):
+                self.queue.appendleft(rs)
+            raise
+        finally:
+            # retire = reclaim, even when decode raises: a failed batch
+            # must not leak its pages (a leak shrinks the pool until
+            # _fill can admit nothing and run() livelocks)
+            for slot in self.slots:
+                if self.paged and slot.pages is not None:
+                    # private pages return to the free list; the
+                    # shared-prefix reference is dropped (the scheduler's
+                    # own permanent reference keeps those pages)
+                    self.allocator.free(slot.pages)
+                    self.allocator.free(self._shared_pages)
+                    self.stats.pages_freed += len(slot.pages)
+                slot.retire()
         return out
 
     def run(self) -> List[Response]:

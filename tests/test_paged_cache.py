@@ -1,0 +1,477 @@
+"""Paged KV-cache subsystem (SERVING.md "Paged KV"): allocator semantics,
+gather/scatter round-trips, the paged Pallas kernel vs its oracle, paged
+vs dense token identity across cache modes x attention impls, shared-prefix
+refcount/copy-on-write correctness, and page-reclaim accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config.base import DecodeConfig, EngineConfig
+from repro.config.registry import get_config
+from repro.core.decoder import make_generate_fn
+from repro.data import tokenizer as tok
+from repro.kernels import ref
+from repro.kernels.block_attention import paged_block_attention_pallas
+from repro.models import cache as cache_lib
+from repro.models import model as M
+from repro.serving.engine import DiffusionEngine
+from repro.serving.scheduler import Request, Scheduler
+
+PS = 8  # page size under test (kernel floor: multiples of 8)
+DCFG_DENSE = DecodeConfig(max_new_tokens=16, block_size=4, policy="osdt",
+                          mode="block", metric="q1", cap=0.9, slack=0.1,
+                          threshold=0.9)
+DCFG_PAGED = DecodeConfig(max_new_tokens=16, block_size=4, policy="osdt",
+                          mode="block", metric="q1", cap=0.9, slack=0.1,
+                          threshold=0.9, cache_layout="paged", page_size=PS)
+PROMPT_LEN = 16
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_config("llada-8b").reduced()
+    return cfg, M.init_params(jax.random.key(0), cfg)
+
+
+def _pool(cfg, num_pages, dtype=jnp.float32):
+    L, Kh, D = cfg.num_layers, cfg.num_kv_heads, cfg.resolved_head_dim
+    return (jnp.zeros((L, num_pages, PS, Kh, D), dtype),
+            jnp.zeros((L, num_pages, PS, Kh, D), dtype))
+
+
+# ---------------------------------------------------------------------------
+# allocator: free list, refcounts, reclaim
+# ---------------------------------------------------------------------------
+
+def test_allocator_free_list_and_refcounts():
+    a = cache_lib.PageAllocator(8)
+    own = a.alloc(3)
+    assert a.in_use == 3 and sorted(own) == sorted(set(own))
+    a.share(own)                      # second owner of the same pages
+    a.free(own)
+    assert a.in_use == 3              # still referenced once
+    a.free(own)
+    assert a.in_use == 0 and a.available == 8
+    with pytest.raises(ValueError):
+        a.free(own)                   # double free detected
+    with pytest.raises(MemoryError):
+        a.alloc(9)                    # exceeds capacity
+    # freed pages are reusable
+    again = a.alloc(8)
+    assert sorted(again) == list(range(8))
+
+
+# ---------------------------------------------------------------------------
+# gather / scatter round-trip through arbitrary page tables
+# ---------------------------------------------------------------------------
+
+def test_paged_write_gather_roundtrip():
+    rng = np.random.default_rng(0)
+    B, T, Kh, D = 3, 24, 2, 4
+    n_log, num_pages = T // PS, 11
+    # scrambled private mapping + one unmapped row
+    pages = rng.permutation(num_pages)[: 2 * n_log]
+    pt = np.full((B, n_log), -1, np.int32)
+    pt[0], pt[2] = pages[:n_log], pages[n_log:]
+    pt = jnp.asarray(pt)
+    pool_k = jnp.zeros((num_pages, PS, Kh, D))
+    pool_v = jnp.zeros((num_pages, PS, Kh, D))
+    k = jnp.asarray(rng.standard_normal((B, 10, Kh, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, 10, Kh, D)), jnp.float32)
+    start = jnp.asarray(5, jnp.int32)  # straddles page boundaries
+    pool_k, pool_v = cache_lib.paged_kv_write(pool_k, pool_v, k, v, pt,
+                                              start, page_size=PS)
+    gk, gv, mapped = cache_lib.paged_kv_gather(pool_k, pool_v, pt, T,
+                                               page_size=PS)
+    for b in (0, 2):
+        np.testing.assert_array_equal(np.asarray(gk)[b, 5:15],
+                                      np.asarray(k)[b])
+        np.testing.assert_array_equal(np.asarray(gv)[b, 5:15],
+                                      np.asarray(v)[b])
+        assert np.asarray(mapped)[b].all()
+    # the unmapped row dropped its writes and reports unmapped
+    assert not np.asarray(mapped)[1].any()
+    assert (np.asarray(gk)[1] == np.asarray(gk)[1]).all()  # finite reads
+
+
+def test_paged_prefill_layers_matches_dense(small_model):
+    """M.prefill through an external paged cache must store exactly the
+    K/V a dense prefill stores, page-scattered."""
+    cfg, params = small_model
+    B, P, max_len = 2, PROMPT_LEN, PROMPT_LEN + 16
+    prompt = jax.random.randint(jax.random.key(1), (B, P), 1, 256)
+    _, dense = M.prefill(params, cfg, prompt, max_len=max_len, mode="full")
+    n_log = -(-max_len // PS)
+    pt = cache_lib.identity_page_table(B, max_len, PS)
+    pool_k, pool_v = _pool(cfg, B * n_log)
+    cache = {"attn": {"kp": pool_k, "vp": pool_v, "pt": pt,
+                      "pos": jnp.full((max_len,), -1, jnp.int32),
+                      "length": jnp.zeros((), jnp.int32)}}
+    _, paged = M.prefill(params, cfg, prompt, max_len=max_len, mode="full",
+                         cache=cache, page_size=PS)
+    kv = paged["attn"]
+    gk, gv, _ = cache_lib.paged_kv_gather(kv["kp"][0], kv["vp"][0],
+                                          kv["pt"], max_len, page_size=PS)
+    np.testing.assert_array_equal(np.asarray(gk)[:, :P],
+                                  np.asarray(dense["attn"]["k"][0])[:, :P])
+    np.testing.assert_array_equal(np.asarray(gv)[:, :P],
+                                  np.asarray(dense["attn"]["v"][0])[:, :P])
+    np.testing.assert_array_equal(np.asarray(kv["pos"]),
+                                  np.asarray(dense["attn"]["pos"]))
+    assert int(kv["length"]) == P
+
+
+# ---------------------------------------------------------------------------
+# paged Pallas kernel vs oracle (interpret mode)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.paged
+@pytest.mark.parametrize("fill,holes,exclude_len,window", [
+    (8, False, 0, 0),
+    (20, False, 0, 0),
+    (20, True, 0, 0),
+    (20, False, 4, 0),
+    (20, False, 0, 12),
+    (36, True, 4, 0),  # slot + bs == T: the fullest in-contract cache
+])
+def test_paged_kernel_matches_oracle(fill, holes, exclude_len, window):
+    rng = np.random.default_rng(fill + exclude_len + window)
+    B, bs, H, Kh, D = 2, 8, 8, 2, 32
+    T, n_log = 44, 6
+    num_pages = B * n_log + 3
+    q = jnp.asarray(rng.standard_normal((B, bs, H, D)), jnp.float32)
+    pool_k = jnp.asarray(rng.standard_normal((num_pages, PS, Kh, D)),
+                         jnp.float32)
+    pool_v = jnp.asarray(rng.standard_normal((num_pages, PS, Kh, D)),
+                         jnp.float32)
+    bk = jnp.asarray(rng.standard_normal((B, bs, Kh, D)), jnp.float32)
+    bv = jnp.asarray(rng.standard_normal((B, bs, Kh, D)), jnp.float32)
+    kv_pos = jnp.where(jnp.arange(T) < fill, jnp.arange(T), -1)
+    kv_pos = kv_pos.astype(jnp.int32)
+    perm = rng.permutation(num_pages)
+    pt = np.stack([perm[:n_log], perm[n_log:2 * n_log]]).astype(np.int32)
+    if holes:
+        pt[1, 2] = -1  # a reclaimed page inside the valid extent
+    pt = jnp.asarray(pt)
+    slot = jnp.asarray(fill, jnp.int32)
+    bstart = jnp.asarray(fill, jnp.int32)
+    exc = jnp.asarray(4, jnp.int32) if exclude_len else None
+    got = paged_block_attention_pallas(
+        q, pool_k, pool_v, bk, bv, kv_pos, pt, slot=slot,
+        block_start=bstart, exclude_start=exc, exclude_len=exclude_len,
+        window=window, interpret=True)
+    want = ref.paged_block_attention_ref(
+        q, pool_k, pool_v, bk, bv, kv_pos, pt, slot=slot,
+        block_start=bstart, exclude_start=exc, exclude_len=exclude_len,
+        window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.paged
+def test_paged_kernel_skips_dead_and_unmapped_pages():
+    """Tile counts: work scales with the LIVE MAPPED pages of each row —
+    a fully unmapped (dead) row touches only its fresh-block tile."""
+    rng = np.random.default_rng(9)
+    B, bs, H, Kh, D = 2, 8, 8, 2, 32
+    T, n_log = 48, 6
+    num_pages = n_log + 2
+    q = jnp.asarray(rng.standard_normal((B, bs, H, D)), jnp.float32)
+    pool_k = jnp.asarray(rng.standard_normal((num_pages, PS, Kh, D)),
+                         jnp.float32)
+    pool_v = jnp.asarray(rng.standard_normal((num_pages, PS, Kh, D)),
+                         jnp.float32)
+    bk = jnp.asarray(rng.standard_normal((B, bs, Kh, D)), jnp.float32)
+    bv = jnp.asarray(rng.standard_normal((B, bs, Kh, D)), jnp.float32)
+    fill = 24  # 3 of 6 logical pages live
+    kv_pos = jnp.where(jnp.arange(T) < fill, jnp.arange(T), -1)
+    kv_pos = kv_pos.astype(jnp.int32)
+    pt = np.full((B, n_log), -1, np.int32)
+    pt[0, :] = np.arange(n_log)  # live row; row 1 stays dead
+    _, cnt = paged_block_attention_pallas(
+        q, pool_k, pool_v, bk, bv, kv_pos, jnp.asarray(pt),
+        slot=jnp.asarray(fill, jnp.int32),
+        block_start=jnp.asarray(fill, jnp.int32),
+        debug_tile_counts=True, interpret=True)
+    cnt = np.asarray(cnt)
+    assert (cnt[0] == fill // PS + 1).all()   # live pages + block tile
+    assert (cnt[1] == 1).all()                # dead row: block tile only
+
+
+# ---------------------------------------------------------------------------
+# tentpole acceptance: paged decode == dense decode, all modes x impls
+# ---------------------------------------------------------------------------
+
+@pytest.mark.paged
+@pytest.mark.parametrize("cache_mode,attn_impl", [
+    ("prefix", "auto"), ("prefix", "kernel"), ("prefix", "xla"),
+    ("dual", "auto"), ("dual", "kernel"), ("dual", "xla"),
+    ("none", "auto"),
+])
+def test_paged_token_identity(small_model, cache_mode, attn_impl):
+    """Paged decode must be token-identical to dense for every cache mode
+    and attention impl ("xla" spells the length-aware flash path)."""
+    cfg, params = small_model
+    impl = "flash" if attn_impl == "xla" else attn_impl
+    B, P = 2, PROMPT_LEN
+    prompt = jax.random.randint(jax.random.key(2), (B, P), 1, 256)
+    table = jnp.full((DCFG_DENSE.num_blocks, DCFG_DENSE.steps_cap), 0.9,
+                     jnp.float32)
+    mask = jnp.asarray(tok.MASK_ID, jnp.int32)
+    dense = make_generate_fn(cfg, DCFG_DENSE, cache_mode=cache_mode,
+                             attn_impl=impl)
+    want = dense(params, prompt, table, mask)
+    paged = make_generate_fn(cfg, DCFG_PAGED, cache_mode=cache_mode,
+                             attn_impl=impl, cache_layout="paged")
+    if cache_mode == "none":       # cacheless: nothing to page — the
+        got = paged(params, prompt, table, mask)   # same program serves
+    else:
+        max_len = P + DCFG_PAGED.max_new_tokens + \
+            (DCFG_PAGED.block_size if cache_mode == "dual" else 0)
+        n_log = DCFG_PAGED.pages_per_seq(max_len)
+        pt = cache_lib.identity_page_table(B, max_len, PS)
+        pool_k, pool_v = _pool(cfg, B * n_log)
+        got = paged(params, prompt, table, mask, None, None,
+                    pool_k, pool_v, pt)
+    np.testing.assert_array_equal(np.asarray(got.tokens),
+                                  np.asarray(want.tokens))
+    assert int(got.nfe) == int(want.nfe)
+    np.testing.assert_array_equal(np.asarray(got.seq_steps),
+                                  np.asarray(want.seq_steps))
+
+
+@pytest.mark.paged
+def test_paged_scheduler_matches_dense(small_model):
+    """End-to-end: the paged engine serves byte-identical responses to
+    the dense engine on the same mixed stream."""
+    cfg, params = small_model
+    ecfg = EngineConfig(batch_size=4, prompt_len=PROMPT_LEN)
+    reqs = [Request(i, t, f"{t} question {i}?")
+            for i, t in enumerate(["alpha", "beta", "alpha"])]
+    out_d = DiffusionEngine(params, cfg, DCFG_DENSE,
+                            ecfg=ecfg).submit(list(reqs))
+    out_p = DiffusionEngine(params, cfg, DCFG_PAGED,
+                            ecfg=ecfg).submit(list(reqs))
+    for d, p in zip(out_d, out_p):
+        assert (d.uid, d.text, d.tokens_out) == (p.uid, p.text,
+                                                 p.tokens_out)
+
+
+# ---------------------------------------------------------------------------
+# shared prefix: refcounts, copy-on-write, reclaim accounting
+# ---------------------------------------------------------------------------
+
+def _shared_scheduler(cfg, params, num_pages=0):
+    ecfg = EngineConfig(batch_size=2, prompt_len=32,
+                        shared_prefix="SYSTEM: be terse. ",
+                        num_pages=num_pages)
+    return Scheduler(params, cfg, DCFG_PAGED, ecfg=ecfg)
+
+
+@pytest.mark.paged
+def test_shared_prefix_pages_are_refcounted_and_cow(small_model):
+    """The shared pages are prefilled once, mapped into every active
+    slot, never written by decode (copy-on-write with page-aligned
+    boundaries => the copy is elided), and survive retirement via the
+    scheduler's permanent reference."""
+    cfg, params = small_model
+    sch = _shared_scheduler(cfg, params)
+    n_shared = len(sch._shared_pages)
+    assert n_shared == sch.shared_len // PS > 0
+    before_k = np.asarray(sch._pool_k)[:, sch._shared_pages].copy()
+    assert (np.abs(before_k).sum() > 0)  # the one-time prefill wrote them
+
+    sch.submit([Request(0, "a", "q0?"), Request(1, "b", "q1?")])
+    # during the batch each active slot holds a reference
+    base = sch.allocator
+    sch.step()
+    # decode never wrote the shared pages (COW contract)
+    after_k = np.asarray(sch._pool_k)[:, sch._shared_pages]
+    np.testing.assert_array_equal(before_k, after_k)
+    # retirement dropped the per-slot references; only the scheduler's
+    # permanent reference remains
+    for p in sch._shared_pages:
+        assert base.refcount(p) == 1
+    assert base.in_use == n_shared
+
+
+@pytest.mark.paged
+def test_page_reclaim_accounting_after_eos(small_model):
+    """EOS-retired rows' private pages return to the free list at
+    retirement and the stats ledger balances: peak <= capacity,
+    freed == allocated-private, end occupancy == shared pages."""
+    cfg, params = small_model
+    sch = _shared_scheduler(cfg, params)
+    sch.submit([Request(i, "t", f"question {i}?") for i in range(5)])
+    out = sch.run()
+    assert len(out) == 5
+    st = sch.stats
+    assert st.page_capacity == sch.allocator.num_pages
+    assert st.pages_shared == len(sch._shared_pages)
+    assert st.pages_peak <= st.page_capacity
+    assert st.pages_freed == st.requests * sch.private_per_slot
+    assert sch.allocator.in_use == st.pages_shared  # full reclaim
+
+
+@pytest.mark.paged
+def test_shared_prefix_aligns_when_prompt_len_is_odd(small_model):
+    """A prompt_len that is NOT a page multiple must still yield a
+    page-aligned shared length (the cap rounds down too) — previously
+    this crashed engine construction."""
+    cfg, params = small_model
+    ecfg = EngineConfig(batch_size=2, prompt_len=20,
+                        shared_prefix="SYSTEM: be terse and precise. ")
+    sch = Scheduler(params, cfg, DCFG_PAGED, ecfg=ecfg)
+    assert sch.shared_len % PS == 0 and 0 < sch.shared_len <= 20 - PS
+    sch.submit([Request(0, "t", "q?")])
+    assert len(sch.run()) == 1
+
+
+@pytest.mark.paged
+def test_failed_batch_requeues_and_reclaims(small_model):
+    """A decode exception must neither leak the batch's pages (livelock)
+    nor swallow its requests: they go back to the queue head."""
+    cfg, params = small_model
+    sch = _shared_scheduler(cfg, params)
+    n_shared = len(sch._shared_pages)
+    sch.submit([Request(i, "t", f"question {i}?") for i in range(2)])
+
+    real_gen = sch._gen
+    sch._gen = lambda *a, **k: (_ for _ in ()).throw(RuntimeError("boom"))
+    with pytest.raises(RuntimeError):
+        sch.step()
+    assert sch.allocator.in_use == n_shared   # pages reclaimed
+    assert sch.pending() == 2                 # requests restored (FIFO)
+    sch._gen = real_gen
+    out = sch.run()                           # retry serves every uid
+    assert sorted(r.uid for r in out) == [0, 1]
+
+
+@pytest.mark.paged
+def test_page_scarcity_limits_admission(small_model):
+    """A pool sized below batch_size * pages-per-request admits partial
+    batches — requests wait for PAGES, not whole dense slots — and the
+    queue still drains completely."""
+    cfg, params = small_model
+    probe = _shared_scheduler(cfg, params)
+    n_shared = len(probe._shared_pages)
+    per = probe.private_per_slot
+    sch = _shared_scheduler(cfg, params, num_pages=n_shared + per)
+    sch.submit([Request(i, "t", f"question {i}?") for i in range(3)])
+    first = sch.step()
+    assert len(first) == 1          # pages for exactly one request
+    rest = sch.run()
+    assert len(rest) == 2
+    assert sch.allocator.in_use == n_shared
+
+
+@pytest.mark.paged
+def test_shared_pages_equal_private_copies(small_model):
+    """Mapping ONE set of shared-prefix pages into every row must decode
+    identically to giving each row its own private copy of those pages —
+    sharing is pure memory dedup, never a semantic change."""
+    cfg, params = small_model
+    B, P, Sp = 2, 24, PS
+    max_len = P + DCFG_PAGED.max_new_tokens
+    n_log = DCFG_PAGED.pages_per_seq(max_len)
+    n_shared = Sp // PS
+    n_priv = n_log - n_shared
+    num_pages = 3 * n_shared + B * n_priv
+    pool_k, pool_v = _pool(cfg, num_pages)
+
+    shared_tokens = jax.random.randint(jax.random.key(5), (1, Sp), 1, 256)
+    spt = np.full((1, n_log), -1, np.int32)
+    spt[0, :n_shared] = np.arange(n_shared)
+    cache = {"attn": {"kp": pool_k, "vp": pool_v, "pt": jnp.asarray(spt),
+                      "pos": jnp.full((max_len,), -1, jnp.int32),
+                      "length": jnp.zeros((), jnp.int32)}}
+    _, cache = M.prefill(params, cfg, shared_tokens, max_len=max_len,
+                         mode="full", cache=cache, page_size=PS)
+    pool_k, pool_v = cache["attn"]["kp"], cache["attn"]["vp"]
+    # two extra byte-identical copies of the shared pages
+    for c in (1, 2):
+        dst = np.arange(c * n_shared, (c + 1) * n_shared)
+        pool_k = pool_k.at[:, dst].set(pool_k[:, :n_shared])
+        pool_v = pool_v.at[:, dst].set(pool_v[:, :n_shared])
+
+    prompt = jnp.concatenate(
+        [jnp.broadcast_to(shared_tokens, (B, Sp)),
+         jax.random.randint(jax.random.key(6), (B, P - Sp), 1, 256)], 1)
+    table = jnp.full((DCFG_PAGED.num_blocks, DCFG_PAGED.steps_cap), 0.9,
+                     jnp.float32)
+    mask = jnp.asarray(tok.MASK_ID, jnp.int32)
+    gen = make_generate_fn(cfg, DCFG_PAGED, cache_layout="paged",
+                           shared_prefix_len=Sp)
+    tails = 3 * n_shared + np.arange(B * n_priv).reshape(B, n_priv)
+    pt_shared = np.concatenate(
+        [np.tile(np.arange(n_shared), (B, 1)), tails], 1).astype(np.int32)
+    pt_private = np.concatenate(
+        [np.stack([np.arange(n_shared) + n_shared,
+                   np.arange(n_shared) + 2 * n_shared]), tails],
+        1).astype(np.int32)
+    res_s = gen(params, prompt, table, mask, None, None,
+                pool_k, pool_v, jnp.asarray(pt_shared))
+    res_p = gen(params, prompt, table, mask, None, None,
+                pool_k, pool_v, jnp.asarray(pt_private))
+    np.testing.assert_array_equal(np.asarray(res_s.tokens),
+                                  np.asarray(res_p.tokens))
+
+
+# ---------------------------------------------------------------------------
+# wrap-aware kv_write_slice (ring-buffer regression)
+# ---------------------------------------------------------------------------
+
+def test_kv_write_slice_wraps_ring():
+    """A chunk crossing the ring boundary must wrap to slot 0 — the old
+    dynamic_update_slice clamped the start and silently corrupted slots
+    [T-S, T) instead."""
+    B, T, S, Kh, D = 2, 8, 4, 1, 2
+    rng = np.random.default_rng(1)
+    ck0 = jnp.asarray(rng.standard_normal((B, T, Kh, D)), jnp.float32)
+    cv0 = jnp.asarray(rng.standard_normal((B, T, Kh, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, Kh, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, Kh, D)), jnp.float32)
+
+    @jax.jit
+    def write(ck, cv, start):
+        return cache_lib.kv_write_slice(ck, cv, k, v, start)
+
+    ck, cv = write(ck0, cv0, jnp.asarray(6, jnp.int32))
+    for i, slot in enumerate([6, 7, 0, 1]):
+        np.testing.assert_array_equal(np.asarray(ck)[:, slot],
+                                      np.asarray(k)[:, i])
+        np.testing.assert_array_equal(np.asarray(cv)[:, slot],
+                                      np.asarray(v)[:, i])
+    # untouched slots keep their contents
+    for slot in (2, 3, 4, 5):
+        np.testing.assert_array_equal(np.asarray(ck)[:, slot],
+                                      np.asarray(ck0)[:, slot])
+    # the contiguous fast path is unchanged
+    ck, cv = write(ck0, cv0, jnp.asarray(2, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(ck)[:, 2:6], np.asarray(k))
+
+    pos = jnp.full((T,), -1, jnp.int32)
+    pos = cache_lib.pos_write_slice(pos, jnp.arange(10, 14),
+                                    jnp.asarray(6, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(pos),
+                                  [12, 13, -1, -1, -1, -1, 10, 11])
+
+
+def test_kv_write_slice_chunk_longer_than_ring():
+    """S > T: ring semantics keep exactly the LAST T entries (a naive
+    modular scatter has duplicate indices with undefined winner)."""
+    B, T, S, Kh, D = 1, 4, 6, 1, 2
+    rng = np.random.default_rng(2)
+    ck0 = jnp.zeros((B, T, Kh, D), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, Kh, D)), jnp.float32)
+    ck, _ = cache_lib.kv_write_slice(ck0, ck0, k, k,
+                                     jnp.asarray(1, jnp.int32))
+    # entries 2..5 land at slots (1+2..1+5) % 4 = 3, 0, 1, 2
+    for i, slot in zip(range(2, 6), [3, 0, 1, 2]):
+        np.testing.assert_array_equal(np.asarray(ck)[:, slot],
+                                      np.asarray(k)[:, i])
+    pos = cache_lib.pos_write_slice(jnp.full((T,), -1, jnp.int32),
+                                    jnp.arange(10, 16),
+                                    jnp.asarray(1, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(pos), [13, 14, 15, 12])

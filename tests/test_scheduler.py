@@ -106,10 +106,10 @@ def test_eos_early_exit_reduces_seq_steps(small_model):
     assert (seq[0, 1:] == 0).all()
     assert not bool(np.asarray(res.live)[0])
     assert seq.sum() < np.asarray(base.seq_steps).sum()
-    # the calibration recording follows row 0's liveness: nothing after
-    # its retirement block may be marked valid (would poison ingest())
-    assert not np.asarray(res.conf_valid)[1:].any()
-    assert np.asarray(base.conf_valid)[1:].any()
+    # the calibration recording follows each row's liveness: nothing after
+    # row 0's retirement block may be marked valid (would poison ingest())
+    assert not np.asarray(res.conf_valid)[0, 1:].any()
+    assert np.asarray(base.conf_valid)[0, 1:].any()
     # blocks decoded before retirement are identical to the baseline
     np.testing.assert_array_equal(np.asarray(res.tokens)[0, :DCFG.block_size],
                                   np.asarray(base.tokens)[0, :DCFG.block_size])
@@ -131,21 +131,36 @@ def test_dead_rows_cost_no_steps_and_no_interference(small_model):
     assert int(dead.nfe) == 1 and int(np.asarray(dead.seq_steps).sum()) == 0
 
 
-def test_scheduler_admits_one_new_task_per_batch(small_model):
-    """Two uncalibrated tasks: the second waits for the next batch; the
-    first batch's calibration request is pinned to slot 0 and calibrates."""
+def test_scheduler_calibrates_several_new_tasks_per_batch(small_model):
+    """Parallel calibration: every row records a profile, so two
+    uncalibrated tasks admitted into ONE mixed batch both calibrate —
+    each from its own first request's row, not the batch-max counts."""
     cfg, params = small_model
     ecfg = EngineConfig(batch_size=4, prompt_len=PROMPT_LEN)
     sched = Scheduler(params, cfg, DCFG, ecfg=ecfg)
     sched.submit(_requests("t1", 1, 0) + _requests("t2", 1, 1)
                  + _requests("t1", 1, 2))
     out1 = sched.step()
-    assert sorted(r.uid for r in out1) == [0, 2]
-    assert sched.store.calibrated("t1") and not sched.store.calibrated("t2")
-    assert sched.pending() == 1
-    out2 = sched.step()
-    assert [r.uid for r in out2] == [1]
-    assert sched.store.calibrated("t2")
+    assert sorted(r.uid for r in out1) == [0, 1, 2]
+    assert sched.store.calibrated("t1") and sched.store.calibrated("t2")
+    assert sched.stats.batches == 1 and sched.pending() == 0
+
+
+def test_parallel_calibration_matches_isolated(small_model):
+    """A task calibrated from row r of a mixed batch must get the same
+    table as when it calibrates alone (same prompt, same static table,
+    same compiled program => identical row math and step counts)."""
+    cfg, params = small_model
+    ecfg = EngineConfig(batch_size=4, prompt_len=PROMPT_LEN)
+    mixed = Scheduler(params, cfg, DCFG, ecfg=ecfg)
+    mixed.submit([_requests("a", 1, 0)[0], _requests("b", 1, 1)[0]])
+    mixed.step()
+    for task in ("a", "b"):
+        iso = Scheduler(params, cfg, DCFG, ecfg=ecfg)
+        iso.submit(_requests(task, 1, 0))
+        iso.step()
+        np.testing.assert_array_equal(iso.store.tables[task],
+                                      mixed.store.tables[task])
 
 
 def test_engine_stats_accounting(small_model, calibrated_store):
