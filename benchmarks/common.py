@@ -32,7 +32,17 @@ CKPT = ROOT / "experiments" / "bench_model.msgpack"
 PROMPT_LEN = 64
 RESP_LEN = 16
 BLOCK = 4
-TRAIN_STEPS = int(os.environ.get("REPRO_BENCH_TRAIN_STEPS", "2000"))
+# REPRO_BENCH_TRAIN_STEPS is an explicit REQUEST: set it to retrain the
+# cached bench model at that budget. Unset, get_model reuses whatever
+# experiments/bench_model.msgpack was trained with (its step count is
+# stamped into the checkpoint metadata) and only falls back to training
+# _DEFAULT_TRAIN_STEPS when no usable checkpoint exists — previously an
+# unset env var silently retrained 2000 steps over a perfectly good
+# 300-step checkpoint.
+_ENV_TRAIN_STEPS = os.environ.get("REPRO_BENCH_TRAIN_STEPS", "")
+_DEFAULT_TRAIN_STEPS = 2000
+TRAIN_STEPS = int(_ENV_TRAIN_STEPS) if _ENV_TRAIN_STEPS \
+    else _DEFAULT_TRAIN_STEPS
 
 
 def bench_config() -> ModelConfig:
@@ -49,8 +59,15 @@ def get_model(verbose: bool = True) -> Tuple[ModelConfig, dict]:
                                                        cfg))
     if CKPT.exists():
         params, meta = restore(str(CKPT), shape_probe)
-        if meta.get("steps") == TRAIN_STEPS:
+        trained = meta.get("steps")
+        if trained and (not _ENV_TRAIN_STEPS or trained == TRAIN_STEPS):
             return cfg, params
+        if verbose and _ENV_TRAIN_STEPS:
+            print(f"# {CKPT.name}: trained {trained} steps, "
+                  f"REPRO_BENCH_TRAIN_STEPS={TRAIN_STEPS} requested — "
+                  f"retraining")
+        elif verbose:
+            print(f"# {CKPT.name}: no trained-step stamp — retraining")
     if verbose:
         print(f"# training bench model ({TRAIN_STEPS} steps)...")
     tcfg = TrainConfig(steps=TRAIN_STEPS, batch_size=16,
@@ -63,6 +80,28 @@ def get_model(verbose: bool = True) -> Tuple[ModelConfig, dict]:
     CKPT.parent.mkdir(parents=True, exist_ok=True)
     save(str(CKPT), params, {"steps": TRAIN_STEPS, "arch": cfg.name})
     return cfg, params
+
+
+def request_stream(n: int, tasks: Tuple[str, ...], seed: int):
+    """A deterministic round-robin serving stream: ([Request], gold)
+    where ``gold[uid] = (task, sample)`` — the shared scaffolding of the
+    serving benchmarks (scheduler/paged_kv/spec_decode)."""
+    from repro.serving.engine import Request
+    rng = np.random.default_rng(seed)
+    reqs, gold = [], {}
+    for i in range(n):
+        task = tasks[i % len(tasks)]
+        s = TASKS[task].make(rng, 1)[0]
+        reqs.append(Request(i, task, s.prompt))
+        gold[i] = (task, s)
+    return reqs, gold
+
+
+def stream_accuracy(out, gold) -> float:
+    """Exact-match accuracy of engine responses against a stream's gold."""
+    hits = [TASKS[gold[r.uid][0]].score(r.text, gold[r.uid][1])
+            for r in out]
+    return float(np.mean(hits)) if hits else 0.0
 
 
 def task_prompts(task_name: str, n: int, seed: int = 1234

@@ -32,7 +32,7 @@ import numpy as np
 
 from benchmarks import common
 from repro.config.base import DecodeConfig, EngineConfig
-from repro.serving.engine import DiffusionEngine, Request
+from repro.serving.engine import DiffusionEngine
 from repro.serving.scheduler import Scheduler
 
 N_REQS = int(os.environ.get("REPRO_PAGED_BENCH_REQS", "24"))
@@ -48,20 +48,7 @@ def _dcfg(layout: str) -> DecodeConfig:
 
 
 def _stream():
-    rng = np.random.default_rng(11)
-    reqs, gold = [], {}
-    for i in range(N_REQS):
-        task = TASKS_USED[i % len(TASKS_USED)]
-        s = common.TASKS[task].make(rng, 1)[0]
-        reqs.append(Request(i, task, s.prompt))
-        gold[i] = (task, s)
-    return reqs, gold
-
-
-def _accuracy(out, gold) -> float:
-    hits = [common.TASKS[gold[r.uid][0]].score(r.text, gold[r.uid][1])
-            for r in out]
-    return float(np.mean(hits)) if hits else 0.0
+    return common.request_stream(N_REQS, TASKS_USED, seed=11)
 
 
 def _run(params, cfg, layout: str, store_tables):
@@ -115,12 +102,12 @@ def run(csv_rows: List[str], verbose: bool = True) -> None:
             f"{wall_d / max(st_d.tokens, 1) * 1e6:.2f},"
             f"kv_bytes_per_slot={mem_d};tok={st_d.tokens};"
             f"tok_per_s={tps_d:.1f};nfe={st_d.nfe};"
-            f"acc={_accuracy(out_d, gold):.2f}")
+            f"acc={common.stream_accuracy(out_d, gold):.2f}")
     paged = (f"paged_kv/shared{BATCH}/paged,"
              f"{wall_p / max(st_p.tokens, 1) * 1e6:.2f},"
              f"kv_bytes_per_slot={mem_p};tok={st_p.tokens};"
              f"tok_per_s={tps_p:.1f};nfe={st_p.nfe};"
-             f"acc={_accuracy(out_p, gold):.2f};"
+             f"acc={common.stream_accuracy(out_p, gold):.2f};"
              f"mem_ratio={mem_d / max(mem_p, 1):.2f};"
              f"pages_peak={st_p.pages_peak}/{st_p.page_capacity};"
              f"pages_shared={st_p.pages_shared};"

@@ -14,7 +14,8 @@ from typing import List
 
 from benchmarks import (block_attn, cache_modes, fig1_confidence,
                         fig2_cosine, fig3_5_sweep, kernels_bench,
-                        paged_kv, scheduler_bench, table1_compare)
+                        paged_kv, scheduler_bench, spec_decode,
+                        table1_compare)
 
 BENCHES = {
     "fig1": fig1_confidence.run,
@@ -26,6 +27,7 @@ BENCHES = {
     "block_attn": block_attn.run,
     "scheduler": scheduler_bench.run,
     "paged_kv": paged_kv.run,
+    "spec_decode": spec_decode.run,
 }
 
 

@@ -1,0 +1,149 @@
+"""Speculative block drafting vs the PR-3 paged continuous-batching
+baseline.
+
+Same weights, same request stream, same pre-calibrated per-task tables
+AND profiles, same paged engine config — the only variable is
+``EngineConfig.spec_decode``: the baseline steps every block through the
+threshold loop; the draft engine one-shot-drafts the blocks each task's
+signature predicts clear in <= 1 step, verifies them in a second forward,
+and skips the accepted blocks' denoising steps entirely.
+
+Both engines decode the full response budget (``eos_early_exit=False``):
+this is the multi-easy-block regime drafting targets — with early exit
+the EOS tail already costs zero steps and the only draftable content is
+the answer block itself. Delivered tokens are EOS-truncated identically
+on both sides, so tokens/s compares equal useful work; the benchmark
+prints both delivered counts so the equal-tokens premise is visible.
+
+Also records an acceptance-rate sweep over scaled threshold tables. The
+verification threshold is the task's own step-0 calibrated tau, so the
+scale is ONE global strictness knob: it tightens verification AND the
+stepped rule AND the signature together (a stricter table also makes the
+stepped loop spend more fallback steps — the sweep's NFE column is the
+whole-system effect, not a pure verification ablation).
+
+  REPRO_SPEC_BENCH_REQS=8 PYTHONPATH=src:. python -m benchmarks.run spec_decode
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks import common
+from repro.config.base import DecodeConfig, EngineConfig
+from repro.core.osdt import CalibrationStore
+from repro.serving.engine import DiffusionEngine
+
+N_REQS = int(os.environ.get("REPRO_SPEC_BENCH_REQS", "24"))
+BATCH = 4
+BLOCK = 2          # 16 blocks of 2: the many-easy-blocks serving shape
+RESP = 32
+PROMPT_LEN = common.PROMPT_LEN
+PAGE = 8
+TASKS_USED = ("gpqa-syn", "humaneval-syn")
+
+
+def _dcfg() -> DecodeConfig:
+    return common.default_dcfg(max_new_tokens=RESP, block_size=BLOCK,
+                               cache_layout="paged", page_size=PAGE)
+
+
+def _ecfg(spec: bool) -> EngineConfig:
+    return EngineConfig(batch_size=BATCH, prompt_len=PROMPT_LEN,
+                        eos_early_exit=False, spec_decode=spec)
+
+
+def _stream():
+    return common.request_stream(N_REQS, TASKS_USED, seed=23)
+
+
+def _run(params, cfg, store: CalibrationStore, *, spec: bool,
+         tau_scale: float = 1.0, repeats: int = 3):
+    """Serve the stream ``repeats`` times through fresh engines (first
+    compile is shared process-wide) and keep the fastest — the container
+    has 2 cores and shares them, so a single wall sample is noise."""
+    dcfg = _dcfg()
+    best = None
+    for _ in range(repeats):
+        eng = DiffusionEngine(params, cfg, dcfg, ecfg=_ecfg(spec),
+                              store=CalibrationStore(dcfg))
+        eng.store.profiles.update(store.profiles)
+        eng.store.tables.update(
+            {t: (tab * tau_scale).astype(np.float32)
+             for t, tab in store.tables.items()})
+        reqs, gold = _stream()
+        t0 = time.perf_counter()
+        out = eng.submit(reqs)
+        wall = time.perf_counter() - t0
+        if best is None or eng.stats.wall_s < best[0].stats.wall_s:
+            best = (eng, out, wall, gold)
+    return best
+
+
+def run(csv_rows: List[str], verbose: bool = True) -> None:
+    cfg, params = common.get_model(verbose=verbose)
+
+    # calibrate once at the full response budget (profiles must cover
+    # every block for the signature) and hand BOTH engines the result
+    dcfg = _dcfg()
+    calib = DiffusionEngine(params, cfg, dcfg, ecfg=_ecfg(False),
+                            store=CalibrationStore(dcfg))
+    calib.submit(_stream()[0][: len(TASKS_USED)])
+    store = calib.store
+
+    _run(params, cfg, store, spec=False, repeats=1)  # warm-up (compile)
+    eng_b, out_b, wall_b, gold = _run(params, cfg, store, spec=False)
+    _run(params, cfg, store, spec=True, repeats=1)   # warm-up (compile)
+    eng_d, out_d, wall_d, _ = _run(params, cfg, store, spec=True)
+
+    st_b, st_d = eng_b.stats, eng_d.stats
+    # the stats-glossary throughput: delivered tokens over summed batch
+    # decode walls (host-side tokenisation etc. is identical on both
+    # sides and only dilutes the comparison); us_per_call keeps the full
+    # submit wall for reference
+    tps_b = st_b.tokens_per_s
+    tps_d = st_d.tokens_per_s
+    same = all(b.text == d.text for b, d in zip(out_b, out_d))
+
+    base = (f"spec_decode/paged{BATCH}/step,"
+            f"{wall_b / max(st_b.tokens, 1) * 1e6:.2f},"
+            f"tok={st_b.tokens};tok_per_s={tps_b:.1f};nfe={st_b.nfe};"
+            f"acc={common.stream_accuracy(out_b, gold):.2f}")
+    spec = (f"spec_decode/paged{BATCH}/draft,"
+            f"{wall_d / max(st_d.tokens, 1) * 1e6:.2f},"
+            f"tok={st_d.tokens};tok_per_s={tps_d:.1f};nfe={st_d.nfe};"
+            f"acc={common.stream_accuracy(out_d, gold):.2f};"
+            f"accept_rate={st_d.draft_accept_rate:.2f};"
+            f"drafted={st_d.blocks_drafted};"
+            f"accepted={st_d.blocks_accepted};"
+            f"nfe_saved={st_d.nfe_saved};"
+            f"same_text={int(same)};"
+            f"speedup={tps_d / tps_b:.2f};"
+            f"nfe_ratio={st_b.nfe / max(st_d.nfe, 1):.2f}")
+    rows = [base, spec]
+
+    # acceptance-rate sweep: tighten the whole threshold table (one
+    # global strictness knob — see the module docstring)
+    for scale in (1.05, 1.15, 1.3):
+        eng_s, out_s, wall_s, _ = _run(params, cfg, store, spec=True,
+                                       tau_scale=scale, repeats=1)
+        st = eng_s.stats
+        rows.append(
+            f"spec_decode/sweep/tau{scale:.2f},"
+            f"{wall_s / max(st.tokens, 1) * 1e6:.2f},"
+            f"accept_rate={st.draft_accept_rate:.2f};"
+            f"drafted={st.blocks_drafted};nfe={st.nfe};"
+            f"acc={common.stream_accuracy(out_s, gold):.2f};"
+            f"tok_per_s={st.tokens_per_s:.1f}")
+
+    for row in rows:
+        csv_rows.append(row)
+        if verbose:
+            print(row)
+
+
+if __name__ == "__main__":
+    run([])

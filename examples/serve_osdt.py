@@ -1,6 +1,6 @@
 """Continuous-batching serving with per-slot OSDT tables (SERVING.md).
 
-    PYTHONPATH=src:. python examples/serve_osdt.py [--paged]
+    PYTHONPATH=src:. python examples/serve_osdt.py [--paged] [--spec]
 
 Simulates a mixed request stream across three tasks. The engine keeps ONE
 calibration store and ONE compiled decode program; every task calibrates
@@ -10,8 +10,11 @@ freely: the per-slot threshold table is gathered at runtime. Rows retire
 at EOS, so short answers stop costing denoising steps. With ``--paged``
 the KV cache is a page pool: a shared system prompt is prefilled once
 into refcounted pages, dead slots pin zero pages, and retirement reclaims
-pages for the next batch. Prints per-task accuracy + throughput
-accounting, the per-request queue/decode split, and page occupancy.
+pages for the next batch. With ``--spec`` the engine decodes through the
+draft-and-verify program: blocks a task's calibrated signature predicts
+easy are one-shot drafted and, when verification accepts them, skip
+their denoising steps. Prints per-task accuracy + throughput accounting,
+the per-request queue/decode split, page occupancy, and draft acceptance.
 """
 import sys
 
@@ -25,6 +28,7 @@ from repro.serving.engine import DiffusionEngine, Request
 
 def main() -> None:
     paged = "--paged" in sys.argv
+    spec = "--spec" in sys.argv
     cfg, params = common.get_model()
     dcfg = DecodeConfig(max_new_tokens=32, block_size=8, policy="osdt",
                         mode="block", metric="q1", cap=0.8, slack=0.15,
@@ -33,7 +37,8 @@ def main() -> None:
                         page_size=8)
     ecfg = EngineConfig(batch_size=4, prompt_len=64, cache_mode="prefix",
                         eos_early_exit=True,
-                        shared_prefix="answer briefly. " if paged else "")
+                        shared_prefix="answer briefly. " if paged else "",
+                        spec_decode=spec)
     engine = DiffusionEngine(params, cfg, dcfg, ecfg=ecfg)
 
     rng = np.random.default_rng(3)
@@ -70,6 +75,11 @@ def main() -> None:
         print(f"pages: capacity={st.page_capacity} peak={st.pages_peak} "
               f"({st.page_util:.0%}) shared={st.pages_shared} "
               f"freed={st.pages_freed}")
+    if st.blocks_drafted:
+        print(f"drafting: {st.blocks_drafted} drafted "
+              f"{st.blocks_accepted} accepted "
+              f"({st.draft_accept_rate:.0%}) over {st.draft_batches} "
+              f"batches, ~{st.nfe_saved} forwards saved")
 
 
 if __name__ == "__main__":

@@ -261,6 +261,14 @@ class EngineConfig:
     # into every slot (the effective shared length rounds down to a page
     # multiple so decode writes never touch a shared page)
     shared_prefix: str = ""
+    # speculative block drafting (SERVING.md "Speculative drafting"):
+    # decode through the variant="draft" program — blocks the task's
+    # calibrated signature predicts clear in <= draft_max_steps steps are
+    # drafted in one forward and verified in a second; accepted blocks
+    # skip their denoising steps. Off by default: the stepped path stays
+    # bit-identical to a spec_decode-free engine.
+    spec_decode: bool = False
+    draft_max_steps: int = 1
 
     def resolved_cache_mode(self) -> str:
         assert self.cache_mode in ("prefix", "dual", "none"), self.cache_mode

@@ -48,6 +48,8 @@ class GenerateResult(NamedTuple):
     steps_per_block: Array  # [nb] int32 — batch-max steps per block
     seq_steps: Array     # [B, nb] int32 — steps each row was live+masked
     live: Array          # [B] bool — row still live at exit (no EOS seen)
+    blocks_drafted: Array   # [B] int32 — blocks speculatively drafted
+    blocks_accepted: Array  # [B] int32 — drafted blocks that verified
 
 
 def _unmask_choice(conf: Array, toks: Array, block: Array, mask_id: Array,
@@ -77,7 +79,7 @@ def make_generate_fn(cfg: ModelConfig, dcfg: DecodeConfig, *,
                      use_cache: bool = True, quota: int = 0,
                      use_kernel: bool = False, cache_mode: str = "",
                      attn_impl: str = "", cache_layout: str = "",
-                     shared_prefix_len: int = 0):
+                     shared_prefix_len: int = 0, variant: str = "step"):
     """Build (or fetch) the jitted generate function.
 
     fn(params, prompt [B, P] int32, table, mask_id [],
@@ -127,6 +129,21 @@ def make_generate_fn(cfg: ModelConfig, dcfg: DecodeConfig, *,
     prefill is the exact bidirectional full-prompt forward and paged
     decode is token-identical to dense.
 
+    ``variant``: "step" is the stepped loop above; "draft" adds
+    speculative block drafting (SERVING.md "Speculative drafting") and a
+    trailing runtime argument ``draft_mask [B, nb]`` bool — blocks the
+    profile-derived signature predicts clear in <= 1 step. Before the
+    block loop, ONE forward over the fully-masked response region drafts
+    every flagged block's tokens at once and ONE verification forward
+    re-scores them: a block is accepted only if every drafted token's
+    probability in the revealed context clears the row's step-0
+    threshold ``table[b, blk, 0]``. Accepted blocks enter the block loop
+    already unmasked (zero denoising steps; their K/V still commit as
+    usual), rejected blocks are demoted back to mask and decode through
+    the normal stepped loop. ``draft_mask=None`` (or all-False) skips
+    both forwards via ``lax.cond`` — the draft program then reproduces
+    the stepped path's tokens exactly.
+
     Memoized on the NORMALIZED variant key, so spelling-equivalent calls
     (e.g. ``use_cache=True`` vs ``cache_mode="prefix"``) share one jitted
     program — one trace/compile per (cfg, dcfg, variant) process-wide.
@@ -140,6 +157,7 @@ def make_generate_fn(cfg: ModelConfig, dcfg: DecodeConfig, *,
     if not cache_layout:
         cache_layout = dcfg.cache_layout or "dense"
     assert cache_layout in ("dense", "paged"), cache_layout
+    assert variant in ("step", "draft"), variant
     if cache_mode == "none":
         cache_layout = "dense"  # cacheless: nothing to page
     if cache_layout != "paged":
@@ -147,25 +165,29 @@ def make_generate_fn(cfg: ModelConfig, dcfg: DecodeConfig, *,
     else:
         assert shared_prefix_len % dcfg.page_size == 0, \
             (shared_prefix_len, dcfg.page_size)
+    assert not (variant == "draft" and quota > 0), \
+        "drafting presupposes the threshold rule, not the quota baseline"
     return _make_generate_fn(cfg, dcfg, quota, use_kernel, cache_mode,
-                             attn_impl, cache_layout, shared_prefix_len)
+                             attn_impl, cache_layout, shared_prefix_len,
+                             variant)
 
 
 @lru_cache(maxsize=None)
 def _make_generate_fn(cfg: ModelConfig, dcfg: DecodeConfig, quota: int,
                       use_kernel: bool, cache_mode: str, attn_impl: str,
                       cache_layout: str = "dense",
-                      shared_prefix_len: int = 0):
+                      shared_prefix_len: int = 0, variant: str = "step"):
     assert cfg.supports_mdlm, f"{cfg.name}: diffusion decoding inapplicable"
     use_cache = cache_mode != "none"
     dual = cache_mode == "dual"
     paged = cache_layout == "paged"
+    draft = variant == "draft"
     ps, Sp = dcfg.page_size, shared_prefix_len
     N, bs = dcfg.max_new_tokens, dcfg.block_size
     nb, sc = dcfg.num_blocks, dcfg.steps_cap
 
     def gen(params, prompt, table, mask_id, live=None, eos_id=None,
-            pool_k=None, pool_v=None, page_table=None):
+            pool_k=None, pool_v=None, page_table=None, draft_mask=None):
         B, P = prompt.shape
         if table.ndim == 2:
             # legacy shared table: broadcast to the per-slot rank
@@ -217,6 +239,63 @@ def _make_generate_fn(cfg: ModelConfig, dcfg: DecodeConfig, quota: int,
         else:
             cache0 = None
 
+        drafted_ct = jnp.zeros((B,), jnp.int32)
+        accepted_ct = jnp.zeros((B,), jnp.int32)
+        if draft:
+            # -- speculative block drafting (SERVING.md) ---------------
+            # ONE forward over the fully-masked response region guesses
+            # every flagged block's tokens; ONE verification forward
+            # re-scores the guess against the per-slot step-0 thresholds.
+            # Accepted blocks enter the block loop already unmasked (the
+            # while loop sees no masked positions and runs zero steps);
+            # rejected blocks fall back to the stepped rule untouched.
+            dm = (jnp.zeros((B, nb), bool) if draft_mask is None
+                  else jnp.asarray(draft_mask).astype(bool))
+            dm = dm & live0[:, None]        # dead rows never draft
+            pos_dm = jnp.repeat(dm, bs, axis=1)             # [B, N]
+            tau0 = jnp.repeat(table[:, :, 0], bs, axis=1)   # [B, N]
+
+            def region_logits(region):
+                # logits of the whole response region in one forward
+                if use_cache:
+                    logits, _ = M.block_step(
+                        params, cfg, region, jnp.asarray(P, jnp.int32),
+                        cache0, attn_impl=attn_impl, page_size=ps,
+                        row_live=live0 if paged else None)
+                    return logits
+                x = jnp.concatenate([prompt, region], axis=1)
+                logits, _ = M.forward(params, cfg, x, mode="full")
+                return logits[:, P:]
+
+            def do_draft(args):
+                resp, nfe = args
+                _, toks1 = confidence(region_logits(resp),
+                                      use_kernel=use_kernel)
+                cand = jnp.where(pos_dm, toks1, resp)
+                # re-score THE DRAFTED TOKENS in the revealed context:
+                # P(drafted | drafted region) must clear the same step-0
+                # tau the stepped rule would have applied (P(argmax) is
+                # the wrong quantity here — the drafted token is already
+                # chosen; what verification owes is its probability)
+                logp2 = jax.nn.log_softmax(
+                    region_logits(cand).astype(jnp.float32), axis=-1)
+                sel = jnp.take_along_axis(
+                    logp2, cand[..., None].astype(jnp.int32),
+                    axis=-1)[..., 0]
+                ok = jnp.exp(sel) > tau0
+                blk_ok = jnp.all(ok.reshape(B, nb, bs), axis=-1) & dm
+                keep = jnp.repeat(blk_ok, bs, axis=1)
+                return jnp.where(keep, cand, resp), nfe + 2, blk_ok
+
+            def no_draft(args):
+                resp, nfe = args
+                return resp, nfe, jnp.zeros((B, nb), bool)
+
+            resp, nfe, accept_blk = jax.lax.cond(
+                jnp.any(dm), do_draft, no_draft, (resp, nfe))
+            drafted_ct = dm.sum(axis=1).astype(jnp.int32)
+            accepted_ct = accept_blk.sum(axis=1).astype(jnp.int32)
+
         def block_body(b, carry):
             resp, cache, nfe, conf_rec, val_rec, steps_used, live, \
                 seq_steps = carry
@@ -236,7 +315,8 @@ def _make_generate_fn(cfg: ModelConfig, dcfg: DecodeConfig, quota: int,
                                         jnp.asarray(P, jnp.int32), cache,
                                         write=True, advance=False,
                                         write_slot=P, attn_impl=attn_impl,
-                                        page_size=ps)
+                                        page_size=ps,
+                                        row_live=live if paged else None)
                     return c, nfe + 1
 
                 cache, nfe = jax.lax.cond(
@@ -247,13 +327,16 @@ def _make_generate_fn(cfg: ModelConfig, dcfg: DecodeConfig, quota: int,
                     logits, _ = M.block_step(
                         params, cfg, block, block_start, cache,
                         write_slot=P + N, exclude_start=start + P,
-                        exclude_len=bs, attn_impl=attn_impl, page_size=ps)
+                        exclude_len=bs, attn_impl=attn_impl, page_size=ps,
+                        row_live=live if paged else None)
                     return logits
                 if use_cache:
                     logits, _ = M.block_step(params, cfg, block,
                                              block_start, cache,
                                              attn_impl=attn_impl,
-                                             page_size=ps)
+                                             page_size=ps,
+                                             row_live=live if paged
+                                             else None)
                     return logits
                 x = jnp.concatenate([prompt, full_resp], axis=1)
                 logits, _ = M.forward(params, cfg, x, mode="full")
@@ -318,7 +401,8 @@ def _make_generate_fn(cfg: ModelConfig, dcfg: DecodeConfig, quota: int,
                 def commit(cache, nfe):
                     _, c = M.block_step(params, cfg, block, block_start,
                                         cache, write=True,
-                                        attn_impl=attn_impl, page_size=ps)
+                                        attn_impl=attn_impl, page_size=ps,
+                                        row_live=live if paged else None)
                     return c, nfe + 1
 
                 cache, nfe = jax.lax.cond(
@@ -331,7 +415,7 @@ def _make_generate_fn(cfg: ModelConfig, dcfg: DecodeConfig, quota: int,
         resp, _, nfe, conf_rec, val_rec, steps_used, live_out, seq_steps = \
             jax.lax.fori_loop(0, nb, block_body, carry)
         return GenerateResult(resp, nfe, conf_rec, val_rec, steps_used,
-                              seq_steps, live_out)
+                              seq_steps, live_out, drafted_ct, accepted_ct)
 
     return jax.jit(gen)
 

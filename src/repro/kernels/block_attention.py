@@ -308,8 +308,10 @@ def _paged_kernel(s_ref, pt_ref, q_ref, ck_ref, cv_ref, bk_ref, bv_ref,
     """Per-page body. Identical online-softmax math to ``_kernel``; the
     differences are (a) kv tiles are POOL pages routed per row by the
     scalar-prefetched page table (the BlockSpec index maps below), and
-    (b) a tile is live only if it is both inside ``kv_limit`` AND mapped
-    for this row — dead rows touch zero cache pages."""
+    (b) a tile is live only if it is inside THIS ROW's ``kv_limit`` AND
+    mapped for the row — dead rows touch zero cache pages, and a row
+    retired mid-batch (per-row limit 0) stops touching its still-mapped
+    tail pages the moment the scheduler's ``live`` mask drops it."""
     if count_tiles:
         o_ref, cnt_ref, m_scr, l_scr, acc_scr, n_scr = refs
     else:
@@ -317,9 +319,9 @@ def _paged_kernel(s_ref, pt_ref, q_ref, ck_ref, cv_ref, bk_ref, bv_ref,
         cnt_ref = n_scr = None
     b = pl.program_id(0)
     j = pl.program_id(3)
-    kv_limit = s_ref[0]
-    slot = s_ref[1]
-    exc0 = s_ref[2]
+    slot = s_ref[0]
+    exc0 = s_ref[1]
+    kv_limit = s_ref[3 + b]  # per-row valid extent (retired rows: 0)
 
     @pl.when(j == 0)
     def _init():
@@ -343,7 +345,7 @@ def _paged_kernel(s_ref, pt_ref, q_ref, ck_ref, cv_ref, bk_ref, bv_ref,
         if exclude_len:
             valid &= ~((ids >= exc0) & (ids < exc0 + exclude_len))
         if window:
-            qmax = s_ref[3] + bs - 1
+            qmax = s_ref[2] + bs - 1
             valid &= (qmax - pos) < window
         accumulate(k, v, valid)
 
@@ -382,16 +384,22 @@ def paged_block_attention_pallas(
     kv_pos    [T] int32        logical-slot positions (shared across rows)
     page_table[B, n_log] int32 physical page per (row, logical page);
                                -1 = unmapped (dead row / reclaimed)
-    slot/block_start/kv_limit/exclude/window — as the dense kernel.
+    kv_limit  [] or [B] int32  valid cache extent — PER ROW when rank 1:
+                               a retired row passes 0 and its still-mapped
+                               tail pages stop being touched *within* the
+                               batch (the fresh-block tile stays live, so
+                               ride-along mask flushes keep working)
+    slot/block_start/exclude/window — as the dense kernel.
 
     The page table rides as a second scalar-prefetch operand, so the kv
     BlockSpec index maps resolve (row, logical page) → physical pool page
-    before the tile's DMA is issued; tiles that are beyond ``kv_limit``
-    OR unmapped clamp to the row's last live page (no new DMA) and skip
-    compute via ``pl.when`` — the paged mirror of the dense kernel's
-    ``kv_limit`` mechanism, which additionally skips *holes* (dead rows,
-    reclaimed pages), not just the tail. One kv tile == one page, so
-    ``page_size`` must be a multiple of 8 (float32 sublane tiling).
+    before the tile's DMA is issued; tiles that are beyond the row's
+    ``kv_limit`` OR unmapped clamp to the row's last live page (no new
+    DMA) and skip compute via ``pl.when`` — the paged mirror of the dense
+    kernel's ``kv_limit`` mechanism, which additionally skips *holes*
+    (dead rows, reclaimed pages), not just the tail. One kv tile == one
+    page, so ``page_size`` must be a multiple of 8 (float32 sublane
+    tiling).
     """
     B, bs, H, D = q.shape
     Pg, ps = pool_k.shape[0], pool_k.shape[1]
@@ -403,6 +411,9 @@ def paged_block_attention_pallas(
     G = H // Kh
     if kv_limit is None:
         kv_limit = kv_limit_from_pos(kv_pos)
+    # normalize to per-row [B] (a scalar bound applies to every row)
+    kv_limit = jnp.broadcast_to(
+        jnp.asarray(kv_limit, jnp.int32).reshape(-1), (B,))
     if exclude_start is None:
         exclude_start = jnp.zeros((), jnp.int32)
         exclude_len = 0
@@ -430,22 +441,24 @@ def paged_block_attention_pallas(
     if Tp != T:
         pos2d = jnp.pad(pos2d, (0, Tp - T), constant_values=-1)
     pos2d = pos2d.reshape(1, Tp)
-    scalars = jnp.stack([
-        jnp.asarray(kv_limit, jnp.int32).reshape(()),
-        jnp.asarray(slot, jnp.int32).reshape(()),
-        jnp.asarray(exclude_start, jnp.int32).reshape(()),
-        jnp.asarray(block_start, jnp.int32).reshape(()),
+    # scalar layout: [slot, exclude_start, block_start, kv_limit[0..B)]
+    scalars = jnp.concatenate([
+        jnp.stack([jnp.asarray(slot, jnp.int32).reshape(()),
+                   jnp.asarray(exclude_start, jnp.int32).reshape(()),
+                   jnp.asarray(block_start, jnp.int32).reshape(())]),
+        kv_limit,
     ])
     pt = page_table.astype(jnp.int32)
 
-    def live_m1(s):
-        return jnp.maximum(pl.cdiv(s[0], ps) - 1, 0)
+    def live_m1(b, s):
+        # last live tile of ROW b (per-row kv_limit)
+        return jnp.maximum(pl.cdiv(s[3 + b], ps) - 1, 0)
 
     def page_for(b, j, s, pt):
         # route tile j of row b to its pool page; dead/unmapped tiles
         # clamp to the row's last live mapped page so the revisited block
         # index issues no new DMA (compute is skipped by tile_live)
-        jm = jnp.minimum(j, live_m1(s))
+        jm = jnp.minimum(j, live_m1(b, s))
         return jnp.maximum(pt[b, jm], 0)
 
     kernel = functools.partial(
@@ -485,7 +498,7 @@ def paged_block_attention_pallas(
                              b, jnp.maximum(j - n_log, 0), h, 0)),
             pl.BlockSpec((1, ps),
                          lambda b, h, i, j, s, pt: (
-                             0, jnp.minimum(j, live_m1(s)))),
+                             0, jnp.minimum(j, live_m1(b, s)))),
         ],
         out_specs=out_specs,
         scratch_shapes=scratch,

@@ -129,7 +129,9 @@ def paged_block_attention(
 
     q [B,bs,H,D]; pool_k/v [P,ps,Kh,D] (one layer of the page pool);
     block_k/v [B,bs,Kh,D]; kv_pos [T]; page_table [B, n_log] (-1 =
-    unmapped). TPU (or ``interpret=True``) -> the paged Pallas kernel,
+    unmapped); kv_limit [] or PER-ROW [B] (a retired row passes 0 and
+    its still-mapped tail pages stop being touched within the batch).
+    TPU (or ``interpret=True``) -> the paged Pallas kernel,
     which DMAs pool pages in place and skips dead/unmapped pages;
     elsewhere -> gather the dense logical view through the page table and
     run the length-aware ``paged_cached_block_attend`` flash path, which

@@ -81,14 +81,18 @@ def cached_block_attention_ref(
 def paged_block_attention_ref(
         q: Array, pool_k: Array, pool_v: Array, block_k: Array,
         block_v: Array, kv_pos: Array, page_table: Array, *, slot: Array,
-        block_start: Array, exclude_start: Optional[Array] = None,
+        block_start: Array, kv_limit: Optional[Array] = None,
+        exclude_start: Optional[Array] = None,
         exclude_len: int = 0, window: int = 0) -> Array:
     """Oracle for ``block_attention.paged_block_attention_pallas``.
 
     Gathers each row's dense logical [T, Kh, D] view through its page
     table (unmapped slots read page 0 and are masked), then defers to the
     dense oracle with a per-row validity refinement: the result must
-    equal dense attention over the materialised view.
+    equal dense attention over the materialised view. ``kv_limit`` ([] or
+    per-row [B]) additionally masks cache slots at or beyond the row's
+    valid extent — the fresh block itself always stays attendable, exactly
+    as the kernel's block tile ignores the limit.
 
     q [B,bs,H,D]; pool_k/v [P,ps,Kh,D]; block_k/v [B,bs,Kh,D];
     kv_pos [T]; page_table [B, n_log].
@@ -118,6 +122,10 @@ def paged_block_attention_ref(
     ids = jnp.arange(T, dtype=jnp.int32)
     in_block = (ids >= slot) & (ids < slot + bs)
     valid = (pos >= 0)[None] & (mapped | in_block[None])  # [B, T]
+    if kv_limit is not None:
+        lim = jnp.broadcast_to(
+            jnp.asarray(kv_limit, jnp.int32).reshape(-1), (B,))
+        valid &= (ids[None] < lim[:, None]) | in_block[None]
     if exclude_start is not None and exclude_len:
         valid &= ~((ids >= exclude_start) & (ids < exclude_start
                                              + exclude_len))[None]

@@ -44,6 +44,14 @@ def main() -> None:
     ap.add_argument("--store", default="",
                     help="npz path persisting per-task calibration across "
                          "restarts (SERVING.md)")
+    ap.add_argument("--spec-decode", action="store_true",
+                    help="speculative block drafting: one-shot-draft the "
+                         "blocks each task's calibrated signature predicts "
+                         "easy, verify, and skip their denoising steps "
+                         "(SERVING.md 'Speculative drafting')")
+    ap.add_argument("--draft-max-steps", type=int, default=1,
+                    help="draft blocks predicted to clear in <= this many "
+                         "steps (spec decode)")
     args = ap.parse_args()
 
     from benchmarks.common import bench_config
@@ -60,7 +68,9 @@ def main() -> None:
     ecfg = EngineConfig(batch_size=args.batch, prompt_len=64,
                         cache_mode=args.cache_mode, store_path=args.store,
                         num_pages=args.num_pages,
-                        shared_prefix=args.shared_prefix)
+                        shared_prefix=args.shared_prefix,
+                        spec_decode=args.spec_decode,
+                        draft_max_steps=args.draft_max_steps)
     engine = DiffusionEngine(params, cfg, dcfg, ecfg=ecfg)
     rng = np.random.default_rng(0)
     samples = TASKS[args.task].make(rng, args.n)
@@ -76,6 +86,11 @@ def main() -> None:
         print(f"# pages: capacity={st.page_capacity} "
               f"peak={st.pages_peak} ({st.page_util:.0%}) "
               f"shared={st.pages_shared} freed={st.pages_freed}")
+    if st.blocks_drafted:
+        print(f"# drafting: {st.blocks_drafted} drafted "
+              f"{st.blocks_accepted} accepted "
+              f"({st.draft_accept_rate:.0%}) over {st.draft_batches} "
+              f"batches, ~{st.nfe_saved} forwards saved")
     for r in out[:3]:
         print(f"  [{r.uid}] {r.text!r}")
 

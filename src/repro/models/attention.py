@@ -245,6 +245,7 @@ def paged_cached_block_attend(q: Array, pool_k: Array, pool_v: Array,
                               page_table: Array, kv_pos: Array, *,
                               slot: Array, q_pos: Array, page_size: int,
                               kv_limit: Optional[Array] = None,
+                              row_limit: Optional[Array] = None,
                               exclude_start: Optional[Array] = None,
                               exclude_len: int = 0, window: int = 0,
                               impl: str = "auto"):
@@ -254,13 +255,28 @@ def paged_cached_block_attend(q: Array, pool_k: Array, pool_v: Array,
     then runs the exact ``cached_block_attend`` sequence on it — paged
     decode is therefore *bit-identical* to dense for rows whose pages are
     all mapped (the equivalence suite's contract). Unmapped slots are
-    masked per row. Returns ``(out, mapped)``; committing the block into
-    the POOL is a separate ``cache_lib.paged_kv_write`` (the gathered
-    view is a temporary).
+    masked per row. Per-row valid extents ride two equivalent ways: a
+    rank-1 ``kv_limit`` [B] (the kernel-dispatch spelling — masked into
+    ``mapped``, flash bound falls back to the batch max) or the explicit
+    ``row_limit`` [B], which ONLY refines the row mask and leaves the
+    impl dispatch untouched — for a live row whose limit equals the
+    cache's valid extent the mask removes nothing (``pos`` already masks
+    beyond it), so paged decode stays bit-identical to dense; a retired
+    row (limit 0) attends nothing from the cache, the XLA twin of the
+    paged kernel's per-row tile skipping. Returns ``(out, mapped)``;
+    committing the block into the POOL is a separate
+    ``cache_lib.paged_kv_write`` (the gathered view is a temporary).
     """
     T = kv_pos.shape[0]
     ck, cv, mapped = cache_lib.paged_kv_gather(pool_k, pool_v, page_table,
                                                T, page_size=page_size)
+    if kv_limit is not None and kv_limit.ndim == 1:
+        row_limit = kv_limit if row_limit is None else \
+            jnp.minimum(row_limit, kv_limit)
+        kv_limit = jnp.max(kv_limit)  # flash bound: the batch-max extent
+    if row_limit is not None:
+        ids = jnp.arange(T, dtype=jnp.int32)
+        mapped = mapped & (ids[None] < row_limit[:, None])
     out, _ = cached_block_attend(
         q, ck, cv, block_k, block_v, kv_pos, slot=slot, q_pos=q_pos,
         kv_limit=kv_limit, exclude_start=exclude_start,

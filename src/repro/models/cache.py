@@ -275,6 +275,36 @@ class PageAllocator:
                 raise ValueError(f"sharing an unallocated page {p}")
             self._refs[p] += 1
 
+    def fork(self, parent: Sequence[int], n_private: int
+             ) -> Tuple[List[int], List[int]]:
+        """Copy-on-write fork of a row's page set.
+
+        The child maps every ``parent`` page read-only (refcount bump —
+        the pages themselves are never copied; the serving layout keeps
+        write boundaries page-aligned so the copy is elided for good) and
+        receives ``n_private`` fresh pages for the logical range it will
+        actually write. Returns ``(shared, private)``. Atomic: when the
+        private allocation cannot be satisfied, NO parent reference is
+        taken — a failed fork leaves every refcount exactly as it found
+        it, so reject/reclaim bookkeeping stays balanced.
+
+        Releasing a fork — whether its draft was merged (accepted) or
+        reclaimed (rejected) — is ``free(shared); free(private)``: parent
+        pages drop back to their prior refcount, private pages return to
+        the free list.
+        """
+        if n_private > len(self._free):
+            raise MemoryError(
+                f"page pool exhausted: fork wants {n_private} private "
+                f"pages, have {len(self._free)}")
+        for p in parent:  # validate BEFORE bumping: share() raising
+            # mid-list would leak the earlier bumps
+            if self._refs[p] <= 0:
+                raise ValueError(f"forking an unallocated parent page {p}")
+        self.share(parent)
+        private = self.alloc(n_private)
+        return list(parent), private
+
     def free(self, pages: Sequence[int]) -> None:
         for p in pages:
             if self._refs[p] <= 0:  # a double free would silently hand a

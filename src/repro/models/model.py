@@ -579,7 +579,8 @@ def block_step(params: dict, cfg: ModelConfig, block_tokens: Array,
                advance: bool = True, exclude_start: Optional[Array] = None,
                exclude_len: int = 0, write_slot: Optional[Array] = None,
                window: int = 0, attn_impl: str = "auto",
-               page_size: int = 0) -> Tuple[Array, dict]:
+               page_size: int = 0,
+               row_live: Optional[Array] = None) -> Tuple[Array, dict]:
     """One denoising forward of the active block against the cache.
 
     block_tokens [B, bs] (masked positions hold cfg.mask_token_id);
@@ -608,6 +609,13 @@ def block_step(params: dict, cfg: ModelConfig, block_tokens: Array,
     routes through the page table instead: the Pallas kernel DMAs pool
     pages in place, the XLA paths gather the row's logical view, and
     ``write=True`` scatters the block into the pool (unmapped rows drop).
+
+    ``row_live`` [B] bool (paged only): rows marked dead/retired get a
+    per-row ``kv_limit`` of 0, so the kernel stops DMA-ing their
+    still-mapped tail pages *within* the batch and the XLA paths mask
+    their cache reads identically; live rows keep the shared valid
+    extent, which changes nothing (``pos`` already masks beyond it) — so
+    passing an all-live mask is a no-op.
     """
     assert cfg.supports_mdlm, f"{cfg.name} is causal-only (DESIGN.md)"
     x = embed(params["embed"], block_tokens)
@@ -625,6 +633,16 @@ def block_step(params: dict, cfg: ModelConfig, block_tokens: Array,
         from repro.kernels import ops as kops
         # valid cache extent, shared across layers (one [T] reduction)
         kv_limit = kops.kv_limit_from_pos(kv["pos"])
+    row_limit = None
+    if paged and row_live is not None:
+        # per-row extent: retired rows stop touching their mapped pages
+        if kv_limit is None:
+            from repro.kernels import ops as kops
+            shared_lim = kops.kv_limit_from_pos(kv["pos"])
+        else:
+            shared_lim = kv_limit
+        row_limit = jnp.where(jnp.asarray(row_live).astype(bool),
+                              shared_lim, 0).astype(jnp.int32)
 
     def body(h, xs):
         if paged:
@@ -639,12 +657,14 @@ def block_step(params: dict, cfg: ModelConfig, block_tokens: Array,
                     q, pk, pv, k, v, kv_pos=kv["pos"],
                     page_table=kv["pt"], slot=slot,
                     block_start=block_start, page_size=page_size,
-                    kv_limit=kv_limit, exclude_start=exclude_start,
+                    kv_limit=kv_limit if row_limit is None else row_limit,
+                    exclude_start=exclude_start,
                     exclude_len=exclude_len, window=window)
             else:
                 attn, _ = paged_cached_block_attend(
                     q, pk, pv, k, v, kv["pt"], kv["pos"], slot=slot,
                     q_pos=q_pos, page_size=page_size, kv_limit=kv_limit,
+                    row_limit=row_limit,
                     exclude_start=exclude_start, exclude_len=exclude_len,
                     window=window, impl=attn_impl)
             kv_out = cache_lib.paged_kv_write(

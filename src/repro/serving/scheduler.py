@@ -25,14 +25,26 @@ along on the static table.
 
 With ``DecodeConfig.cache_layout == "paged"`` the scheduler is the PAGE
 OWNER (SERVING.md "Paged KV"): it holds the device page pool and a host
-:class:`~repro.models.cache.PageAllocator`. Admission allocates each
-request's private pages (and refcount-maps the shared system-prompt
-pages), retirement frees them, and a request is admissible as soon as
-enough *pages* — not a whole dense slot — are free. Dead slots map no
-pages at all. ``EngineConfig.shared_prefix`` is prefilled ONCE into
-refcounted pages at engine construction; every slot's page table then
-maps those pages read-only (copy-on-write boundaries are page-aligned,
-so decode writes never touch them).
+:class:`~repro.models.cache.PageAllocator`. Admission COW-forks each
+request off the shared system-prompt parent (``PageAllocator.fork``:
+refcount-map the shared pages read-only, allocate private pages only for
+the logical range the row writes), retirement releases the fork, and a
+request is admissible as soon as enough *pages* — not a whole dense
+slot — are free. Dead slots map no pages at all.
+``EngineConfig.shared_prefix`` is prefilled ONCE into refcounted pages at
+engine construction; every slot's page table then maps those pages
+read-only (copy-on-write boundaries are page-aligned, so decode writes
+never touch them).
+
+With ``EngineConfig.spec_decode`` the scheduler also owns the DRAFT
+lifecycle (SERVING.md "Speculative drafting"): the decode program is the
+``variant="draft"`` executable, a :class:`~repro.spec.drafter.Drafter`
+turns each calibrated task's stored profile into the per-row
+``draft_mask`` runtime argument (admission gates on pages exactly as
+before — a draft fork is only admitted when its pages are available),
+accepted blocks' pages merge back into the row's committed KV for the
+rest of the batch, rejected blocks decode through the stepped loop, and
+``EngineStats`` gains the acceptance-rate / NFE-saved counters.
 """
 from __future__ import annotations
 
@@ -51,6 +63,7 @@ from repro.core.osdt import CalibrationStore
 from repro.data import tokenizer as tok
 from repro.models import model as M
 from repro.models.cache import PageAllocator
+from repro.spec.drafter import Drafter
 
 DEAD_TASK = "__dead__"  # pseudo-task of pad slots (resolves to the static table)
 
@@ -73,6 +86,8 @@ class Response:
     decode_s: float = 0.0
     tokens_out: int = 0   # tokens delivered after EOS truncation
     tokens_dropped: int = 0  # generated but cut at EOS / never unmasked
+    blocks_drafted: int = 0   # spec decode: blocks drafted for this row
+    blocks_accepted: int = 0  # ... and how many survived verification
 
 
 @dataclass
@@ -123,6 +138,15 @@ class EngineStats:
     pages_peak: int = 0      # max pages simultaneously allocated
     pages_shared: int = 0    # pages pinned by the shared prefix
     pages_freed: int = 0     # private-page frees at retirement (reclaim)
+    # speculative drafting (all 0 with spec_decode off)
+    blocks_drafted: int = 0   # row-blocks flagged by the signature
+    blocks_accepted: int = 0  # ... that survived verification
+    draft_batches: int = 0    # batches that ran the draft+verify forwards
+    nfe_saved: int = 0        # forwards saved vs stepping (estimate: one
+    #                           per batch-block whose step loop never ran
+    #                           while some row was still live to reach
+    #                           it, minus the 2 draft forwards per batch;
+    #                           blocks past every row's EOS don't count)
 
     @property
     def tokens_per_s(self) -> float:
@@ -136,6 +160,11 @@ class EngineStats:
     def page_util(self) -> float:
         return self.pages_peak / self.page_capacity \
             if self.page_capacity else 0.0
+
+    @property
+    def draft_accept_rate(self) -> float:
+        return self.blocks_accepted / self.blocks_drafted \
+            if self.blocks_drafted else 0.0
 
 
 class Scheduler:
@@ -194,10 +223,15 @@ class Scheduler:
             self._shared_ids = ids[:self.shared_len]
         if self.paged:
             self._init_page_pool(mode)
+        self.spec = bool(self.ecfg.spec_decode)
+        self.drafter = Drafter(self.store, dcfg,
+                               max_steps=self.ecfg.draft_max_steps) \
+            if self.spec else None
         self._gen = make_generate_fn(
             cfg, dcfg, cache_mode=mode, attn_impl=self.ecfg.attn_impl,
             cache_layout="paged" if self.paged else "dense",
-            shared_prefix_len=self.shared_len if self.paged else 0)
+            shared_prefix_len=self.shared_len if self.paged else 0,
+            variant="draft" if self.spec else "step")
 
     # -- page pool (paged layout; SERVING.md "Paged KV") ----------------
     def _init_page_pool(self, mode: str) -> None:
@@ -289,10 +323,12 @@ class Scheduler:
             rs.t_admit = now
             pages = None
             if self.paged:
-                # admit = allocate: private pages + a reference on the
-                # shared-prefix pages (_fill guaranteed availability)
-                pages = self.allocator.alloc(self.private_per_slot)
-                self.allocator.share(self._shared_pages)
+                # admit = COW-fork off the shared-prefix parent: a
+                # read-only reference on the shared pages plus private
+                # pages for the logical range this row actually writes
+                # (_fill guaranteed availability)
+                _, pages = self.allocator.fork(self._shared_pages,
+                                               self.private_per_slot)
             slot.admit(rs, pages)
             self.seen_tasks[rs.req.task] = \
                 self.seen_tasks.get(rs.req.task, 0) + 1
@@ -324,6 +360,12 @@ class Scheduler:
         live = np.asarray([s.state == "active" for s in self.slots])
         n_dead = int((~live).sum())
         tables = self.store.tables_for(tasks)
+        draft_mask = None
+        if self.spec:
+            # draft plan: each row's calibrated signature flags its easy
+            # blocks (uncalibrated tasks — including the row currently
+            # calibrating one — and dead slots draft nothing)
+            draft_mask = self.drafter.mask_for(tasks)
         if self.paged:
             self.stats.pages_peak = max(self.stats.pages_peak,
                                         self.allocator.in_use)
@@ -333,10 +375,13 @@ class Scheduler:
             args = (self.params, jnp.asarray(prompt), jnp.asarray(tables),
                     self._mask_arr, jnp.asarray(live),
                     self.eos_id if self.ecfg.eos_early_exit else None)
+            kwargs = {}
             if self.paged:
                 args += (self._pool_k, self._pool_v,
                          jnp.asarray(page_tables))
-            res = self._gen(*args)
+            if draft_mask is not None:
+                kwargs["draft_mask"] = jnp.asarray(draft_mask)
+            res = self._gen(*args, **kwargs)
             tokens = np.asarray(res.tokens)  # blocks until ready
             decode_s = time.perf_counter() - t0
 
@@ -345,10 +390,14 @@ class Scheduler:
                 # and step counts (not the batch-max, which ride-along
                 # rows of other tasks determine)
                 self.store.ingest(task, result_profile(res, row=row))
+                if self.drafter is not None:
+                    self.drafter.invalidate(task)
             if calib_rows and self.ecfg.store_path:
                 self.store.save(self.ecfg.store_path)
 
             seq_steps = np.asarray(res.seq_steps)
+            drafted = np.asarray(res.blocks_drafted)
+            accepted = np.asarray(res.blocks_accepted)
             out: List[Response] = []
             for slot in self.slots:
                 if slot.rs is None:
@@ -364,11 +413,36 @@ class Scheduler:
                     rs.req.uid, rs.req.task, tok.decode(row),
                     nfe=steps, wall_s=queue_s + decode_s, queue_s=queue_s,
                     decode_s=decode_s, tokens_out=len(row),
-                    tokens_dropped=tokens.shape[1] - len(row)))
+                    tokens_dropped=tokens.shape[1] - len(row),
+                    blocks_drafted=int(drafted[j]),
+                    blocks_accepted=int(accepted[j])))
                 self.stats.tokens += len(row)
                 self.stats.tokens_dropped += tokens.shape[1] - len(row)
                 self.stats.queue_s += queue_s
                 self.stats.seq_steps += steps
+            if draft_mask is not None and int(drafted.sum()) > 0:
+                self.stats.blocks_drafted += int(drafted.sum())
+                self.stats.blocks_accepted += int(accepted.sum())
+                self.stats.draft_batches += 1
+                # lower-bound estimate of forwards saved: a block whose
+                # step loop ran zero iterations while some row was still
+                # live to reach it (its accepted draft is the only way a
+                # live row can carry no masks) would have cost >= 1
+                # stepped forward; blocks past every row's EOS
+                # retirement cost zero either way and must not count.
+                # The batch paid 2 extra forwards (draft + verify).
+                nb = self.dcfg.num_blocks
+                bs = self.dcfg.block_size
+                reach = np.zeros((nb,), bool)
+                for j in np.flatnonzero(live):
+                    row = tokens[j].tolist()
+                    last = (row.index(self.eos_id) // bs) \
+                        if (self.ecfg.eos_early_exit
+                            and self.eos_id in row) else nb - 1
+                    reach[: last + 1] = True
+                skipped = int(((np.asarray(res.steps_per_block) == 0)
+                               & reach).sum())
+                self.stats.nfe_saved += skipped - 2
             self.stats.requests += len(picked)
             self.stats.nfe += int(res.nfe)
             self.stats.wall_s += decode_s
@@ -387,7 +461,8 @@ class Scheduler:
             # _fill can admit nothing and run() livelocks)
             for slot in self.slots:
                 if self.paged and slot.pages is not None:
-                    # private pages return to the free list; the
+                    # release the fork: private pages (merged-in accepted
+                    # drafts included) return to the free list; the
                     # shared-prefix reference is dropped (the scheduler's
                     # own permanent reference keeps those pages)
                     self.allocator.free(slot.pages)

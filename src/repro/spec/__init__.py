@@ -1,0 +1,17 @@
+"""Speculative block drafting (SERVING.md "Speculative drafting").
+
+The calibration store already holds, per task, the full confidence
+profile ``[nb, steps_cap, bs]`` of the task's first sequence — not just
+the threshold table distilled from it. The paper's O2 (near-identical
+confidence trajectories within a task) means that profile predicts which
+blocks of the NEXT request of the task are easy before they are decoded:
+``signature`` replays the threshold rule over the recorded confidences to
+get predicted steps-to-clear per block, and ``drafter`` turns that into
+the per-row ``draft_mask`` runtime argument of the decoder's
+``variant="draft"`` program (one-shot draft forward + one verification
+forward; accepted blocks skip their denoising steps entirely).
+"""
+from repro.spec.drafter import Drafter
+from repro.spec.signature import block_signature, predicted_steps
+
+__all__ = ["Drafter", "block_signature", "predicted_steps"]

@@ -1,0 +1,60 @@
+"""Draft planning: signatures -> the decoder's ``draft_mask`` runtime arg.
+
+The :class:`Drafter` sits between the calibration store and the
+``variant="draft"`` decode program. Per task it derives (and caches) the
+block-difficulty signature from the stored profile at the task's OWN
+calibrated thresholds, and per batch it assembles the ``[B, nb]`` bool
+``draft_mask``: block ``k`` of row ``b`` is flagged when row ``b``'s task
+predicts it clears in at most ``max_steps`` denoising steps (the one-shot
+regime the draft forward exploits). Uncalibrated tasks — including the
+request currently CALIBRATING a task, whose row must record a complete
+stepped profile — and dead slots draft nothing.
+
+The signature cache is invalidated per task by the scheduler whenever the
+task's table changes (first calibration, online EMA updates).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence
+
+import numpy as np
+
+from repro.config.base import DecodeConfig
+from repro.core.osdt import CalibrationStore
+from repro.spec.signature import block_signature
+
+
+class Drafter:
+    def __init__(self, store: CalibrationStore, dcfg: DecodeConfig, *,
+                 max_steps: int = 1):
+        assert max_steps >= 1, max_steps
+        self.store = store
+        self.dcfg = dcfg
+        self.max_steps = max_steps
+        self._sig: Dict[str, np.ndarray] = {}
+
+    def invalidate(self, task: str) -> None:
+        self._sig.pop(task, None)
+
+    def signature(self, task: str) -> Optional[np.ndarray]:
+        """[nb] predicted steps-to-clear, or None while uncalibrated."""
+        if task in self._sig:
+            return self._sig[task]
+        profile = self.store.profiles.get(task)
+        if profile is None or not self.store.calibrated(task):
+            return None
+        sig = block_signature(profile, self.store.tables[task], self.dcfg)
+        self._sig[task] = sig
+        return sig
+
+    def row_mask(self, task: str) -> np.ndarray:
+        """[nb] bool — blocks of ``task`` worth drafting."""
+        sig = self.signature(task)
+        if sig is None:
+            return np.zeros((self.dcfg.num_blocks,), bool)
+        return sig <= self.max_steps
+
+    def mask_for(self, tasks: Sequence[str]) -> np.ndarray:
+        """Assemble the per-slot ``draft_mask [B, nb]`` for a mixed batch
+        (the draft-variant decoder's trailing runtime argument)."""
+        return np.stack([self.row_mask(t) for t in tasks])

@@ -1,0 +1,72 @@
+"""Task-level block-difficulty signature: predicted steps-to-clear.
+
+A task's stored :class:`~repro.core.calibrate.CalibrationProfile` records
+the confidence of every still-masked position at every (block, step) of
+the calibration sequence. Replaying the decoder's threshold rule
+(Algorithm 1 lines 18-21: unmask above ``table[b, s]``, else the single
+most-confident position) over those recordings yields, per block, the
+number of denoising steps the CALIBRATED table would have needed — a
+``[nb]`` int signature that transfers to later requests of the task by
+the paper's O2 (near-identical trajectories within a task).
+
+The replay is deliberately conservative where the recording runs out:
+
+* a block the calibration sequence never reached (EOS'd earlier) has no
+  recordings at all — predicted ``steps_cap`` (never drafted; if the new
+  request also retires there the stepped loop skips it for free anyway);
+* a position whose confidence was not recorded at some step (it unmasked
+  earlier in the calibration run than in the replay) cannot clear at
+  that step — predictions can only overshoot, never undershoot.
+
+Overshooting is safe: a block wrongly predicted hard merely isn't
+drafted; a block wrongly predicted easy is caught by the decoder's
+verification forward and demoted to the stepped loop.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.config.base import DecodeConfig
+from repro.core.calibrate import CalibrationProfile
+
+
+def predicted_steps(profile: CalibrationProfile,
+                    table: np.ndarray) -> np.ndarray:
+    """Replay the threshold rule over the recorded confidences.
+
+    profile.conf/valid: [nb, steps_cap, bs]; table: [nb, steps_cap].
+    Returns [nb] int32 — predicted steps-to-clear per block under
+    ``table`` (``steps_cap`` for blocks with no recording).
+    """
+    conf, valid = profile.conf, profile.valid
+    nb, sc, _ = conf.shape
+    assert table.shape == (nb, sc), (table.shape, (nb, sc))
+    out = np.full((nb,), sc, np.int32)
+    for b in range(nb):
+        remaining = valid[b, 0].copy()
+        if not remaining.any():
+            continue  # block never reached during calibration
+        for s in range(sc):
+            rec = remaining & valid[b, s]
+            clears = rec & (conf[b, s] > table[b, s])
+            if not clears.any():
+                if not rec.any():
+                    break  # recording exhausted: stays at steps_cap
+                # argmax fallback: the single most-confident position
+                best = np.argmax(np.where(rec, conf[b, s], -np.inf))
+                clears = np.zeros_like(rec)
+                clears[best] = True
+            remaining &= ~clears
+            if not remaining.any():
+                out[b] = s + 1
+                break
+    return out
+
+
+def block_signature(profile: CalibrationProfile, table: np.ndarray,
+                    dcfg: DecodeConfig) -> np.ndarray:
+    """[nb] predicted steps, geometry-checked against ``dcfg``."""
+    assert profile.conf.shape == (dcfg.num_blocks, dcfg.steps_cap,
+                                  dcfg.block_size), (
+        "profile recorded with a different block geometry")
+    return predicted_steps(profile, np.asarray(table, np.float32))

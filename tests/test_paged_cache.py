@@ -199,6 +199,91 @@ def test_paged_kernel_skips_dead_and_unmapped_pages():
     assert (cnt[1] == 1).all()                # dead row: block tile only
 
 
+@pytest.mark.paged
+def test_paged_kernel_per_row_kv_limit_skips_retired_rows():
+    """Per-row ``kv_limit``: a row retired mid-batch (limit 0) stops
+    touching its STILL-MAPPED tail pages — tile counts prove the dead
+    row's pages are skipped while the live row's work is unchanged, and
+    the output matches the oracle under the same per-row limits."""
+    rng = np.random.default_rng(17)
+    B, bs, H, Kh, D = 2, 8, 8, 2, 32
+    T, n_log = 48, 6
+    num_pages = B * n_log
+    q = jnp.asarray(rng.standard_normal((B, bs, H, D)), jnp.float32)
+    pool_k = jnp.asarray(rng.standard_normal((num_pages, PS, Kh, D)),
+                         jnp.float32)
+    pool_v = jnp.asarray(rng.standard_normal((num_pages, PS, Kh, D)),
+                         jnp.float32)
+    bk = jnp.asarray(rng.standard_normal((B, bs, Kh, D)), jnp.float32)
+    bv = jnp.asarray(rng.standard_normal((B, bs, Kh, D)), jnp.float32)
+    fill = 24
+    kv_pos = jnp.where(jnp.arange(T) < fill, jnp.arange(T), -1)
+    kv_pos = kv_pos.astype(jnp.int32)
+    # BOTH rows fully mapped: only the limit distinguishes them
+    pt = jnp.asarray(np.arange(B * n_log).reshape(B, n_log), np.int32)
+    lim = jnp.asarray([fill, 0], jnp.int32)  # row 1 retired
+    got, cnt = paged_block_attention_pallas(
+        q, pool_k, pool_v, bk, bv, kv_pos, pt,
+        slot=jnp.asarray(fill, jnp.int32),
+        block_start=jnp.asarray(fill, jnp.int32), kv_limit=lim,
+        debug_tile_counts=True, interpret=True)
+    cnt = np.asarray(cnt)
+    assert (cnt[0] == fill // PS + 1).all()   # live row: unchanged
+    assert (cnt[1] == 1).all()                # retired row: block tile only
+    want = ref.paged_block_attention_ref(
+        q, pool_k, pool_v, bk, bv, kv_pos, pt,
+        slot=jnp.asarray(fill, jnp.int32),
+        block_start=jnp.asarray(fill, jnp.int32), kv_limit=lim)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+    # a partial per-row limit (mid-batch retirement boundary) also agrees
+    lim2 = jnp.asarray([fill, PS], jnp.int32)
+    got2 = paged_block_attention_pallas(
+        q, pool_k, pool_v, bk, bv, kv_pos, pt,
+        slot=jnp.asarray(fill, jnp.int32),
+        block_start=jnp.asarray(fill, jnp.int32), kv_limit=lim2,
+        interpret=True)
+    want2 = ref.paged_block_attention_ref(
+        q, pool_k, pool_v, bk, bv, kv_pos, pt,
+        slot=jnp.asarray(fill, jnp.int32),
+        block_start=jnp.asarray(fill, jnp.int32), kv_limit=lim2)
+    np.testing.assert_allclose(np.asarray(got2), np.asarray(want2),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.paged
+def test_block_step_row_live_only_affects_retired_rows(small_model):
+    """``block_step(row_live=...)``: an all-live mask is a bitwise no-op
+    (live rows' limits equal the cache's valid extent, which ``pos``
+    already enforces); a retired row attends only the fresh block."""
+    cfg, params = small_model
+    B, P, max_len = 2, PROMPT_LEN, PROMPT_LEN + 16
+    prompt = jax.random.randint(jax.random.key(7), (B, P), 1, 256)
+    n_log = -(-max_len // PS)
+    pt = cache_lib.identity_page_table(B, max_len, PS)
+    pool_k, pool_v = _pool(cfg, B * n_log)
+    cache = {"attn": {"kp": pool_k, "vp": pool_v, "pt": pt,
+                      "pos": jnp.full((max_len,), -1, jnp.int32),
+                      "length": jnp.zeros((), jnp.int32)}}
+    _, cache = M.prefill(params, cfg, prompt, max_len=max_len,
+                         mode="full", cache=cache, page_size=PS)
+    block = jnp.full((B, 4), tok.MASK_ID, jnp.int32)
+    start = jnp.asarray(P, jnp.int32)
+    for impl in ("auto", "flash", "kernel"):
+        base, _ = M.block_step(params, cfg, block, start, cache,
+                               attn_impl=impl, page_size=PS)
+        same, _ = M.block_step(params, cfg, block, start, cache,
+                               attn_impl=impl, page_size=PS,
+                               row_live=jnp.asarray([True, True]))
+        np.testing.assert_array_equal(np.asarray(base), np.asarray(same))
+        part, _ = M.block_step(params, cfg, block, start, cache,
+                               attn_impl=impl, page_size=PS,
+                               row_live=jnp.asarray([True, False]))
+        part = np.asarray(part)
+        np.testing.assert_array_equal(part[0], np.asarray(base)[0])
+        assert not np.array_equal(part[1], np.asarray(base)[1])
+
+
 # ---------------------------------------------------------------------------
 # tentpole acceptance: paged decode == dense decode, all modes x impls
 # ---------------------------------------------------------------------------
