@@ -12,10 +12,10 @@ import sys
 from pathlib import Path
 from typing import List
 
-from benchmarks import (block_attn, cache_modes, fig1_confidence,
-                        fig2_cosine, fig3_5_sweep, kernels_bench,
-                        paged_kv, scheduler_bench, spec_decode,
-                        table1_compare)
+from benchmarks import (async_admission, block_attn, cache_modes,
+                        fig1_confidence, fig2_cosine, fig3_5_sweep,
+                        kernels_bench, paged_kv, scheduler_bench,
+                        spec_decode, table1_compare)
 
 BENCHES = {
     "fig1": fig1_confidence.run,
@@ -28,6 +28,7 @@ BENCHES = {
     "scheduler": scheduler_bench.run,
     "paged_kv": paged_kv.run,
     "spec_decode": spec_decode.run,
+    "async_admission": async_admission.run,
 }
 
 

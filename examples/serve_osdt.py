@@ -1,6 +1,6 @@
 """Continuous-batching serving with per-slot OSDT tables (SERVING.md).
 
-    PYTHONPATH=src:. python examples/serve_osdt.py [--paged] [--spec]
+    PYTHONPATH=src:. python examples/serve_osdt.py [--paged] [--spec] [--sliced]
 
 Simulates a mixed request stream across three tasks. The engine keeps ONE
 calibration store and ONE compiled decode program; every task calibrates
@@ -14,7 +14,10 @@ pages for the next batch. With ``--spec`` the engine decodes through the
 draft-and-verify program: blocks a task's calibrated signature predicts
 easy are one-shot drafted and, when verification accepts them, skip
 their denoising steps. Prints per-task accuracy + throughput accounting,
-the per-request queue/decode split, page occupancy, and draft acceptance.
+the per-request queue/decode split, page occupancy, and draft acceptance. With ``--sliced`` the engine decodes through the
+step-sliced loop (one block per compiled slice): requests admit into
+freed slots mid-generation and the per-request ``ttfb_s`` / queue waits
+are measured at slice boundaries (SERVING.md "Async admission").
 """
 import sys
 
@@ -29,6 +32,7 @@ from repro.serving.engine import DiffusionEngine, Request
 def main() -> None:
     paged = "--paged" in sys.argv
     spec = "--spec" in sys.argv
+    sliced = "--sliced" in sys.argv
     cfg, params = common.get_model()
     dcfg = DecodeConfig(max_new_tokens=32, block_size=8, policy="osdt",
                         mode="block", metric="q1", cap=0.8, slack=0.15,
@@ -38,7 +42,7 @@ def main() -> None:
     ecfg = EngineConfig(batch_size=4, prompt_len=64, cache_mode="prefix",
                         eos_early_exit=True,
                         shared_prefix="answer briefly. " if paged else "",
-                        spec_decode=spec)
+                        spec_decode=spec, slice_len=1 if sliced else 0)
     engine = DiffusionEngine(params, cfg, dcfg, ecfg=ecfg)
 
     rng = np.random.default_rng(3)
@@ -80,6 +84,11 @@ def main() -> None:
               f"{st.blocks_accepted} accepted "
               f"({st.draft_accept_rate:.0%}) over {st.draft_batches} "
               f"batches, ~{st.nfe_saved} forwards saved")
+    if st.slices:
+        ttfb = [r.ttfb_s for r in responses]
+        print(f"sliced: {st.slices} slices, {st.mid_admits} mid-gen "
+              f"admits, ttfb {np.mean(ttfb)*1e3:.1f}ms avg / "
+              f"{np.max(ttfb)*1e3:.1f}ms max")
 
 
 if __name__ == "__main__":

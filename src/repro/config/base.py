@@ -269,6 +269,14 @@ class EngineConfig:
     # bit-identical to a spec_decode-free engine.
     spec_decode: bool = False
     draft_max_steps: int = 1
+    # step-sliced decode loop (SERVING.md "Async admission"): 0 keeps the
+    # monolithic one-program-per-batch runtime (admission at batch
+    # boundaries only); N >= 1 decodes N blocks per compiled slice and
+    # returns to the host between slices, where EOS rows retire (pages
+    # reclaimed immediately) and queued requests are admitted into freed
+    # slots MID-GENERATION with their own block cursor, threshold table,
+    # and (spec_decode) re-planned draft mask.
+    slice_len: int = 0
 
     def resolved_cache_mode(self) -> str:
         assert self.cache_mode in ("prefix", "dual", "none"), self.cache_mode

@@ -26,7 +26,7 @@ tasks inside one mixed batch (one recorded row each).
 from __future__ import annotations
 
 from functools import lru_cache
-from typing import NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -35,6 +35,7 @@ import numpy as np
 from repro.config.base import DecodeConfig, ModelConfig
 from repro.core.calibrate import CalibrationProfile
 from repro.core.confidence import confidence
+from repro.models import cache as cache_lib
 from repro.models import model as M
 
 Array = jax.Array
@@ -148,23 +149,9 @@ def make_generate_fn(cfg: ModelConfig, dcfg: DecodeConfig, *,
     (e.g. ``use_cache=True`` vs ``cache_mode="prefix"``) share one jitted
     program — one trace/compile per (cfg, dcfg, variant) process-wide.
     """
-    if not cache_mode:
-        cache_mode = "prefix" if use_cache else "none"
-    assert cache_mode in ("prefix", "dual", "none"), cache_mode
-    if not attn_impl:
-        attn_impl = dcfg.attn_impl
-    assert attn_impl in ("auto", "dense", "flash", "kernel"), attn_impl
-    if not cache_layout:
-        cache_layout = dcfg.cache_layout or "dense"
-    assert cache_layout in ("dense", "paged"), cache_layout
-    assert variant in ("step", "draft"), variant
-    if cache_mode == "none":
-        cache_layout = "dense"  # cacheless: nothing to page
-    if cache_layout != "paged":
-        shared_prefix_len = 0
-    else:
-        assert shared_prefix_len % dcfg.page_size == 0, \
-            (shared_prefix_len, dcfg.page_size)
+    cache_mode, attn_impl, cache_layout, shared_prefix_len = \
+        _norm_slice_key(cfg, dcfg, use_cache, cache_mode, attn_impl,
+                        cache_layout, shared_prefix_len, variant)
     assert not (variant == "draft" and quota > 0), \
         "drafting presupposes the threshold rule, not the quota baseline"
     return _make_generate_fn(cfg, dcfg, quota, use_kernel, cache_mode,
@@ -437,6 +424,564 @@ def result_profile(res: GenerateResult,
         valid=np.asarray(res.conf_valid)[r],
         steps=np.asarray(steps),
     )
+
+
+# ---------------------------------------------------------------------------
+# step-sliced decode (SERVING.md "Async admission")
+#
+# The monolithic program above stays untouched as the bit-identity oracle.
+# The sliced family splits it into host-visible pieces: one compiled
+# program runs ``slice_len`` block-iterations over an explicit carried
+# ``DecodeCarry`` pytree, the host orchestrates the loop — retiring EOS
+# rows, reclaiming their pages, and admitting queued requests into freed
+# slots BETWEEN slices. Rows therefore carry their own block cursor (a
+# freshly admitted row decodes block 0 while its neighbours are at block
+# k): every block-offset quantity is per-row inside the slice program,
+# and with uniform cursors the math collapses to exactly the monolithic
+# program's values (tests/test_sliced_decode.py enforces token, seq_steps
+# and nfe identity for slice_len 1 / 2 / nb).
+# ---------------------------------------------------------------------------
+
+class DecodeCarry(NamedTuple):
+    """Decode state carried between compiled block-slices.
+
+    Shapes are fixed per engine: ``B`` slots, ``P`` prompt slots, ``N``
+    response slots (= nb * bs). ``cursor`` is PER-ROW — the next block
+    each row denoises — which is what lets one batch mix rows admitted
+    at different times. ``cache`` is the KV cache dict (dense or paged —
+    the paged pool rides INSIDE the carry so it can be donated into the
+    compiled program on TPU), or ``None`` for the cacheless mode.
+    """
+    resp: Array          # [B, N] int32 response tokens (mask = undecoded)
+    prompt: Array        # [B, P] int32 (cacheless forwards + admission)
+    table: Array         # [B, nb, sc] float32 per-slot threshold tables
+    live: Array          # [B] bool — False: dead slot / EOS-retired
+    cursor: Array        # [B] int32 — next block index, nb = done
+    conf: Array          # [B, nb, sc, bs] calibration recording
+    conf_valid: Array    # [B, nb, sc, bs] bool
+    steps_used: Array    # [nb] int32 — batch-max steps per block
+    seq_steps: Array     # [B, nb] int32 — per-row live denoising steps
+    nfe: Array           # [] int32 — model forwards so far
+    blocks_drafted: Array   # [B] int32
+    blocks_accepted: Array  # [B] int32
+    cache: Any           # KV cache dict ({"attn": ...}) or None
+
+    def result(self) -> GenerateResult:
+        """The accumulated state in ``GenerateResult`` form, so
+        ``result_profile`` (calibration ingest) works unchanged."""
+        return GenerateResult(self.resp, self.nfe, self.conf,
+                              self.conf_valid, self.steps_used,
+                              self.seq_steps, self.live,
+                              self.blocks_drafted, self.blocks_accepted)
+
+
+def _norm_slice_key(cfg: ModelConfig, dcfg: DecodeConfig, use_cache: bool,
+                    cache_mode: str, attn_impl: str, cache_layout: str,
+                    shared_prefix_len: int, variant: str):
+    """THE program-key normalization — ``make_generate_fn`` and the
+    sliced family share it, so spelling-equivalent calls can never key
+    the oracle and the sliced programs differently."""
+    if not cache_mode:
+        cache_mode = "prefix" if use_cache else "none"
+    assert cache_mode in ("prefix", "dual", "none"), cache_mode
+    if not attn_impl:
+        attn_impl = dcfg.attn_impl
+    assert attn_impl in ("auto", "dense", "flash", "kernel"), attn_impl
+    if not cache_layout:
+        cache_layout = dcfg.cache_layout or "dense"
+    assert cache_layout in ("dense", "paged"), cache_layout
+    assert variant in ("step", "draft"), variant
+    if cache_mode == "none":
+        cache_layout = "dense"
+    if cache_layout != "paged":
+        shared_prefix_len = 0
+    else:
+        assert shared_prefix_len % dcfg.page_size == 0, \
+            (shared_prefix_len, dcfg.page_size)
+    return cache_mode, attn_impl, cache_layout, shared_prefix_len
+
+
+def _donate_default() -> bool:
+    """Donate the carry into the compiled slice program only where the
+    backend actually reuses donated buffers (TPU). On CPU jax ignores
+    donation with a warning, so the fallback is simply not asking."""
+    return jax.default_backend() == "tpu"
+
+
+def init_decode_carry(cfg: ModelConfig, dcfg: DecodeConfig, *,
+                      batch: int, prompt_len: int, mask_id: int,
+                      cache_mode: str = "prefix", cache_layout: str = "",
+                      shared_prefix_len: int = 0,
+                      pool_k: Optional[Array] = None,
+                      pool_v: Optional[Array] = None,
+                      page_table: Optional[Array] = None) -> DecodeCarry:
+    """A fresh all-dead carry (every slot free). The paged layout takes
+    the engine-owned pool and the initial ``[B, n_log]`` page table
+    (dead rows all ``-1``); a non-zero ``shared_prefix_len`` expects the
+    pool's shared pages to be prefilled already (scheduler ctor) and
+    marks their slots valid exactly like the monolithic program."""
+    cache_mode, _, cache_layout, Sp = _norm_slice_key(
+        cfg, dcfg, True, cache_mode, "auto", cache_layout,
+        shared_prefix_len, "step")
+    B, P = batch, prompt_len
+    N, bs = dcfg.max_new_tokens, dcfg.block_size
+    nb, sc = dcfg.num_blocks, dcfg.steps_cap
+    dual = cache_mode == "dual"
+    if cache_mode == "none":
+        cache = None
+    else:
+        max_len = P + N + (bs if dual else 0)
+        dtype = M.param_dtype(cfg)
+        if cache_layout == "paged":
+            assert pool_k is not None and page_table is not None, \
+                "paged carry needs pool_k, pool_v, page_table"
+            pos = jnp.full((max_len,), -1, jnp.int32)
+            length = jnp.zeros((), jnp.int32)
+            if Sp:
+                pos = pos.at[:Sp].set(jnp.arange(Sp, dtype=jnp.int32))
+                length = jnp.asarray(Sp, jnp.int32)
+            cache = {"attn": {
+                "kp": pool_k, "vp": pool_v,
+                "pt": jnp.asarray(page_table, jnp.int32),
+                "pos": pos, "length": length}}
+        else:
+            cache = cache_lib.init_cache(cfg, B, max_len, dtype)
+    return DecodeCarry(
+        resp=jnp.full((B, N), mask_id, jnp.int32),
+        prompt=jnp.full((B, P), mask_id, jnp.int32),
+        table=jnp.zeros((B, nb, sc), jnp.float32),
+        live=jnp.zeros((B,), bool),
+        cursor=jnp.full((B,), nb, jnp.int32),
+        conf=jnp.zeros((B, nb, sc, bs), jnp.float32),
+        conf_valid=jnp.zeros((B, nb, sc, bs), bool),
+        steps_used=jnp.zeros((nb,), jnp.int32),
+        seq_steps=jnp.zeros((B, nb), jnp.int32),
+        nfe=jnp.zeros((), jnp.int32),
+        blocks_drafted=jnp.zeros((B,), jnp.int32),
+        blocks_accepted=jnp.zeros((B,), jnp.int32),
+        cache=cache)
+
+
+def admit_carry_rows(carry: DecodeCarry, rows: Sequence[int],
+                     prompts: np.ndarray, tables: np.ndarray,
+                     mask_id: int, *,
+                     page_rows: Optional[np.ndarray] = None,
+                     live: Optional[Sequence[bool]] = None) -> DecodeCarry:
+    """Host-side slot (re)initialisation at admission: place each row's
+    prompt / table (/ page-table row), reset its response to masks, its
+    cursor to block 0, and zero its accumulators. ``live`` marks which
+    of the rows carry a real request (dead pad slots admit ``False``).
+    The KV prefill itself is the compiled ``make_admit_fn`` program.
+
+    All updates are fixed-shape masked selects (never index-dependent
+    scatters), so the handful of eager ops here compile once per engine
+    geometry — not once per admission count."""
+    if not len(rows):
+        return carry
+    B = carry.live.shape[0]
+    rows = list(rows)
+    sel = np.zeros((B,), bool)
+    sel[rows] = True
+    pr = np.zeros(carry.prompt.shape, np.int32)
+    pr[rows] = np.asarray(prompts, np.int32)
+    tb = np.zeros(carry.table.shape, np.float32)
+    tb[rows] = np.asarray(tables, np.float32)
+    lv = np.zeros((B,), bool)
+    lv[rows] = [True] * len(rows) if live is None else list(live)
+    m = jnp.asarray(sel)
+    m1 = m[:, None]
+    kw = dict(
+        resp=jnp.where(m1, jnp.asarray(mask_id, jnp.int32), carry.resp),
+        prompt=jnp.where(m1, jnp.asarray(pr), carry.prompt),
+        table=jnp.where(m1[..., None], jnp.asarray(tb), carry.table),
+        live=jnp.where(m, jnp.asarray(lv), carry.live),
+        cursor=jnp.where(m, 0, carry.cursor),
+        conf=jnp.where(m1[..., None, None], 0.0, carry.conf),
+        conf_valid=jnp.where(m1[..., None, None], False,
+                             carry.conf_valid),
+        seq_steps=jnp.where(m1, 0, carry.seq_steps),
+        blocks_drafted=jnp.where(m, 0, carry.blocks_drafted),
+        blocks_accepted=jnp.where(m, 0, carry.blocks_accepted))
+    if page_rows is not None:
+        pg = np.full(carry.cache["attn"]["pt"].shape, -1, np.int32)
+        pg[rows] = np.asarray(page_rows, np.int32)
+        kv = dict(carry.cache["attn"])
+        kv["pt"] = jnp.where(m1, jnp.asarray(pg), kv["pt"])
+        kw["cache"] = dict(carry.cache, attn=kv)
+    return carry._replace(**kw)
+
+
+def retire_carry_rows(carry: DecodeCarry, rows: Sequence[int],
+                      num_blocks: int) -> DecodeCarry:
+    """Host-side slot release: mark rows dead and (paged) unmap their
+    page-table entries so pages freed back to the allocator can be
+    handed to the next admission without the old row still reading or
+    writing them."""
+    if not len(rows):
+        return carry
+    sel = np.zeros((carry.live.shape[0],), bool)
+    sel[list(rows)] = True
+    m = jnp.asarray(sel)
+    kw = dict(live=jnp.where(m, False, carry.live),
+              cursor=jnp.where(m, num_blocks, carry.cursor))
+    if carry.cache is not None and "pt" in carry.cache["attn"]:
+        kv = dict(carry.cache["attn"])
+        kv["pt"] = jnp.where(m[:, None], -1, kv["pt"])
+        kw["cache"] = dict(carry.cache, attn=kv)
+    return carry._replace(**kw)
+
+
+def make_admit_fn(cfg: ModelConfig, dcfg: DecodeConfig, *,
+                  cache_mode: str = "prefix", attn_impl: str = "",
+                  cache_layout: str = "", shared_prefix_len: int = 0,
+                  donate: Optional[bool] = None):
+    """Build (or fetch) the compiled admission program.
+
+    fn(params, carry, admit [B] bool) -> carry
+
+    ONE full-prompt forward prefills ``carry.prompt`` for every row and
+    merges the K/V of rows flagged in ``admit`` into the carried cache
+    (non-admitted rows keep their buffers bit-exactly: dense writes are
+    masked per row, paged writes go through an admit-masked page table
+    and drop). Costs one forward (+1 nfe) per call — the host batches
+    all of a slice boundary's admissions into one call, so an initial
+    full batch pays exactly the monolithic program's one prefill. The
+    cacheless mode has no admission program (nothing to prefill).
+    """
+    cache_mode, attn_impl, cache_layout, Sp = _norm_slice_key(
+        cfg, dcfg, True, cache_mode, attn_impl, cache_layout,
+        shared_prefix_len, "step")
+    assert cache_mode != "none", "cacheless decode has nothing to admit"
+    return _make_admit_fn(cfg, dcfg, cache_mode, attn_impl, cache_layout,
+                          Sp, _donate_default() if donate is None
+                          else bool(donate))
+
+
+@lru_cache(maxsize=None)
+def _make_admit_fn(cfg: ModelConfig, dcfg: DecodeConfig, cache_mode: str,
+                   attn_impl: str, cache_layout: str,
+                   shared_prefix_len: int, donate: bool):
+    assert cfg.supports_mdlm, f"{cfg.name}: diffusion decoding inapplicable"
+    paged = cache_layout == "paged"
+    ps, Sp = dcfg.page_size, shared_prefix_len
+    N, bs = dcfg.max_new_tokens, dcfg.block_size
+    dual = cache_mode == "dual"
+
+    def admit(params, carry: DecodeCarry, admit_mask):
+        B, P = carry.prompt.shape
+        max_len = P + N + (bs if dual else 0)
+        kv = carry.cache["attn"]
+        admit_mask = jnp.asarray(admit_mask).astype(bool)
+        if paged:
+            pt_admit = jnp.where(admit_mask[:, None], kv["pt"], -1)
+            if Sp:
+                # the shared pages already hold [0, Sp): encode only the
+                # per-row remainder against them (same call shape as the
+                # monolithic Sp prefill; write slot is explicit because
+                # the carried length tracks the batch-max extent, not Sp)
+                _, c1 = M.block_step(
+                    params, cfg, carry.prompt[:, Sp:],
+                    jnp.asarray(Sp, jnp.int32),
+                    {"attn": dict(kv, pt=pt_admit)}, write=True,
+                    advance=False, write_slot=jnp.asarray(Sp, jnp.int32),
+                    attn_impl=attn_impl, page_size=ps,
+                    row_limit=jnp.full((B,), Sp, jnp.int32))
+                kv1 = c1["attn"]
+            else:
+                _, c1 = M.prefill(params, cfg, carry.prompt,
+                                  max_len=max_len, mode="full",
+                                  cache={"attn": dict(kv, pt=pt_admit)},
+                                  page_size=ps)
+                kv1 = c1["attn"]
+            new_kv = dict(kv, kp=kv1["kp"], vp=kv1["vp"],
+                          pos=jnp.maximum(kv["pos"], kv1["pos"]),
+                          length=jnp.maximum(kv["length"],
+                                             jnp.asarray(P, jnp.int32)))
+        else:
+            _, fresh = M.prefill(params, cfg, carry.prompt,
+                                 max_len=max_len, mode="full")
+            fkv = fresh["attn"]
+            sl = (jnp.arange(max_len, dtype=jnp.int32) < P)
+            pick = admit_mask[None, :, None, None, None] \
+                & sl[None, None, :, None, None]
+            new_kv = dict(kv,
+                          k=jnp.where(pick, fkv["k"].astype(kv["k"].dtype),
+                                      kv["k"]),
+                          v=jnp.where(pick, fkv["v"].astype(kv["v"].dtype),
+                                      kv["v"]),
+                          pos=jnp.maximum(kv["pos"], fkv["pos"]),
+                          length=jnp.maximum(kv["length"], fkv["length"]))
+        return carry._replace(cache=dict(carry.cache, attn=new_kv),
+                              nfe=carry.nfe + 1)
+
+    return jax.jit(admit, donate_argnums=(1,) if donate else ())
+
+
+def make_slice_fn(cfg: ModelConfig, dcfg: DecodeConfig, *,
+                  slice_len: int = 1, quota: int = 0,
+                  use_kernel: bool = False, cache_mode: str = "prefix",
+                  attn_impl: str = "", cache_layout: str = "",
+                  shared_prefix_len: int = 0, variant: str = "step",
+                  donate: Optional[bool] = None):
+    """Build (or fetch) the compiled block-slice program.
+
+    fn(params, carry, mask_id [], eos_id [] = None,
+       draft_mask [B, nb] = None) -> carry
+
+    Runs ``slice_len`` block-iterations of the decode loop and returns
+    the updated :class:`DecodeCarry`. Each iteration denoises, for every
+    row, the row's OWN ``cursor`` block — per-row positions, write
+    slots, exclusion ranges and valid extents — then advances the
+    cursors, so one batch freely mixes rows admitted at different times.
+    With uniform cursors (same admitted set) the math reproduces the
+    monolithic ``make_generate_fn`` program bit-exactly: driving slices
+    until every cursor reaches ``nb`` yields identical tokens,
+    ``seq_steps``, ``conf`` recordings and ``nfe``.
+
+    ``variant="draft"``: the slice ADDITIONALLY runs the draft+verify
+    forwards over the blocks flagged in ``draft_mask`` before its block
+    iterations (skipped via ``lax.cond`` when the mask is empty). The
+    host passes a row's plan exactly once — on the first slice after its
+    admission (``Drafter.plan_remaining``) — so re-planned drafts for
+    mid-generation admissions score against the already-committed
+    context of THEIR OWN row, and rows mid-decode are unaffected.
+
+    ``donate`` (default: auto) donates the carry into the program so the
+    paged KV pool is updated in place instead of being copied per slice;
+    auto enables it on TPU only — CPU ignores donation, and the fallback
+    is to keep the functional copy (satellite: pool donation).
+
+    Memoized like ``make_generate_fn``: one compiled program per
+    (cfg, dcfg, variant, slice_len) process-wide.
+    """
+    cache_mode, attn_impl, cache_layout, Sp = _norm_slice_key(
+        cfg, dcfg, True, cache_mode, attn_impl, cache_layout,
+        shared_prefix_len, variant)
+    assert slice_len >= 1, slice_len
+    assert not (variant == "draft" and quota > 0), \
+        "drafting presupposes the threshold rule, not the quota baseline"
+    return _make_slice_fn(cfg, dcfg, int(slice_len), quota, use_kernel,
+                          cache_mode, attn_impl, cache_layout, Sp, variant,
+                          _donate_default() if donate is None
+                          else bool(donate))
+
+
+@lru_cache(maxsize=None)
+def _make_slice_fn(cfg: ModelConfig, dcfg: DecodeConfig, slice_len: int,
+                   quota: int, use_kernel: bool, cache_mode: str,
+                   attn_impl: str, cache_layout: str,
+                   shared_prefix_len: int, variant: str, donate: bool):
+    assert cfg.supports_mdlm, f"{cfg.name}: diffusion decoding inapplicable"
+    use_cache = cache_mode != "none"
+    dual = cache_mode == "dual"
+    paged = cache_layout == "paged"
+    draft = variant == "draft"
+    ps = dcfg.page_size
+    N, bs = dcfg.max_new_tokens, dcfg.block_size
+    nb, sc = dcfg.num_blocks, dcfg.steps_cap
+
+    def slice_fn(params, carry: DecodeCarry, mask_id, eos_id=None,
+                 draft_mask=None):
+        resp, prompt, table = carry.resp, carry.prompt, carry.table
+        B, P = prompt.shape
+
+        def row_extent(live, cursor):
+            """Per-row committed-cache extent [B]: what each row may
+            attend beyond its own fresh block. Mirrors the monolithic
+            row_live wiring — paged masks dead/retired rows to 0 (their
+            still-mapped pages stop being touched), dense keeps the
+            extent (the oracle passes no mask there)."""
+            ext = jnp.minimum(cursor, nb) * bs
+            if dual:
+                # the refreshed suffix is valid for every working row
+                ext = jnp.broadcast_to(jnp.asarray(N, jnp.int32),
+                                       ext.shape)
+            if paged:
+                return jnp.where(live, P + ext, 0)
+            return P + ext
+
+        track_eos = eos_id is not None
+        cache = carry.cache
+        nfe = carry.nfe
+        live0, cursor0 = carry.live, carry.cursor
+        drafted_ct, accepted_ct = carry.blocks_drafted, carry.blocks_accepted
+        rows = jnp.arange(B, dtype=jnp.int32)
+        max_len = P + N + (bs if dual else 0)
+
+        if draft:
+            dm = (jnp.zeros((B, nb), bool) if draft_mask is None
+                  else jnp.asarray(draft_mask).astype(bool))
+            dm = dm & live0[:, None]
+            # re-planned drafts only cover a row's REMAINING blocks
+            dm = dm & (jnp.arange(nb, dtype=jnp.int32)[None]
+                       >= cursor0[:, None])
+            pos_dm = jnp.repeat(dm, bs, axis=1)
+            tau0 = jnp.repeat(table[:, :, 0], bs, axis=1)
+            draft_lim = row_extent(live0, cursor0)
+
+            def region_logits(region):
+                if use_cache:
+                    # write_slot pins the region's pre-write at P — the
+                    # carried length tracks the batch-max extent, which
+                    # exceeds P once any row is past block 0
+                    logits, _ = M.block_step(
+                        params, cfg, region, jnp.asarray(P, jnp.int32),
+                        cache, write_slot=jnp.asarray(P, jnp.int32),
+                        attn_impl=attn_impl, page_size=ps,
+                        row_limit=draft_lim)
+                    return logits
+                x = jnp.concatenate([prompt, region], axis=1)
+                logits, _ = M.forward(params, cfg, x, mode="full")
+                return logits[:, P:]
+
+            def do_draft(args):
+                resp, nfe = args
+                _, toks1 = confidence(region_logits(resp),
+                                      use_kernel=use_kernel)
+                cand = jnp.where(pos_dm, toks1, resp)
+                logp2 = jax.nn.log_softmax(
+                    region_logits(cand).astype(jnp.float32), axis=-1)
+                sel = jnp.take_along_axis(
+                    logp2, cand[..., None].astype(jnp.int32),
+                    axis=-1)[..., 0]
+                ok = jnp.exp(sel) > tau0
+                blk_ok = jnp.all(ok.reshape(B, nb, bs), axis=-1) & dm
+                keep = jnp.repeat(blk_ok, bs, axis=1)
+                return jnp.where(keep, cand, resp), nfe + 2, blk_ok
+
+            def no_draft(args):
+                resp, nfe = args
+                return resp, nfe, jnp.zeros((B, nb), bool)
+
+            resp, nfe, accept_blk = jax.lax.cond(
+                jnp.any(dm), do_draft, no_draft, (resp, nfe))
+            drafted_ct = drafted_ct + dm.sum(axis=1).astype(jnp.int32)
+            accepted_ct = accepted_ct \
+                + accept_blk.sum(axis=1).astype(jnp.int32)
+
+        def iter_body(_, st):
+            resp, cache, nfe, conf_rec, val_rec, steps_used, live, \
+                seq_steps, cursor = st
+            cur_c = jnp.minimum(cursor, nb - 1)       # [B] gather-safe
+            todo = cursor < nb                        # [B]
+            start = cur_c * bs                        # [B]
+            col = start[:, None] + jnp.arange(bs, dtype=jnp.int32)
+            block0 = jnp.take_along_axis(resp, col, axis=1)
+            block_start = P + start                   # [B]
+            rec_blk = jnp.where(todo, cur_c, nb)      # drop finished rows
+            any_work = jnp.any(live & todo)
+
+            if dual:
+                def refresh(cache, nfe):
+                    _, c = M.block_step(params, cfg, resp,
+                                        jnp.asarray(P, jnp.int32), cache,
+                                        write=True, advance=False,
+                                        write_slot=jnp.asarray(P,
+                                                               jnp.int32),
+                                        attn_impl=attn_impl, page_size=ps,
+                                        row_live=live if paged else None)
+                    return c, nfe + 1
+
+                cache, nfe = jax.lax.cond(
+                    any_work, refresh, lambda c, n: (c, n), cache, nfe)
+
+            def model_logits(block, full_resp, live_now):
+                if dual:
+                    logits, _ = M.block_step(
+                        params, cfg, block, block_start, cache,
+                        write_slot=jnp.asarray(P + N, jnp.int32),
+                        exclude_start=block_start, exclude_len=bs,
+                        attn_impl=attn_impl, page_size=ps,
+                        row_live=live_now if paged else None)
+                    return logits
+                if use_cache:
+                    # write_slot = each row's OWN block slots: the
+                    # monolithic oracle's slot (= the shared length)
+                    # only equals the block position in lockstep
+                    logits, _ = M.block_step(
+                        params, cfg, block, block_start, cache,
+                        write_slot=block_start, attn_impl=attn_impl,
+                        page_size=ps,
+                        row_limit=row_extent(live_now, cursor))
+                    return logits
+                x = jnp.concatenate([prompt, full_resp], axis=1)
+                logits, _ = M.forward(params, cfg, x, mode="full")
+                pick = (P + col)[..., None]           # [B, bs, 1]
+                return jnp.take_along_axis(
+                    logits, jnp.broadcast_to(
+                        pick, (B, bs, logits.shape[-1])), axis=1)
+
+            def cond_fn(st):
+                block, step, *_ = st
+                return (step < sc) & jnp.any((block == mask_id)
+                                             & live[:, None])
+
+            def step_fn(st):
+                block, step, resp, nfe, conf_rec, val_rec, seq_steps = st
+                logits = model_logits(block, resp, live)
+                conf, toks = confidence(logits, use_kernel=use_kernel)
+                masked = block == mask_id
+                row_active = live & jnp.any(masked, axis=-1)
+                tau = table[rows, cur_c, jnp.minimum(step, sc - 1)]  # [B]
+                unmask = _unmask_choice(conf, toks, block, mask_id, tau,
+                                        quota, live)
+                unmask = unmask | (masked & ~live[:, None])
+                new_block = jnp.where(unmask, toks, block)
+                new_resp = resp.at[rows[:, None], col].set(new_block)
+                rec = masked & live[:, None]
+                conf_rec = conf_rec.at[rows, rec_blk, step].set(
+                    jnp.where(rec, conf, 0.0), mode="drop")
+                val_rec = val_rec.at[rows, rec_blk, step].set(
+                    rec, mode="drop")
+                seq_steps = seq_steps.at[rows, rec_blk].add(
+                    row_active.astype(jnp.int32), mode="drop")
+                return (new_block, step + 1, new_resp, nfe + 1, conf_rec,
+                        val_rec, seq_steps)
+
+            block, steps, resp, nfe, conf_rec, val_rec, seq_steps = \
+                jax.lax.while_loop(
+                    cond_fn, step_fn,
+                    (block0, jnp.zeros((), jnp.int32), resp, nfe, conf_rec,
+                     val_rec, seq_steps))
+            steps_used = steps_used.at[rec_blk].max(steps, mode="drop")
+
+            if track_eos:
+                done = jnp.arange(N, dtype=jnp.int32)[None] \
+                    < ((cur_c + 1) * bs)[:, None]
+                seen = jnp.any((resp == eos_id) & done, axis=-1)
+                live = live & ~seen
+
+            if use_cache and not dual:
+                def commit(cache, nfe):
+                    wslot = jnp.where(todo, block_start, max_len)
+                    _, c = M.block_step(
+                        params, cfg, block, block_start, cache,
+                        write=True, advance=False, write_slot=wslot,
+                        attn_impl=attn_impl, page_size=ps,
+                        row_limit=row_extent(live, cursor))
+                    kv = c["attn"]
+                    ext = P + bs * jnp.max(jnp.where(todo, cur_c + 1, 0))
+                    kv = dict(kv, length=jnp.maximum(kv["length"], ext))
+                    return dict(c, attn=kv), nfe + 1
+
+                cache, nfe = jax.lax.cond(
+                    jnp.any(live & todo), commit, lambda c, n: (c, n),
+                    cache, nfe)
+            cursor = jnp.minimum(cursor + 1, nb)
+            return (resp, cache, nfe, conf_rec, val_rec, steps_used, live,
+                    seq_steps, cursor)
+
+        st = (resp, cache, nfe, carry.conf, carry.conf_valid,
+              carry.steps_used, live0, carry.seq_steps, cursor0)
+        resp, cache, nfe, conf_rec, val_rec, steps_used, live, seq_steps, \
+            cursor = jax.lax.fori_loop(0, slice_len, iter_body, st)
+        return carry._replace(
+            resp=resp, cache=cache, nfe=nfe, conf=conf_rec,
+            conf_valid=val_rec, steps_used=steps_used, live=live,
+            seq_steps=seq_steps, cursor=cursor,
+            blocks_drafted=drafted_ct, blocks_accepted=accepted_ct)
+
+    return jax.jit(slice_fn, donate_argnums=(1,) if donate else ())
 
 
 # ---------------------------------------------------------------------------

@@ -77,13 +77,29 @@ def _cba_xla(q, cache_k, cache_v, block_k, block_v, kv_pos, slot,
     kernels package."""
     from repro.models import attention as A
 
-    bs = block_k.shape[1]
-    q_pos = block_start + jnp.arange(bs, dtype=jnp.int32)
+    q_pos = _q_pos(block_start, block_k.shape[1])
     out, _ = A.cached_block_attend(
         q, cache_k, cache_v, block_k, block_v, kv_pos, slot=slot,
         q_pos=q_pos, kv_limit=kv_limit, exclude_start=exclude_start,
         exclude_len=exclude_len, window=window, impl="flash")
     return out
+
+
+def _q_pos(block_start: Array, bs: int) -> Array:
+    """[bs] query positions, or [B, bs] when ``block_start`` is per-row."""
+    ar = jnp.arange(bs, dtype=jnp.int32)
+    if getattr(block_start, "ndim", 0) == 1:
+        return block_start[:, None] + ar
+    return block_start + ar
+
+
+def _per_row(*args) -> bool:
+    """True when any block-offset argument is per-row [B] — the sliced
+    decode loop's mixed-cursor form. The Pallas kernels scalar-prefetch
+    one slot/block_start/exclude for the whole batch (only ``kv_limit``
+    is per-row, for the paged kernel), so per-row offsets route to the
+    length-aware XLA fallback on every backend (KERNELS.md)."""
+    return any(getattr(a, "ndim", 0) >= 1 for a in args if a is not None)
 
 
 def cached_block_attention(
@@ -107,7 +123,8 @@ def cached_block_attention(
     if exclude_start is None:
         exclude_start = jnp.zeros((), jnp.int32)
         exclude_len = 0
-    if _on_tpu() or interpret:
+    if not _per_row(slot, block_start, exclude_start, kv_limit) \
+            and (_on_tpu() or interpret):
         return cached_block_attention_pallas(
             q, cache_k, cache_v, block_k, block_v, kv_pos, slot=slot,
             block_start=block_start, kv_limit=kv_limit,
@@ -143,7 +160,10 @@ def paged_block_attention(
     if exclude_start is None:
         exclude_start = jnp.zeros((), jnp.int32)
         exclude_len = 0
-    if _on_tpu() or interpret:
+    # per-row kv_limit is kernel-native (scalar-prefetched); per-row
+    # slot/block_start/exclude offsets are not — XLA fallback (KERNELS.md)
+    if not _per_row(slot, block_start, exclude_start) \
+            and (_on_tpu() or interpret):
         return paged_block_attention_pallas(
             q, pool_k, pool_v, block_k, block_v, kv_pos, page_table,
             slot=slot, block_start=block_start, kv_limit=kv_limit,
@@ -151,8 +171,7 @@ def paged_block_attention(
             window=window, interpret=interpret)
     from repro.models import attention as A
 
-    bs = block_k.shape[1]
-    q_pos = block_start + jnp.arange(bs, dtype=jnp.int32)
+    q_pos = _q_pos(block_start, block_k.shape[1])
     out, _ = A.paged_cached_block_attend(
         q, pool_k, pool_v, block_k, block_v, page_table, kv_pos,
         slot=slot, q_pos=q_pos, page_size=page_size, kv_limit=kv_limit,

@@ -52,6 +52,12 @@ def main() -> None:
     ap.add_argument("--draft-max-steps", type=int, default=1,
                     help="draft blocks predicted to clear in <= this many "
                          "steps (spec decode)")
+    ap.add_argument("--slice-len", type=int, default=0,
+                    help="step-sliced decode loop: decode N blocks per "
+                         "compiled slice and admit queued requests into "
+                         "freed slots MID-generation (0 = monolithic "
+                         "batch-boundary admission, SERVING.md 'Async "
+                         "admission')")
     args = ap.parse_args()
 
     from benchmarks.common import bench_config
@@ -70,7 +76,8 @@ def main() -> None:
                         num_pages=args.num_pages,
                         shared_prefix=args.shared_prefix,
                         spec_decode=args.spec_decode,
-                        draft_max_steps=args.draft_max_steps)
+                        draft_max_steps=args.draft_max_steps,
+                        slice_len=args.slice_len)
     engine = DiffusionEngine(params, cfg, dcfg, ecfg=ecfg)
     rng = np.random.default_rng(0)
     samples = TASKS[args.task].make(rng, args.n)
@@ -91,6 +98,13 @@ def main() -> None:
               f"{st.blocks_accepted} accepted "
               f"({st.draft_accept_rate:.0%}) over {st.draft_batches} "
               f"batches, ~{st.nfe_saved} forwards saved")
+    if st.slices:
+        q = [r.queue_s for r in out]
+        ttfb = [r.ttfb_s for r in out]
+        print(f"# sliced: {st.slices} slices, {st.mid_admits} "
+              f"mid-generation admits, queue p95 "
+              f"{np.percentile(q, 95) * 1e3:.1f}ms, ttfb p95 "
+              f"{np.percentile(ttfb, 95) * 1e3:.1f}ms")
     for r in out[:3]:
         print(f"  [{r.uid}] {r.text!r}")
 

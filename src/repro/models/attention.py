@@ -218,9 +218,32 @@ def cached_block_attend(q: Array, cache_k: Array, cache_v: Array,
     rows with unmapped pages (dead scheduler slots) attend nothing from
     the cache. The fresh block always stays valid.
 
+    Per-row forms (the step-sliced decode loop, where each row denoises
+    its OWN cursor block): ``slot`` [B] writes row ``b``'s fresh block at
+    its own slot (sentinel ``>= T`` drops the write — rows with nothing
+    to commit), ``q_pos`` [B, S] carries per-row absolute positions
+    (RoPE is already applied by the caller; "full"-mode masks ignore the
+    values), ``exclude_start`` [B] excludes each row's own stale range,
+    and ``kv_limit`` [B] masks each row down to its own committed extent
+    (the flash bound falls back to the batch max). Any per-row argument
+    switches to the generalized mask assembly — with uniform rows it
+    computes exactly the scalar path's values, which stays byte-for-byte
+    untouched as the bit-identity oracle. Per-row forms require
+    ``window == 0``.
+
     Returns ``(out, (ck, cv))`` — the written cache buffers, for callers
     that commit the step (``write=True`` / AR decode).
     """
+    slot = jnp.asarray(slot, jnp.int32)
+    per_row_exc = exclude_start is not None and \
+        getattr(exclude_start, "ndim", 0) == 1
+    row_kv_limit = kv_limit is not None and kv_limit.ndim == 1
+    if slot.ndim == 1 or q_pos.ndim == 2 or per_row_exc or row_kv_limit:
+        return _cached_block_attend_rows(
+            q, cache_k, cache_v, block_k, block_v, kv_pos, slot=slot,
+            q_pos=q_pos, kv_limit=kv_limit, exclude_start=exclude_start,
+            exclude_len=exclude_len, window=window, impl=impl,
+            row_valid=row_valid)
     ck, cv = cache_lib.kv_write_slice(cache_k, cache_v, block_k, block_v,
                                       slot)
     pos = cache_lib.pos_write_slice(kv_pos, q_pos, slot)
@@ -236,6 +259,62 @@ def cached_block_attend(q: Array, cache_k: Array, cache_v: Array,
         jnp.maximum(kv_limit, slot + q_pos.shape[0])
     out = attention(q, ck, cv, q_pos=q_pos, kv_pos=jnp.maximum(pos, 0),
                     mode="full", kv_valid=kv_valid, impl=impl,
+                    kv_limit=bound)
+    return out, (ck, cv)
+
+
+def _cached_block_attend_rows(q: Array, cache_k: Array, cache_v: Array,
+                              block_k: Array, block_v: Array,
+                              kv_pos: Array, *, slot: Array, q_pos: Array,
+                              kv_limit: Optional[Array],
+                              exclude_start: Optional[Array],
+                              exclude_len: int, window: int, impl: str,
+                              row_valid: Optional[Array]):
+    """Per-row generalization of :func:`cached_block_attend` (see there).
+
+    Mask assembly mirrors the scalar path exactly — ``(pos-valid minus
+    the exclusion) AND (row mask OR own fresh block)`` — evaluated per
+    row, so uniform rows reproduce the scalar path's values bitwise.
+    """
+    assert window == 0, "per-row block attend has no sliding-window form"
+    B, S = block_k.shape[:2]
+    T = cache_k.shape[1]
+    ids = jnp.arange(T, dtype=jnp.int32)
+    q2 = q_pos if q_pos.ndim == 2 else \
+        jnp.broadcast_to(q_pos[None], (B, S)).astype(jnp.int32)
+    slot_r = slot if slot.ndim == 1 else jnp.broadcast_to(slot, (B,))
+    if slot.ndim == 1:
+        ck, cv = cache_lib.kv_write_slice_rows(cache_k, cache_v, block_k,
+                                               block_v, slot)
+        # union pos marking: every row's fresh slots become valid; slot
+        # indices are disjoint across rows (or identical with identical
+        # position values when rows are uniform), so the scatter order
+        # cannot matter
+        idx = slot[:, None] + jnp.arange(S, dtype=jnp.int32)
+        pos = kv_pos.at[jnp.where(idx < T, idx, T)].set(q2, mode="drop")
+    else:
+        ck, cv = cache_lib.kv_write_slice(cache_k, cache_v, block_k,
+                                          block_v, slot)
+        pos = cache_lib.pos_write_slice(kv_pos, q2[0], slot)
+    valid = jnp.broadcast_to(cache_valid_mask(pos)[None], (B, T))
+    if exclude_start is not None and exclude_len:
+        exc = exclude_start if getattr(exclude_start, "ndim", 0) == 1 \
+            else jnp.broadcast_to(exclude_start, (B,))
+        valid = valid & ~((ids[None] >= exc[:, None])
+                          & (ids[None] < exc[:, None] + exclude_len))
+    rv = row_valid
+    if kv_limit is not None and kv_limit.ndim == 1:
+        lim = ids[None] < kv_limit[:, None]
+        rv = lim if rv is None else (rv & lim)
+        kv_limit = jnp.max(kv_limit)  # flash bound: the batch-max extent
+    if rv is not None:
+        in_block = (ids[None] >= slot_r[:, None]) \
+            & (ids[None] < slot_r[:, None] + S)
+        valid = valid & (rv | in_block)
+    bound = None if kv_limit is None else \
+        jnp.maximum(kv_limit, jnp.max(slot_r) + S)
+    out = attention(q, ck, cv, q_pos=q2[0], kv_pos=jnp.maximum(pos, 0),
+                    mode="full", kv_valid=valid, impl=impl,
                     kv_limit=bound)
     return out, (ck, cv)
 

@@ -111,6 +111,40 @@ def kv_write_slice(cache_k: Array, cache_v: Array, k_new: Array, v_new: Array,
                         cache_k, cache_v)
 
 
+def kv_write_slice_rows(cache_k: Array, cache_v: Array, k_new: Array,
+                        v_new: Array, starts: Array) -> tuple[Array, Array]:
+    """Per-row companion of :func:`kv_write_slice`: row ``b``'s [S] chunk
+    lands at slot ``starts[b]`` of its own cache row (no ring wrap — the
+    sliced decode loop owns full-length buffers). Out-of-range starts
+    (``>= T``, the write-gating sentinel for rows with nothing to commit)
+    drop the whole row's write."""
+    B, S = k_new.shape[:2]
+    T = cache_k.shape[1]
+    rows = jnp.arange(B, dtype=jnp.int32)[:, None]
+    idx = starts.astype(jnp.int32)[:, None] + jnp.arange(S, dtype=jnp.int32)
+    idx = jnp.where(idx < T, idx, T)  # sentinel -> mode="drop"
+    return (cache_k.at[rows, idx].set(k_new.astype(cache_k.dtype),
+                                      mode="drop"),
+            cache_v.at[rows, idx].set(v_new.astype(cache_v.dtype),
+                                      mode="drop"))
+
+
+def pos_write_slice_rows(pos: Array, positions: Array, starts: Array
+                         ) -> Array:
+    """Per-row companion of :func:`pos_write_slice`: mark every row's
+    written slots valid in the SHARED [T] pos row (union). Slot ranges
+    are disjoint across rows — or identical with identical position
+    values when rows are uniform — so scatter order cannot matter; the
+    sliced decode loop only runs "full"-mode attention, which reads pos
+    for validity (``>= 0``), not for causal ordering. Sentinel starts
+    (``>= T``) drop."""
+    B, S = positions.shape
+    T = pos.shape[0]
+    idx = starts.astype(jnp.int32)[:, None] + jnp.arange(S, dtype=jnp.int32)
+    idx = jnp.where(idx < T, idx, T)
+    return pos.at[idx].set(positions.astype(jnp.int32), mode="drop")
+
+
 def pos_write_slice(pos: Array, positions: Array, start: Array) -> Array:
     """Wrap-aware companion of :func:`kv_write_slice` for the [T] pos row."""
     start = start.astype(jnp.int32)
@@ -162,16 +196,28 @@ def identity_page_table(batch: int, max_len: int, page_size: int
 
 def _page_index(page_table: Array, start: Array, S: int, page_size: int
                 ) -> Tuple[Array, Array]:
-    """(physical page [B,S], in-page offset [S]) for logical slots
-    ``start + arange(S)``. Unmapped entries come back negative — callers
+    """(physical page [B,S], in-page offset [S] or [B,S]) for logical
+    slots ``start + arange(S)``. ``start`` is scalar (all rows write the
+    same logical range) or per-row [B] (the sliced decode loop: each row
+    commits its own cursor block). Unmapped — or out-of-range, the
+    per-row write-gating sentinel — entries come back negative; callers
     clamp (gather) or drop (scatter)."""
-    slots = start.astype(jnp.int32) + jnp.arange(S, dtype=jnp.int32)
+    start = start.astype(jnp.int32)
+    if start.ndim == 1:
+        slots = start[:, None] + jnp.arange(S, dtype=jnp.int32)  # [B, S]
+    else:
+        slots = start + jnp.arange(S, dtype=jnp.int32)           # [S]
     lp = slots // page_size
     off = slots % page_size
     n_log = page_table.shape[1]
     lp_safe = jnp.clip(lp, 0, n_log - 1)
-    pp = page_table[:, lp_safe]                       # [B, S]
-    pp = jnp.where(((lp >= 0) & (lp < n_log))[None], pp, -1)
+    in_range = (lp >= 0) & (lp < n_log)
+    if start.ndim == 1:
+        pp = jnp.take_along_axis(page_table, lp_safe, axis=1)  # [B, S]
+        pp = jnp.where(in_range, pp, -1)
+    else:
+        pp = page_table[:, lp_safe]                            # [B, S]
+        pp = jnp.where(in_range[None], pp, -1)
     return pp, off
 
 
@@ -206,7 +252,7 @@ def paged_kv_write(pool_k: Array, pool_v: Array, k_new: Array, v_new: Array,
     pp, off = _page_index(page_table, start, k_new.shape[1], page_size)
     oob = pool_k.shape[0]  # sentinel physical page -> mode="drop"
     pp = jnp.where(pp < 0, oob, pp)
-    off = jnp.broadcast_to(off[None], pp.shape)
+    off = jnp.broadcast_to(off, pp.shape)
     pk = pool_k.at[pp, off].set(k_new.astype(pool_k.dtype), mode="drop")
     pv = pool_v.at[pp, off].set(v_new.astype(pool_v.dtype), mode="drop")
     return pk, pv
@@ -220,7 +266,7 @@ def paged_kv_write_layers(pool_k: Array, pool_v: Array, ks: Array, vs: Array,
     pp, off = _page_index(page_table, start, ks.shape[2], page_size)
     oob = pool_k.shape[1]
     pp = jnp.where(pp < 0, oob, pp)
-    off = jnp.broadcast_to(off[None], pp.shape)
+    off = jnp.broadcast_to(off, pp.shape)
     pk = pool_k.at[:, pp, off].set(ks.astype(pool_k.dtype), mode="drop")
     pv = pool_v.at[:, pp, off].set(vs.astype(pool_v.dtype), mode="drop")
     return pk, pv

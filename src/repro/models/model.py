@@ -580,11 +580,15 @@ def block_step(params: dict, cfg: ModelConfig, block_tokens: Array,
                exclude_len: int = 0, write_slot: Optional[Array] = None,
                window: int = 0, attn_impl: str = "auto",
                page_size: int = 0,
-               row_live: Optional[Array] = None) -> Tuple[Array, dict]:
+               row_live: Optional[Array] = None,
+               row_limit: Optional[Array] = None) -> Tuple[Array, dict]:
     """One denoising forward of the active block against the cache.
 
     block_tokens [B, bs] (masked positions hold cfg.mask_token_id);
-    block_start: [] int32 absolute position of the block's first token.
+    block_start: [] int32 absolute position of the block's first token,
+    or PER-ROW [B] (the step-sliced decode loop: each row denoises its
+    own cursor block — ``write_slot`` / ``exclude_start`` may then be
+    per-row too, and a write slot ``>= T`` gates that row's commit off).
     Bidirectional within the block; the context is whatever the cache holds.
 
     ``write=True`` commits this forward's K/V into the cache at slot
@@ -616,6 +620,14 @@ def block_step(params: dict, cfg: ModelConfig, block_tokens: Array,
     their cache reads identically; live rows keep the shared valid
     extent, which changes nothing (``pos`` already masks beyond it) — so
     passing an all-live mask is a no-op.
+
+    ``row_limit`` [B] int32 (any layout) is the explicit per-row form:
+    row ``b`` attends cache slots ``< row_limit[b]`` only (its own fresh
+    block always stays visible). The sliced decode loop passes each
+    row's committed extent ``P + cursor*bs``, so a freshly re-admitted
+    slot cannot see the previous occupant's stale tail. Mutually
+    exclusive with ``row_live`` (which derives the same thing from the
+    shared extent).
     """
     assert cfg.supports_mdlm, f"{cfg.name} is causal-only (DESIGN.md)"
     x = embed(params["embed"], block_tokens)
@@ -625,7 +637,10 @@ def block_step(params: dict, cfg: ModelConfig, block_tokens: Array,
     if paged:
         assert page_size > 0, "paged cache needs page_size"
         assert not window, "paged layout has no ring/sliding-window variant"
-    q_pos = block_start + jnp.arange(bs, dtype=jnp.int32)
+    if getattr(block_start, "ndim", 0) == 1:
+        q_pos = block_start[:, None] + jnp.arange(bs, dtype=jnp.int32)
+    else:
+        q_pos = block_start + jnp.arange(bs, dtype=jnp.int32)
     slot = kv["length"] if write_slot is None else         jnp.asarray(write_slot, jnp.int32)
     use_kernel = attn_impl == "kernel"
     kv_limit = None
@@ -633,7 +648,8 @@ def block_step(params: dict, cfg: ModelConfig, block_tokens: Array,
         from repro.kernels import ops as kops
         # valid cache extent, shared across layers (one [T] reduction)
         kv_limit = kops.kv_limit_from_pos(kv["pos"])
-    row_limit = None
+    assert row_live is None or row_limit is None, \
+        "pass row_live OR the explicit row_limit, not both"
     if paged and row_live is not None:
         # per-row extent: retired rows stop touching their mapped pages
         if kv_limit is None:
@@ -643,6 +659,15 @@ def block_step(params: dict, cfg: ModelConfig, block_tokens: Array,
             shared_lim = kv_limit
         row_limit = jnp.where(jnp.asarray(row_live).astype(bool),
                               shared_lim, 0).astype(jnp.int32)
+    dense_row_valid = None
+    if row_limit is not None and not paged:
+        if attn_impl in ("kernel", "flash"):
+            # rank-1 kv_limit: the fallback masks per row and bounds the
+            # kv scan at the batch-max extent (mirrors the paged wiring)
+            kv_limit = row_limit
+        else:
+            ids = jnp.arange(kv["k"].shape[2], dtype=jnp.int32)
+            dense_row_valid = ids[None] < row_limit[:, None]
 
     def body(h, xs):
         if paged:
@@ -676,13 +701,18 @@ def block_step(params: dict, cfg: ModelConfig, block_tokens: Array,
                 block_start=block_start, kv_limit=kv_limit,
                 exclude_start=exclude_start, exclude_len=exclude_len,
                 window=window)
-            kv_out = cache_lib.kv_write_slice(ck, cv, k, v, slot) \
-                if write else None
+            if not write:
+                kv_out = None
+            elif slot.ndim == 1:
+                kv_out = cache_lib.kv_write_slice_rows(ck, cv, k, v, slot)
+            else:
+                kv_out = cache_lib.kv_write_slice(ck, cv, k, v, slot)
         else:
             attn, kv_out = cached_block_attend(
                 q, ck, cv, k, v, kv["pos"], slot=slot, q_pos=q_pos,
                 kv_limit=kv_limit, exclude_start=exclude_start,
-                exclude_len=exclude_len, window=window, impl=attn_impl)
+                exclude_len=exclude_len, window=window, impl=attn_impl,
+                row_valid=dense_row_valid)
         h = h + jnp.einsum("bsd,dm->bsm",
                            attn.reshape(B, bs, -1).astype(h.dtype), lp["wo"])
         h, _ = _mlp_part(lp, cfg, h)
@@ -699,8 +729,15 @@ def block_step(params: dict, cfg: ModelConfig, block_tokens: Array,
         ck_new, cv_new = kv_new
         upd = dict(kp=ck_new, vp=cv_new) if paged else \
             dict(k=ck_new, v=cv_new)
-        kv = dict(kv, **upd,
-                  pos=cache_lib.pos_write_slice(kv["pos"], q_pos, slot),
+        if slot.ndim == 1 or q_pos.ndim == 2:
+            q2 = q_pos if q_pos.ndim == 2 else \
+                jnp.broadcast_to(q_pos[None], (B, bs))
+            slot_r = slot if slot.ndim == 1 else \
+                jnp.broadcast_to(slot, (B,))
+            pos = cache_lib.pos_write_slice_rows(kv["pos"], q2, slot_r)
+        else:
+            pos = cache_lib.pos_write_slice(kv["pos"], q_pos, slot)
+        kv = dict(kv, **upd, pos=pos,
                   length=kv["length"] + bs if advance else kv["length"])
         cache = dict(cache, attn=kv)
     return logits, cache

@@ -14,11 +14,19 @@ return responses in uid order. Callers that want batch-granularity control
 Throughput accounting (``EngineStats``): NFE (model forwards — the
 hardware-independent driver), *delivered* tokens (post-EOS truncation; a
 request that stops early is not credited ``max_new_tokens``), and
-per-request wall = its own queue wait + its batch's decode wall. Under
-the paged KV layout (``DecodeConfig.cache_layout="paged"``, SERVING.md
-"Paged KV") the stats additionally surface page-pool occupancy:
-``page_capacity``, ``pages_peak`` / ``page_util``, ``pages_shared``,
-``pages_freed``.
+per-request wall = its own queue wait + the decode wall it was actually
+decoded in. Under the paged KV layout (``DecodeConfig.cache_layout=
+"paged"``, SERVING.md "Paged KV") the stats additionally surface
+page-pool occupancy: ``page_capacity``, ``pages_peak`` / ``page_util``,
+``pages_shared``, ``pages_freed``.
+
+With ``EngineConfig.slice_len >= 1`` the scheduler runs the STEP-SLICED
+decode loop (SERVING.md "Async admission"): requests admit into freed
+slots mid-generation, EOS retirement reclaims pages at slice
+boundaries, and the latency split is slice-granular — ``Response.
+ttfb_s`` (submit → first decoded block) plus ``queue_s``/``decode_s``
+measured at the boundaries the row actually crossed, instead of
+charging every member the whole batch's wall.
 """
 from __future__ import annotations
 

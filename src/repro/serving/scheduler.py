@@ -58,7 +58,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config.base import DecodeConfig, EngineConfig, ModelConfig
-from repro.core.decoder import make_generate_fn, result_profile
+from repro.core.decoder import (admit_carry_rows, init_decode_carry,
+                                make_admit_fn, make_generate_fn,
+                                make_slice_fn, result_profile,
+                                retire_carry_rows)
 from repro.core.osdt import CalibrationStore
 from repro.data import tokenizer as tok
 from repro.models import model as M
@@ -81,13 +84,18 @@ class Response:
     task: str
     text: str
     nfe: int          # denoising forwards THIS row needed (its seq_steps)
-    wall_s: float     # queue wait + decode wall of the row's batch
+    wall_s: float     # queue wait + decode wall THIS row was decoded in
     queue_s: float = 0.0
     decode_s: float = 0.0
     tokens_out: int = 0   # tokens delivered after EOS truncation
     tokens_dropped: int = 0  # generated but cut at EOS / never unmasked
     blocks_drafted: int = 0   # spec decode: blocks drafted for this row
     blocks_accepted: int = 0  # ... and how many survived verification
+    # submit -> the row's FIRST decoded block is available. Sliced decode
+    # measures it at the first slice boundary the row participated in;
+    # the batch-granular runtime can only observe the batch end, so there
+    # it equals wall_s (stats glossary).
+    ttfb_s: float = 0.0
 
 
 @dataclass
@@ -102,17 +110,29 @@ class RequestState:
 class Slot:
     """One row of the decode batch. ``state``: free | active | dead.
     ``pages``: private pool pages this slot's request owns (paged layout);
-    freed — and shared-prefix references dropped — at retirement."""
+    freed — and shared-prefix references dropped — at retirement.
+    Sliced decode additionally accumulates the slot's per-request
+    latency split (``decode_s`` over the slices it was live in,
+    ``ttfb_s`` at its first slice boundary) and remembers which task it
+    is calibrating, if any."""
     index: int
     state: str = "free"
     rs: Optional[RequestState] = None
     pages: Optional[List[int]] = None
+    decode_s: float = 0.0
+    ttfb_s: float = 0.0
+    calib_task: str = ""
+    was_mid: bool = False  # admitted while the batch was mid-generation
 
     def admit(self, rs: Optional[RequestState],
               pages: Optional[List[int]] = None) -> None:
         self.rs = rs
         self.pages = pages
         self.state = "active" if rs is not None else "dead"
+        self.decode_s = 0.0
+        self.ttfb_s = 0.0
+        self.calib_task = ""
+        self.was_mid = False
         if rs is not None:
             rs.slot = self.index
 
@@ -120,6 +140,7 @@ class Slot:
         self.rs = None
         self.pages = None
         self.state = "free"
+        self.calib_task = ""
 
 
 @dataclass
@@ -147,6 +168,12 @@ class EngineStats:
     #                           while some row was still live to reach
     #                           it, minus the 2 draft forwards per batch;
     #                           blocks past every row's EOS don't count)
+    # step-sliced decode (all 0 with slice_len == 0)
+    slices: int = 0           # compiled slice dispatches
+    mid_admits: int = 0       # requests admitted while the batch was
+    #                           already mid-generation (cursor > 0 rows
+    #                           present) — the async-admission payoff
+    ttfb_s: float = 0.0       # sum of per-request time-to-first-block
 
     @property
     def tokens_per_s(self) -> float:
@@ -233,6 +260,22 @@ class Scheduler:
             shared_prefix_len=self.shared_len if self.paged else 0,
             variant="draft" if self.spec else "step")
 
+        # step-sliced decode loop (SERVING.md "Async admission")
+        self.slice_len = int(self.ecfg.slice_len)
+        self._carry = None
+        self._nfe_seen = 0
+        self._calibrating: Dict[str, int] = {}  # task -> calibration slot
+        if self.slice_len:
+            kw = dict(cache_mode=mode, attn_impl=self.ecfg.attn_impl,
+                      cache_layout="paged" if self.paged else "dense",
+                      shared_prefix_len=self.shared_len if self.paged
+                      else 0)
+            self._slice_fn = make_slice_fn(
+                cfg, dcfg, slice_len=self.slice_len,
+                variant="draft" if self.spec else "step", **kw)
+            self._admit_fn = make_admit_fn(cfg, dcfg, **kw) \
+                if mode != "none" else None
+
     # -- page pool (paged layout; SERVING.md "Paged KV") ----------------
     def _init_page_pool(self, mode: str) -> None:
         cfg, dcfg, ecfg = self.cfg, self.dcfg, self.ecfg
@@ -277,8 +320,14 @@ class Scheduler:
         self.stats.pages_peak = self.allocator.in_use
 
     # -- queue ----------------------------------------------------------
-    def submit(self, requests: List[Request]) -> None:
-        now = time.perf_counter()
+    def submit(self, requests: List[Request],
+               at: Optional[float] = None) -> None:
+        """Enqueue requests. ``at`` overrides the submit timestamp (a
+        ``time.perf_counter()`` value) — arrival-process simulators
+        submit between decode dispatches but want queue waits measured
+        from the ARRIVAL time, not from when the driver thread got
+        around to the call."""
+        now = time.perf_counter() if at is None else at
         for r in requests:
             self.queue.append(RequestState(r, now))
 
@@ -345,10 +394,7 @@ class Scheduler:
             if self.paged else None
         for slot in self.slots:
             if slot.state == "active":
-                ids = tok.encode(slot.rs.req.prompt, bos=True)
-                ids = ids[-(P - self.shared_len):]
-                rows.append(self._shared_ids
-                            + tok.pad_left(ids, P - self.shared_len))
+                rows.append(self._prompt_row(slot.rs))
                 tasks.append(slot.rs.req.task)
                 if self.paged:
                     page_tables[slot.index, :n_shared] = self._shared_pages
@@ -415,10 +461,14 @@ class Scheduler:
                     decode_s=decode_s, tokens_out=len(row),
                     tokens_dropped=tokens.shape[1] - len(row),
                     blocks_drafted=int(drafted[j]),
-                    blocks_accepted=int(accepted[j])))
+                    blocks_accepted=int(accepted[j]),
+                    # batch granularity: the first block is only
+                    # observable when the whole batch returns
+                    ttfb_s=queue_s + decode_s))
                 self.stats.tokens += len(row)
                 self.stats.tokens_dropped += tokens.shape[1] - len(row)
                 self.stats.queue_s += queue_s
+                self.stats.ttfb_s += queue_s + decode_s
                 self.stats.seq_steps += steps
             if draft_mask is not None and int(drafted.sum()) > 0:
                 self.stats.blocks_drafted += int(drafted.sum())
@@ -471,8 +521,247 @@ class Scheduler:
                 slot.retire()
         return out
 
+    # -- step-sliced decode (SERVING.md "Async admission") --------------
+    def _start_carry(self) -> None:
+        """Build a fresh all-free carry. Paged: the pool arrays move INTO
+        the carry (they may be donated into the compiled slice program on
+        TPU — the scheduler must not keep aliases while a carry is live;
+        ``_teardown_carry`` recovers them)."""
+        B, P = self.ecfg.batch_size, self.ecfg.prompt_len
+        kw = {}
+        if self.paged:
+            kw = dict(pool_k=self._pool_k, pool_v=self._pool_v,
+                      page_table=np.full((B, self.n_log), -1, np.int32))
+            self._pool_k = self._pool_v = None
+        self._carry = init_decode_carry(
+            self.cfg, self.dcfg, batch=B, prompt_len=P,
+            mask_id=self.mask_id,
+            cache_mode=self.ecfg.resolved_cache_mode(),
+            cache_layout="paged" if self.paged else "dense",
+            shared_prefix_len=self.shared_len if self.paged else 0, **kw)
+        self._nfe_seen = 0
+
+    def _teardown_carry(self) -> None:
+        if self._carry is None:
+            return
+        if self.paged:
+            kv = self._carry.cache["attn"]
+            if kv["kp"].is_deleted():
+                # the carry was donated into a dispatch that then failed
+                # at execution time (TPU): its buffers — pool included —
+                # are gone. Rebuild the pool and re-prefill the shared
+                # prefix instead of masking the original error with a
+                # deleted-buffer access (and never recovering the pool).
+                self._carry = None
+                self._init_page_pool(self.ecfg.resolved_cache_mode())
+                return
+            self._pool_k, self._pool_v = kv["kp"], kv["vp"]
+        self._carry = None
+
+    def _prompt_row(self, rs: RequestState) -> List[int]:
+        P = self.ecfg.prompt_len
+        ids = tok.encode(rs.req.prompt, bos=True)
+        ids = ids[-(P - self.shared_len):]
+        return self._shared_ids + tok.pad_left(ids, P - self.shared_len)
+
+    def _admit_sliced(self) -> List[Slot]:
+        """Pop admissible requests into free slots (FIFO; paged admission
+        gates on PAGE availability), update the carry's rows, and run the
+        one batched admission prefill. Returns the slots admitted at this
+        boundary."""
+        free = [s for s in self.slots if s.state == "free"]
+        admitted: List[Slot] = []
+        now = time.perf_counter()
+        mid_gen = self._carry is not None and \
+            any(s.state == "active" for s in self.slots)
+        for slot in free:
+            if not self.queue:
+                break
+            if self.paged and \
+                    self.allocator.available < self.private_per_slot:
+                break
+            rs = self.queue.popleft()
+            rs.t_admit = now
+            pages = None
+            if self.paged:
+                _, pages = self.allocator.fork(self._shared_pages,
+                                               self.private_per_slot)
+            slot.admit(rs, pages)
+            slot.was_mid = mid_gen
+            t = rs.req.task
+            self.seen_tasks[t] = self.seen_tasks.get(t, 0) + 1
+            if not self.store.calibrated(t) and t not in self._calibrating:
+                self._calibrating[t] = slot.index
+                slot.calib_task = t
+            admitted.append(slot)
+        if not admitted:
+            return admitted
+        if self._carry is None:
+            self._start_carry()
+        self.stats.requests += len(admitted)
+        if mid_gen:
+            self.stats.mid_admits += len(admitted)
+        rows = [s.index for s in admitted]
+        prompts = np.asarray([self._prompt_row(s.rs) for s in admitted],
+                             np.int32)
+        tables = self.store.tables_for([s.rs.req.task for s in admitted])
+        page_rows = None
+        if self.paged:
+            n_shared = self.shared_len // self.dcfg.page_size
+            page_rows = np.full((len(admitted), self.n_log), -1, np.int32)
+            for i, s in enumerate(admitted):
+                page_rows[i, :n_shared] = self._shared_pages
+                page_rows[i, n_shared:] = s.pages
+            self.stats.pages_peak = max(self.stats.pages_peak,
+                                        self.allocator.in_use)
+        self._carry = admit_carry_rows(self._carry, rows, prompts,
+                                       np.asarray(tables), self.mask_id,
+                                       page_rows=page_rows)
+        if self._admit_fn is not None:
+            admit_mask = np.zeros((self.ecfg.batch_size,), bool)
+            admit_mask[rows] = True
+            self._carry = self._admit_fn(self.params, self._carry,
+                                         jnp.asarray(admit_mask))
+        return admitted
+
+    def _retire_sliced(self) -> List[Response]:
+        """Emit responses for rows whose cursor ran out or that
+        EOS-retired, reclaim their pages immediately (the next
+        ``_admit_sliced`` can hand them out), and ingest any finished
+        calibration row."""
+        carry = self._carry
+        cursor = np.asarray(carry.cursor)
+        live = np.asarray(carry.live)
+        nb = self.dcfg.num_blocks
+        done = [s for s in self.slots if s.state == "active"
+                and (cursor[s.index] >= nb or not live[s.index])]
+        if not done:
+            return []
+        tokens = np.asarray(carry.resp)
+        seq_steps = np.asarray(carry.seq_steps)
+        drafted = np.asarray(carry.blocks_drafted)
+        accepted = np.asarray(carry.blocks_accepted)
+        res = carry.result()
+        out: List[Response] = []
+        for slot in done:
+            j, rs = slot.index, slot.rs
+            if slot.calib_task:
+                self.store.ingest(slot.calib_task,
+                                  result_profile(res, row=j))
+                if self.drafter is not None:
+                    self.drafter.invalidate(slot.calib_task)
+                self._calibrating.pop(slot.calib_task, None)
+                if self.ecfg.store_path:
+                    self.store.save(self.ecfg.store_path)
+            row = tokens[j].tolist()
+            if self.eos_id in row:
+                row = row[:row.index(self.eos_id)]
+            row = [t for t in row if t != self.mask_id]
+            queue_s = rs.t_admit - rs.t_submit
+            steps = int(seq_steps[j].sum())
+            out.append(Response(
+                rs.req.uid, rs.req.task, tok.decode(row),
+                nfe=steps, wall_s=queue_s + slot.decode_s,
+                queue_s=queue_s, decode_s=slot.decode_s,
+                tokens_out=len(row),
+                tokens_dropped=tokens.shape[1] - len(row),
+                blocks_drafted=int(drafted[j]),
+                blocks_accepted=int(accepted[j]), ttfb_s=slot.ttfb_s))
+            self.stats.tokens += len(row)
+            self.stats.tokens_dropped += tokens.shape[1] - len(row)
+            self.stats.queue_s += queue_s
+            self.stats.ttfb_s += slot.ttfb_s
+            self.stats.seq_steps += steps
+            # per-row draft counters reset at (re)admission and
+            # accumulate over the row's lifetime: bank them here
+            self.stats.blocks_drafted += int(drafted[j])
+            self.stats.blocks_accepted += int(accepted[j])
+            if self.paged and slot.pages is not None:
+                self.allocator.free(slot.pages)
+                self.allocator.free(self._shared_pages)
+                self.stats.pages_freed += len(slot.pages)
+            slot.retire()
+        self._carry = retire_carry_rows(carry, [s.index for s in done], nb)
+        return out
+
+    def slice_step(self) -> List[Response]:
+        """One slice boundary: admit into free slots, dispatch ONE
+        compiled ``slice_len``-block slice, retire finished rows, and
+        return their responses. A no-op (returning ``[]``) when nothing
+        is queued or active."""
+        assert self.slice_len, "slice_step() needs EngineConfig.slice_len"
+        admitted = self._admit_sliced()
+        active = [s for s in self.slots if s.state == "active"]
+        if not active:
+            self._teardown_carry()
+            return []
+        draft_mask = None
+        if self.spec and admitted:
+            # slice-boundary draft (re-)planning: ONLY the rows admitted
+            # at this boundary get a plan — rows mid-decode already
+            # drafted at their own admission
+            fresh = {s.index for s in admitted}
+            plan = [s.rs.req.task if s.index in fresh and s.rs is not None
+                    else None for s in self.slots]
+            dm = self.drafter.plan_remaining(
+                plan, np.asarray(self._carry.cursor))
+            if dm.any():
+                draft_mask = jnp.asarray(dm)
+                self.stats.draft_batches += 1
+        try:
+            t0 = time.perf_counter()
+            self._carry = self._slice_fn(
+                self.params, self._carry, self._mask_arr,
+                self.eos_id if self.ecfg.eos_early_exit else None,
+                draft_mask)
+            cursor = np.asarray(self._carry.cursor)  # blocks until ready
+            t_end = time.perf_counter()
+        except BaseException:
+            # a failed slice must not swallow in-flight requests or leak
+            # their pages: requeue FIFO (by submit time) and reclaim.
+            # The retried admission re-counts the request and may
+            # re-claim its calibration row, so back out both here.
+            for slot in sorted(active, key=lambda s: s.rs.t_submit,
+                               reverse=True):
+                self.queue.appendleft(slot.rs)
+                self.stats.requests -= 1
+                if slot.was_mid:
+                    self.stats.mid_admits -= 1
+                if slot.calib_task:
+                    self._calibrating.pop(slot.calib_task, None)
+                if self.paged and slot.pages is not None:
+                    self.allocator.free(slot.pages)
+                    self.allocator.free(self._shared_pages)
+                slot.retire()
+            self._teardown_carry()
+            raise
+        wall = t_end - t0
+        self.stats.wall_s += wall
+        self.stats.slices += 1
+        nfe_now = int(np.asarray(self._carry.nfe))
+        self.stats.nfe += nfe_now - self._nfe_seen
+        self._nfe_seen = nfe_now
+        for slot in active:
+            slot.decode_s += wall
+            if not slot.ttfb_s and cursor[slot.index] > 0:
+                slot.ttfb_s = t_end - slot.rs.t_submit
+        out = self._retire_sliced()
+        if not self.queue and \
+                not any(s.state == "active" for s in self.slots):
+            self._teardown_carry()
+        return out
+
     def run(self) -> List[Response]:
         out: List[Response] = []
+        if self.slice_len:
+            while self.queue or \
+                    any(s.state == "active" for s in self.slots):
+                got = self.slice_step()
+                out.extend(got)
+                if not got and not any(s.state == "active"
+                                       for s in self.slots):
+                    break  # nothing admissible (pool too small)
+            return out
         while self.queue:
             got = self.step()
             if not got:  # nothing admissible (should not happen)

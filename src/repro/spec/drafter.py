@@ -58,3 +58,29 @@ class Drafter:
         """Assemble the per-slot ``draft_mask [B, nb]`` for a mixed batch
         (the draft-variant decoder's trailing runtime argument)."""
         return np.stack([self.row_mask(t) for t in tasks])
+
+    def plan_remaining(self, tasks: Sequence[Optional[str]],
+                       cursor: np.ndarray) -> np.ndarray:
+        """Slice-boundary draft (re-)planning for the step-sliced decode
+        loop (SERVING.md "Async admission").
+
+        ``tasks[b]`` is row ``b``'s task for rows whose plan should be
+        (re)built — newly admitted rows, including mid-generation
+        admissions — and ``None`` for rows that must not be touched
+        (mid-decode rows already drafted at their own admission, dead
+        slots). ``cursor`` [B] is the carry's per-row block cursor: only
+        each row's REMAINING blocks (``>= cursor[b]``) are flagged, so a
+        request admitted mid-generation drafts against the context its
+        own row has actually committed. Returns the ``[B, nb]`` bool
+        ``draft_mask`` for the next slice dispatch (all-False rows cost
+        nothing — the slice program skips the draft forwards when the
+        whole mask is empty).
+        """
+        nb = self.dcfg.num_blocks
+        cursor = np.asarray(cursor, np.int64)
+        mask = np.zeros((len(tasks), nb), bool)
+        for b, t in enumerate(tasks):
+            if t is None:
+                continue
+            mask[b] = self.row_mask(t) & (np.arange(nb) >= cursor[b])
+        return mask
