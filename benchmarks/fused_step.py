@@ -1,0 +1,111 @@
+"""Fused denoising-step epilogue: dispatch/HBM-pass counts + µs/step model.
+
+Times the unfused epilogue chain (lm-head matmul, confidence pass,
+threshold select — three separate jit dispatches, the logits written to
+and re-read from HBM between them) against ``ops.fused_step`` (ONE
+dispatch; on TPU the logits never leave VMEM) at toy sizes, and publishes
+the analytic roofline µs/step per decode variant
+(``repro.roofline.analytic.step_time_model``) so EXPERIMENTS.md's step
+table can put model next to measurement. Real fused-kernel timing needs a
+TPU — the interpret-mode row only proves the body runs.
+"""
+from __future__ import annotations
+
+import time
+from functools import partial
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.registry import get_config
+from repro.core.confidence import confidence_ref
+from repro.kernels import ops
+from repro.kernels.fused_step import fused_step_pallas
+from repro.models.layers import unembed
+from repro.roofline.analytic import step_time_model
+
+# the epilogue chain is 3 dispatches + 3 HBM passes over the [R, V]
+# logits (head writes, confidence reads, select re-touches conf/tok);
+# the fused kernel is 1 dispatch and streams the logits tile-wise
+DISPATCHES_UNFUSED, DISPATCHES_FUSED = 3, 1
+LOGIT_HBM_PASSES_UNFUSED, LOGIT_HBM_PASSES_FUSED = 3, 1
+
+R, M, V = 64, 256, 2048  # toy sizes (CPU container)
+
+
+def _time(fn, *args, iters: int = 5) -> float:
+    fn(*args)  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.tree.leaves(out)[0].block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+@partial(jax.jit, static_argnames=("tied",))
+def _head(x, w, tied):
+    return unembed(w, x, transpose=tied)
+
+
+@jax.jit
+def _conf(logits):
+    return confidence_ref(logits)
+
+
+@jax.jit
+def _select(conf, tau, masked):
+    return masked & (conf > tau)
+
+
+def run(csv_rows: List[str], verbose: bool = True) -> None:
+    key = jax.random.key(0)
+    x = jax.random.normal(key, (1, R, M), jnp.float32)
+    w = jax.random.normal(jax.random.key(1), (V, M), jnp.float32)
+    tau = jnp.full((1, R), 0.9, jnp.float32)
+    masked = jnp.ones((1, R), bool)
+
+    def unfused(x, w, tau, masked):
+        logits = _head(x, w, True)
+        conf, tok = _conf(logits)
+        return conf, tok, _select(conf, tau, masked)
+
+    def fused(x, w, tau, masked):
+        return ops.fused_step(x, w, tau, masked, tied=True)
+
+    # identical results is the tests' contract; cheap sanity here too
+    cu, tu, au = unfused(x, w, tau, masked)
+    cf, tf, af = fused(x, w, tau, masked)
+    np.testing.assert_array_equal(np.asarray(tu), np.asarray(tf))
+    np.testing.assert_array_equal(np.asarray(au), np.asarray(af))
+
+    rows = [
+        f"fused_step/unfused_epilogue/r{R}_v{V},"
+        f"{_time(unfused, x, w, tau, masked):.1f},"
+        f"{DISPATCHES_UNFUSED}_dispatch_chain",
+        f"fused_step/fused_epilogue/r{R}_v{V},"
+        f"{_time(fused, x, w, tau, masked):.1f},xla_cpu_path",
+        f"fused_step/fused_epilogue_interp/r{R}_v{V},"
+        f"{_time(lambda *a: fused_step_pallas(*a, tied=True, interpret=True), x[0], w, tau[0], masked[0]):.1f},"
+        "interpret_mode",
+        f"fused_step/dispatches_unfused,{DISPATCHES_UNFUSED},"
+        "per_step_epilogue",
+        f"fused_step/dispatches_fused,{DISPATCHES_FUSED},per_step_epilogue",
+        f"fused_step/logit_hbm_passes_unfused,{LOGIT_HBM_PASSES_UNFUSED},"
+        "head_write+conf_read+select",
+        f"fused_step/logit_hbm_passes_fused,{LOGIT_HBM_PASSES_FUSED},"
+        "streamed_through_vmem",
+    ]
+
+    # analytic µs/step roofline per decode variant, at serving scale
+    cfg = get_config("llada-8b")
+    model = step_time_model(cfg, batch=8, ctx=4096, block_size=32)
+    for variant, t in sorted(model.items()):
+        rows.append(f"roofline/step_us_model/{variant},{t['us']:.1f},"
+                    f"{t['bound']}_bound_d{t['dispatches']}")
+
+    for row in rows:
+        csv_rows.append(row)
+        if verbose:
+            print(row)

@@ -14,8 +14,8 @@ from typing import List
 
 from benchmarks import (async_admission, block_attn, cache_modes,
                         fig1_confidence, fig2_cosine, fig3_5_sweep,
-                        kernels_bench, paged_kv, scheduler_bench,
-                        spec_decode, table1_compare)
+                        fused_step, kernels_bench, paged_kv,
+                        scheduler_bench, spec_decode, table1_compare)
 
 BENCHES = {
     "fig1": fig1_confidence.run,
@@ -25,6 +25,7 @@ BENCHES = {
     "cache_modes": cache_modes.run,
     "kernels": kernels_bench.run,
     "block_attn": block_attn.run,
+    "fused_step": fused_step.run,
     "scheduler": scheduler_bench.run,
     "paged_kv": paged_kv.run,
     "spec_decode": spec_decode.run,

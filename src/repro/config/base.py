@@ -218,6 +218,14 @@ class DecodeConfig:
     #           shared system-prompt prefix is stored once (refcounted)
     cache_layout: str = "dense"
     page_size: int = 16           # cache slots per page (kernel wants >= 8)
+    # denoising-step epilogue (KERNELS.md "fused step"):
+    #   unfused — head matmul, confidence pass, threshold select as three
+    #             separate dispatches (3 HBM passes over the logits)
+    #   fused   — ops.fused_step streams lm-head logit tiles through the
+    #             confidence accumulators + threshold compare in ONE
+    #             kernel on TPU (bit-identical jnp chain elsewhere);
+    #             threshold rule only (quota == 0)
+    step_fusion: str = "unfused"
 
     @property
     def num_blocks(self) -> int:

@@ -35,6 +35,7 @@ import numpy as np
 from repro.config.base import DecodeConfig, ModelConfig
 from repro.core.calibrate import CalibrationProfile
 from repro.core.confidence import confidence
+from repro.kernels import ops as kops
 from repro.models import cache as cache_lib
 from repro.models import model as M
 
@@ -53,34 +54,46 @@ class GenerateResult(NamedTuple):
     blocks_accepted: Array  # [B] int32 — drafted blocks that verified
 
 
+def _threshold_fallback(conf: Array, masked: Array, above: Array,
+                        live: Optional[Array]) -> Array:
+    """Algorithm 1 l.19-21: positions already above threshold, plus the
+    single most-confident masked position for rows where none cleared it.
+    ``above`` is the threshold rule's [B, bs] verdict — computed either
+    host-side (``_unmask_choice``) or in-kernel (``ops.fused_step``); the
+    cross-row argmax fallback is [B, bs]-sized and stays here. The
+    fallback only fires for *live* rows — dead slots / EOS-finished rows
+    must not be forced to denoise."""
+    conf_m = jnp.where(masked, conf, -jnp.inf)
+    best = jnp.argmax(conf_m, axis=-1)
+    need_fb = (~jnp.any(above, axis=-1)) & jnp.any(masked, axis=-1)
+    if live is not None:
+        need_fb = need_fb & live
+    fb = jax.nn.one_hot(best, conf.shape[-1], dtype=bool) & need_fb[:, None]
+    return above | (fb & masked)
+
+
 def _unmask_choice(conf: Array, toks: Array, block: Array, mask_id: Array,
                    tau: Array, quota: int,
                    live: Optional[Array] = None) -> Array:
     """Boolean [B, bs] of positions to unmask this step.
 
-    ``tau`` is scalar or per-row [B] (per-slot threshold tables). The
-    argmax fallback (Algorithm 1 l.19-21) only fires for *live* rows —
-    dead slots / EOS-finished rows must not be forced to denoise.
+    ``tau`` is scalar or per-row [B] (per-slot threshold tables).
     """
     masked = block == mask_id
     conf_m = jnp.where(masked, conf, -jnp.inf)
     if quota > 0:
         order = jnp.argsort(jnp.argsort(-conf_m, axis=-1), axis=-1)
         return (order < quota) & masked
-    unmask = (conf_m > jnp.reshape(tau, (-1, 1))) & masked
-    best = jnp.argmax(conf_m, axis=-1)
-    need_fb = (~jnp.any(unmask, axis=-1)) & jnp.any(masked, axis=-1)
-    if live is not None:
-        need_fb = need_fb & live
-    fb = jax.nn.one_hot(best, conf.shape[-1], dtype=bool) & need_fb[:, None]
-    return unmask | (fb & masked)
+    above = (conf_m > jnp.reshape(tau, (-1, 1))) & masked
+    return _threshold_fallback(conf, masked, above, live)
 
 
 def make_generate_fn(cfg: ModelConfig, dcfg: DecodeConfig, *,
                      use_cache: bool = True, quota: int = 0,
                      use_kernel: bool = False, cache_mode: str = "",
                      attn_impl: str = "", cache_layout: str = "",
-                     shared_prefix_len: int = 0, variant: str = "step"):
+                     shared_prefix_len: int = 0, variant: str = "step",
+                     step_fusion: str = ""):
     """Build (or fetch) the jitted generate function.
 
     fn(params, prompt [B, P] int32, table, mask_id [],
@@ -145,30 +158,42 @@ def make_generate_fn(cfg: ModelConfig, dcfg: DecodeConfig, *,
     both forwards via ``lax.cond`` — the draft program then reproduces
     the stepped path's tokens exactly.
 
+    ``step_fusion`` (default ``dcfg.step_fusion``): "unfused" runs the
+    classic epilogue (head matmul, confidence pass, threshold select —
+    3 dispatches + 3 HBM passes over [rows, vocab] logits per step);
+    "fused" collapses it into the single ``ops.fused_step`` kernel on
+    TPU (bit-identical jnp chain elsewhere). Requires the threshold rule
+    (``quota == 0`` — the quota baseline needs a full [rows] sort).
+
     Memoized on the NORMALIZED variant key, so spelling-equivalent calls
     (e.g. ``use_cache=True`` vs ``cache_mode="prefix"``) share one jitted
     program — one trace/compile per (cfg, dcfg, variant) process-wide.
     """
-    cache_mode, attn_impl, cache_layout, shared_prefix_len = \
+    cache_mode, attn_impl, cache_layout, shared_prefix_len, step_fusion = \
         _norm_slice_key(cfg, dcfg, use_cache, cache_mode, attn_impl,
-                        cache_layout, shared_prefix_len, variant)
+                        cache_layout, shared_prefix_len, variant,
+                        step_fusion)
     assert not (variant == "draft" and quota > 0), \
         "drafting presupposes the threshold rule, not the quota baseline"
+    assert not (step_fusion == "fused" and quota > 0), \
+        "the fused epilogue implements the threshold rule, not the quota"
     return _make_generate_fn(cfg, dcfg, quota, use_kernel, cache_mode,
                              attn_impl, cache_layout, shared_prefix_len,
-                             variant)
+                             variant, step_fusion)
 
 
 @lru_cache(maxsize=None)
 def _make_generate_fn(cfg: ModelConfig, dcfg: DecodeConfig, quota: int,
                       use_kernel: bool, cache_mode: str, attn_impl: str,
                       cache_layout: str = "dense",
-                      shared_prefix_len: int = 0, variant: str = "step"):
+                      shared_prefix_len: int = 0, variant: str = "step",
+                      step_fusion: str = "unfused"):
     assert cfg.supports_mdlm, f"{cfg.name}: diffusion decoding inapplicable"
     use_cache = cache_mode != "none"
     dual = cache_mode == "dual"
     paged = cache_layout == "paged"
     draft = variant == "draft"
+    fused = step_fusion == "fused"
     ps, Sp = dcfg.page_size, shared_prefix_len
     N, bs = dcfg.max_new_tokens, dcfg.block_size
     nb, sc = dcfg.num_blocks, dcfg.steps_cap
@@ -309,28 +334,30 @@ def _make_generate_fn(cfg: ModelConfig, dcfg: DecodeConfig, quota: int,
                 cache, nfe = jax.lax.cond(
                     any_live, refresh, lambda c, n: (c, n), cache, nfe)
 
-            def model_logits(block, full_resp):
+            def model_out(block, full_resp, head=True):
+                # ``head=False``: the fused epilogue takes the final-norm'd
+                # hidden and unembeds in-kernel (logits never touch HBM)
                 if dual:
-                    logits, _ = M.block_step(
+                    out, _ = M.block_step(
                         params, cfg, block, block_start, cache,
                         write_slot=P + N, exclude_start=start + P,
                         exclude_len=bs, attn_impl=attn_impl, page_size=ps,
-                        row_live=live if paged else None)
-                    return logits
+                        row_live=live if paged else None, head=head)
+                    return out
                 if use_cache:
-                    logits, _ = M.block_step(params, cfg, block,
-                                             block_start, cache,
-                                             attn_impl=attn_impl,
-                                             page_size=ps,
-                                             row_live=live if paged
-                                             else None)
-                    return logits
+                    out, _ = M.block_step(params, cfg, block,
+                                          block_start, cache,
+                                          attn_impl=attn_impl,
+                                          page_size=ps,
+                                          row_live=live if paged
+                                          else None, head=head)
+                    return out
                 x = jnp.concatenate([prompt, full_resp], axis=1)
-                logits, _ = M.forward(params, cfg, x, mode="full")
+                out, _ = M.forward(params, cfg, x, mode="full", head=head)
                 return jax.lax.dynamic_slice(
-                    logits, (jnp.zeros((), jnp.int32), block_start,
-                             jnp.zeros((), jnp.int32)),
-                    (B, bs, logits.shape[-1]))
+                    out, (jnp.zeros((), jnp.int32), block_start,
+                          jnp.zeros((), jnp.int32)),
+                    (B, bs, out.shape[-1]))
 
             def cond_fn(st):
                 block, step, *_ = st
@@ -340,13 +367,21 @@ def _make_generate_fn(cfg: ModelConfig, dcfg: DecodeConfig, quota: int,
 
             def step_fn(st):
                 block, step, resp, nfe, conf_rec, val_rec, seq_steps = st
-                logits = model_logits(block, resp)
-                conf, toks = confidence(logits, use_kernel=use_kernel)
                 masked = block == mask_id
                 row_active = live & jnp.any(masked, axis=-1)
                 tau = table[:, b, jnp.minimum(step, sc - 1)]  # [B]
-                unmask = _unmask_choice(conf, toks, block, mask_id, tau,
-                                        quota, live)
+                if fused:
+                    xh = model_out(block, resp, head=False)
+                    conf, toks, above = kops.fused_step(
+                        xh, M.head_weights(params, cfg),
+                        jnp.broadcast_to(tau[:, None], masked.shape),
+                        masked, tied=cfg.tie_embeddings)
+                    unmask = _threshold_fallback(conf, masked, above, live)
+                else:
+                    logits = model_out(block, resp)
+                    conf, toks = confidence(logits, use_kernel=use_kernel)
+                    unmask = _unmask_choice(conf, toks, block, mask_id,
+                                            tau, quota, live)
                 # dead rows flush their masks in whatever step rides along
                 unmask = unmask | (masked & ~live[:, None])
                 new_block = jnp.where(unmask, toks, block)
@@ -477,7 +512,8 @@ class DecodeCarry(NamedTuple):
 
 def _norm_slice_key(cfg: ModelConfig, dcfg: DecodeConfig, use_cache: bool,
                     cache_mode: str, attn_impl: str, cache_layout: str,
-                    shared_prefix_len: int, variant: str):
+                    shared_prefix_len: int, variant: str,
+                    step_fusion: str = ""):
     """THE program-key normalization — ``make_generate_fn`` and the
     sliced family share it, so spelling-equivalent calls can never key
     the oracle and the sliced programs differently."""
@@ -491,6 +527,9 @@ def _norm_slice_key(cfg: ModelConfig, dcfg: DecodeConfig, use_cache: bool,
         cache_layout = dcfg.cache_layout or "dense"
     assert cache_layout in ("dense", "paged"), cache_layout
     assert variant in ("step", "draft"), variant
+    if not step_fusion:
+        step_fusion = dcfg.step_fusion or "unfused"
+    assert step_fusion in ("unfused", "fused"), step_fusion
     if cache_mode == "none":
         cache_layout = "dense"
     if cache_layout != "paged":
@@ -498,7 +537,8 @@ def _norm_slice_key(cfg: ModelConfig, dcfg: DecodeConfig, use_cache: bool,
     else:
         assert shared_prefix_len % dcfg.page_size == 0, \
             (shared_prefix_len, dcfg.page_size)
-    return cache_mode, attn_impl, cache_layout, shared_prefix_len
+    return (cache_mode, attn_impl, cache_layout, shared_prefix_len,
+            step_fusion)
 
 
 def _donate_default() -> bool:
@@ -520,7 +560,7 @@ def init_decode_carry(cfg: ModelConfig, dcfg: DecodeConfig, *,
     (dead rows all ``-1``); a non-zero ``shared_prefix_len`` expects the
     pool's shared pages to be prefilled already (scheduler ctor) and
     marks their slots valid exactly like the monolithic program."""
-    cache_mode, _, cache_layout, Sp = _norm_slice_key(
+    cache_mode, _, cache_layout, Sp, _ = _norm_slice_key(
         cfg, dcfg, True, cache_mode, "auto", cache_layout,
         shared_prefix_len, "step")
     B, P = batch, prompt_len
@@ -648,7 +688,7 @@ def make_admit_fn(cfg: ModelConfig, dcfg: DecodeConfig, *,
     full batch pays exactly the monolithic program's one prefill. The
     cacheless mode has no admission program (nothing to prefill).
     """
-    cache_mode, attn_impl, cache_layout, Sp = _norm_slice_key(
+    cache_mode, attn_impl, cache_layout, Sp, _ = _norm_slice_key(
         cfg, dcfg, True, cache_mode, attn_impl, cache_layout,
         shared_prefix_len, "step")
     assert cache_mode != "none", "cacheless decode has nothing to admit"
@@ -722,6 +762,7 @@ def make_slice_fn(cfg: ModelConfig, dcfg: DecodeConfig, *,
                   use_kernel: bool = False, cache_mode: str = "prefix",
                   attn_impl: str = "", cache_layout: str = "",
                   shared_prefix_len: int = 0, variant: str = "step",
+                  step_fusion: str = "",
                   donate: Optional[bool] = None):
     """Build (or fetch) the compiled block-slice program.
 
@@ -751,17 +792,24 @@ def make_slice_fn(cfg: ModelConfig, dcfg: DecodeConfig, *,
     auto enables it on TPU only — CPU ignores donation, and the fallback
     is to keep the functional copy (satellite: pool donation).
 
+    ``step_fusion`` mirrors ``make_generate_fn`` — "fused" collapses each
+    step's epilogue (head matmul + confidence + threshold) into the one
+    ``ops.fused_step`` kernel; requires ``quota == 0``.
+
     Memoized like ``make_generate_fn``: one compiled program per
     (cfg, dcfg, variant, slice_len) process-wide.
     """
-    cache_mode, attn_impl, cache_layout, Sp = _norm_slice_key(
+    cache_mode, attn_impl, cache_layout, Sp, step_fusion = _norm_slice_key(
         cfg, dcfg, True, cache_mode, attn_impl, cache_layout,
-        shared_prefix_len, variant)
+        shared_prefix_len, variant, step_fusion)
     assert slice_len >= 1, slice_len
     assert not (variant == "draft" and quota > 0), \
         "drafting presupposes the threshold rule, not the quota baseline"
+    assert not (step_fusion == "fused" and quota > 0), \
+        "the fused epilogue implements the threshold rule, not the quota"
     return _make_slice_fn(cfg, dcfg, int(slice_len), quota, use_kernel,
                           cache_mode, attn_impl, cache_layout, Sp, variant,
+                          step_fusion,
                           _donate_default() if donate is None
                           else bool(donate))
 
@@ -770,12 +818,14 @@ def make_slice_fn(cfg: ModelConfig, dcfg: DecodeConfig, *,
 def _make_slice_fn(cfg: ModelConfig, dcfg: DecodeConfig, slice_len: int,
                    quota: int, use_kernel: bool, cache_mode: str,
                    attn_impl: str, cache_layout: str,
-                   shared_prefix_len: int, variant: str, donate: bool):
+                   shared_prefix_len: int, variant: str, step_fusion: str,
+                   donate: bool):
     assert cfg.supports_mdlm, f"{cfg.name}: diffusion decoding inapplicable"
     use_cache = cache_mode != "none"
     dual = cache_mode == "dual"
     paged = cache_layout == "paged"
     draft = variant == "draft"
+    fused = step_fusion == "fused"
     ps = dcfg.page_size
     N, bs = dcfg.max_new_tokens, dcfg.block_size
     nb, sc = dcfg.num_blocks, dcfg.steps_cap
@@ -885,31 +935,33 @@ def _make_slice_fn(cfg: ModelConfig, dcfg: DecodeConfig, slice_len: int,
                 cache, nfe = jax.lax.cond(
                     any_work, refresh, lambda c, n: (c, n), cache, nfe)
 
-            def model_logits(block, full_resp, live_now):
+            def model_out(block, full_resp, live_now, head=True):
+                # ``head=False``: the fused epilogue takes the final-norm'd
+                # hidden and unembeds in-kernel (logits never touch HBM)
                 if dual:
-                    logits, _ = M.block_step(
+                    out, _ = M.block_step(
                         params, cfg, block, block_start, cache,
                         write_slot=jnp.asarray(P + N, jnp.int32),
                         exclude_start=block_start, exclude_len=bs,
                         attn_impl=attn_impl, page_size=ps,
-                        row_live=live_now if paged else None)
-                    return logits
+                        row_live=live_now if paged else None, head=head)
+                    return out
                 if use_cache:
                     # write_slot = each row's OWN block slots: the
                     # monolithic oracle's slot (= the shared length)
                     # only equals the block position in lockstep
-                    logits, _ = M.block_step(
+                    out, _ = M.block_step(
                         params, cfg, block, block_start, cache,
                         write_slot=block_start, attn_impl=attn_impl,
                         page_size=ps,
-                        row_limit=row_extent(live_now, cursor))
-                    return logits
+                        row_limit=row_extent(live_now, cursor), head=head)
+                    return out
                 x = jnp.concatenate([prompt, full_resp], axis=1)
-                logits, _ = M.forward(params, cfg, x, mode="full")
+                out, _ = M.forward(params, cfg, x, mode="full", head=head)
                 pick = (P + col)[..., None]           # [B, bs, 1]
                 return jnp.take_along_axis(
-                    logits, jnp.broadcast_to(
-                        pick, (B, bs, logits.shape[-1])), axis=1)
+                    out, jnp.broadcast_to(
+                        pick, (B, bs, out.shape[-1])), axis=1)
 
             def cond_fn(st):
                 block, step, *_ = st
@@ -918,13 +970,21 @@ def _make_slice_fn(cfg: ModelConfig, dcfg: DecodeConfig, slice_len: int,
 
             def step_fn(st):
                 block, step, resp, nfe, conf_rec, val_rec, seq_steps = st
-                logits = model_logits(block, resp, live)
-                conf, toks = confidence(logits, use_kernel=use_kernel)
                 masked = block == mask_id
                 row_active = live & jnp.any(masked, axis=-1)
                 tau = table[rows, cur_c, jnp.minimum(step, sc - 1)]  # [B]
-                unmask = _unmask_choice(conf, toks, block, mask_id, tau,
-                                        quota, live)
+                if fused:
+                    xh = model_out(block, resp, live, head=False)
+                    conf, toks, above = kops.fused_step(
+                        xh, M.head_weights(params, cfg),
+                        jnp.broadcast_to(tau[:, None], masked.shape),
+                        masked, tied=cfg.tie_embeddings)
+                    unmask = _threshold_fallback(conf, masked, above, live)
+                else:
+                    logits = model_out(block, resp, live)
+                    conf, toks = confidence(logits, use_kernel=use_kernel)
+                    unmask = _unmask_choice(conf, toks, block, mask_id,
+                                            tau, quota, live)
                 unmask = unmask | (masked & ~live[:, None])
                 new_block = jnp.where(unmask, toks, block)
                 new_resp = resp.at[rows[:, None], col].set(new_block)

@@ -9,27 +9,40 @@ Fast-dLLM-style decoding.
 
 This kernel is purpose-built for ``model.block_step``:
 
-* **Length-aware tile skipping** — the cache's valid extent (``kv_limit``)
-  is scalar-prefetched; kv tiles entirely beyond it are skipped via
-  ``pl.when`` AND their BlockSpec index maps clamp to the last live tile, so
-  revisited blocks issue no new DMA: zero FLOPs and zero HBM reads for the
-  unfilled cache region.
+* **Per-row scalar-prefetched block geometry** — each row's
+  ``[slot, block_start, exc0, exc1, kv_limit]`` vector is scalar-prefetched
+  as a ``[5, B]`` operand, so the BlockSpec index maps and ``pl.when``
+  tile-liveness guards resolve EVERY row's own block geometry before any
+  DMA is issued. The step-sliced decode loop's mixed-cursor batches (each
+  row denoising its own cursor block) therefore stay on the fused Pallas
+  path — uniform (scalar) calls are just the broadcast special case.
+* **Length-aware tile skipping** — kv tiles entirely beyond a row's
+  ``kv_limit`` are skipped via ``pl.when`` AND their BlockSpec index maps
+  clamp to the row's last live tile, so revisited blocks issue no new DMA:
+  zero FLOPs and zero HBM reads for the unfilled cache region. A retired
+  row (``kv_limit == 0``) touches no cache tiles at all.
 * **Native GQA** — queries are laid out ``[B, Kh, G*bs, D]`` so the whole
   q-group shares one kv head; no ``jnp.repeat`` materialisation of K/V.
 * **Fresh-block operands** — the active block's K/V ride as separate
   ``[B, bs, Kh, D]`` inputs appended as extra kv tiles, so the step needs no
   pre-write of the cache (the generic path copies the whole cache buffer per
-  layer per step just to insert the block).
+  layer per step just to insert the block). A sentinel write slot
+  ``>= T`` (the sliced loop's finished rows) hides the fresh block, exactly
+  like the XLA rows path's empty in-block window.
 * **Exact ``block_step`` masking** — slot validity (``pos >= 0``), the
-  dual-cache stale-slot ``exclude_start/len`` range, the sliding ``window``,
-  and bidirectional attention within the block.
+  dual-cache stale-slot ``[exc0, exc1)`` range, the sliding ``window``,
+  and bidirectional attention within the block — all per row.
 
 Because attention here is bidirectional ("full" mode) the mask depends only
 on the KV side — every query row keeps the same columns — which is what lets
 a single ``[kt]`` validity vector drive the whole tile.
 
-Oracle: ``ref.cached_block_attention_ref``. Off-TPU the dispatch in
-``ops.py`` routes to the length-aware ``attend_flash`` path instead.
+The dense and paged layouts share ONE kernel body (``_attn_kernel``): the
+paged variant only swaps the kv operand routing (pool pages resolved per
+row through the scalar-prefetched page table) and adds the page-mapped
+liveness term. Oracle: ``ref.cached_block_attention_ref`` /
+``ref.paged_block_attention_ref`` (one shared core). Off-TPU the dispatch
+in ``ops.py`` routes to the length-aware ``attend_flash`` path instead.
 """
 from __future__ import annotations
 
@@ -46,6 +59,9 @@ from repro.kernels.pallas_compat import compiler_params
 Array = jax.Array
 
 NEG_INF = -1.0e30
+
+# rows of the [5, B] scalar-prefetch operand (one column per batch row)
+SLOT, BSTART, EXC0, EXC1, KVLIM = range(5)
 
 
 def _round_up(x: int, m: int) -> int:
@@ -72,10 +88,10 @@ def _acc_init(m_scr, l_scr, acc_scr, n_scr):
 
 
 def _make_accumulate(q_ref, m_scr, l_scr, acc_scr, n_scr):
-    """One online-softmax update over a kv tile, shared by the dense and
-    paged kernel bodies (ONE definition of the softmax math). ``valid``
-    is [1, tile] — kv-side only: "full" mode attention has no q-side
-    mask."""
+    """One online-softmax update over a kv tile — THE one definition of
+    the flash-accumulator math, shared by every kernel body (dense,
+    paged, per-row are all the same body now). ``valid`` is [1, tile] —
+    kv-side only: "full" mode attention has no q-side mask."""
     q = q_ref[0, 0].astype(jnp.float32)  # [qt, D]
     scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
 
@@ -105,18 +121,35 @@ def _acc_finish(o_ref, cnt_ref, m_scr, l_scr, acc_scr, n_scr):
         cnt_ref[0, 0, 0] = n_scr[0]
 
 
-def _kernel(s_ref, q_ref, ck_ref, cv_ref, bk_ref, bv_ref, pos_ref,
-            *refs, nk: int, nkk: int, kt: int, bt: int, bs: int, T: int,
-            exclude_len: int, window: int, count_tiles: bool):
+def _attn_kernel(s_ref, *args, paged: bool, nk: int, nkk: int, kt: int,
+                 bt: int, bs: int, T: int, exclude: bool, window: int,
+                 count_tiles: bool):
+    """ONE body for the dense and paged layouts.
+
+    ``s_ref`` is the [5, B] per-row scalar operand (rows SLOT..KVLIM);
+    every mask term below reads row ``b = program_id(0)``'s own column, so
+    mixed-cursor batches resolve their own geometry. The paged variant
+    adds the page table (second prefetch operand) whose index maps routed
+    the kv tile to this row's pool page, and gates tile liveness on the
+    page being mapped.
+    """
+    if paged:
+        pt_ref, q_ref, ck_ref, cv_ref, bk_ref, bv_ref, pos_ref = args[:7]
+        refs = args[7:]
+    else:
+        q_ref, ck_ref, cv_ref, bk_ref, bv_ref, pos_ref = args[:6]
+        refs = args[6:]
     if count_tiles:
         o_ref, cnt_ref, m_scr, l_scr, acc_scr, n_scr = refs
     else:
         o_ref, m_scr, l_scr, acc_scr = refs
         cnt_ref = n_scr = None
+    b = pl.program_id(0)
     j = pl.program_id(3)
-    kv_limit = s_ref[0]
-    slot = s_ref[1]
-    exc0 = s_ref[2]
+    slot = s_ref[SLOT, b]
+    exc0 = s_ref[EXC0, b]
+    exc1 = s_ref[EXC1, b]
+    kv_limit = s_ref[KVLIM, b]
 
     @pl.when(j == 0)
     def _init():
@@ -125,9 +158,12 @@ def _kernel(s_ref, q_ref, ck_ref, cv_ref, bk_ref, bv_ref, pos_ref,
     accumulate = _make_accumulate(q_ref, m_scr, l_scr, acc_scr, n_scr)
 
     is_cache = j < nk
-    tile_live = (j * kt) < kv_limit
+    tile_live = is_cache & ((j * kt) < kv_limit)
+    if paged:
+        jm = jnp.minimum(j, nk - 1)
+        tile_live &= pt_ref[b, jm] >= 0
 
-    @pl.when(is_cache & tile_live)
+    @pl.when(tile_live)
     def _cache_tile():
         k = ck_ref[0, :, 0, :].astype(jnp.float32)  # [kt, D]
         v = cv_ref[0, :, 0, :].astype(jnp.float32)
@@ -137,10 +173,10 @@ def _kernel(s_ref, q_ref, ck_ref, cv_ref, bk_ref, bv_ref, pos_ref,
         # slots the fresh block virtually overwrites: stale, served by the
         # block operand instead
         valid &= ~((ids >= slot) & (ids < slot + bs))
-        if exclude_len:
-            valid &= ~((ids >= exc0) & (ids < exc0 + exclude_len))
+        if exclude:
+            valid &= ~((ids >= exc0) & (ids < exc1))
         if window:
-            qmax = s_ref[3] + bs - 1  # block's last absolute position
+            qmax = s_ref[BSTART, b] + bs - 1  # block's last absolute pos
             valid &= (qmax - pos) < window
         accumulate(k, v, valid)
 
@@ -150,10 +186,12 @@ def _kernel(s_ref, q_ref, ck_ref, cv_ref, bk_ref, bv_ref, pos_ref,
         k = bk_ref[0, :, 0, :].astype(jnp.float32)  # [bt, D]
         v = bv_ref[0, :, 0, :].astype(jnp.float32)
         r = jax.lax.broadcasted_iota(jnp.int32, (1, bt), 1) + jb * bt
-        valid = r < bs
-        if exclude_len:
+        # sentinel write slot >= T (sliced loop, finished rows): the fresh
+        # block is invisible, matching the rows path's empty in-block window
+        valid = (r < bs) & (slot + bs <= T)
+        if exclude:
             ids = slot + r
-            valid &= ~((ids >= exc0) & (ids < exc0 + exclude_len))
+            valid &= ~((ids >= exc0) & (ids < exc1))
         if window:
             valid &= (bs - 1 - r) < window
         accumulate(k, v, valid)
@@ -161,6 +199,20 @@ def _kernel(s_ref, q_ref, ck_ref, cv_ref, bk_ref, bv_ref, pos_ref,
     @pl.when(j == nkk - 1)
     def _finish():
         _acc_finish(o_ref, cnt_ref, m_scr, l_scr, acc_scr, n_scr)
+
+
+def _row_scalars(B: int, slot, block_start, exclude_start, kv_limit,
+                 exclude_len: int) -> Array:
+    """[5, B] int32 scalar-prefetch operand: each argument [] or [B] is
+    broadcast to one per-row vector — the uniform (scalar) call is just
+    the broadcast special case of the per-row layout."""
+    def as_row(v):
+        return jnp.broadcast_to(
+            jnp.asarray(v, jnp.int32).reshape(-1), (B,))
+
+    exc0 = as_row(exclude_start)
+    return jnp.stack([as_row(slot), as_row(block_start), exc0,
+                      exc0 + exclude_len, as_row(kv_limit)])
 
 
 def cached_block_attention_pallas(
@@ -177,15 +229,24 @@ def cached_block_attention_pallas(
     cache_k/v [B, T, Kh, D]  KV cache for one layer, NOT pre-written
     block_k/v [B, bs, Kh, D] the block's fresh K/V (RoPE applied)
     kv_pos   [T] int32       absolute position per cache slot, -1 = empty
-    slot     [] int32        cache slot the block would be written at
-    block_start [] int32     absolute position of the block's first token
-    kv_limit [] int32        slots >= kv_limit hold no valid entries
-                             (default: derived from ``kv_pos`` — one [T]
-                             reduction; pass it when the caller knows it)
-    exclude_start/len        mask cache slots [start, start+len) (dual-cache
-                             stale region); ``exclude_len`` is static
+    slot     [] or [B] int32 cache slot the block would be written at;
+                             a sentinel ``>= T`` hides the fresh block
+                             (sliced-loop finished rows)
+    block_start [] or [B]    absolute position of the block's first token
+    kv_limit [] or [B] int32 slots >= kv_limit hold no valid entries — PER
+                             ROW when rank 1 (a retired row passes 0 and
+                             touches no cache tiles). Default: derived
+                             from ``kv_pos`` (one [T] reduction)
+    exclude_start/len        mask cache slots [start, start+len) per row
+                             (dual-cache stale region); ``exclude_len`` is
+                             static, ``exclude_start`` may be [B]
     window                   sliding window (0 = off), measured against the
                              block's LAST position as in ``block_step``
+
+    Every block-geometry argument may be per-row [B]: the vectors ride as
+    one [5, B] scalar-prefetch operand, so the index maps and liveness
+    guards resolve each row's own geometry before DMA — the step-sliced
+    mixed-cursor batches run this kernel natively (no XLA fallback).
 
     Semantics match ``model.block_step``'s attention exactly: the result
     equals writing the block at ``slot`` and attending the whole buffer with
@@ -224,21 +285,17 @@ def cached_block_attention_pallas(
     nkk = nk + nbk
 
     pos2d = kv_pos.reshape(1, T).astype(jnp.int32)
-    scalars = jnp.stack([
-        jnp.asarray(kv_limit, jnp.int32).reshape(()),
-        jnp.asarray(slot, jnp.int32).reshape(()),
-        jnp.asarray(exclude_start, jnp.int32).reshape(()),
-        jnp.asarray(block_start, jnp.int32).reshape(()),
-    ])
+    scalars = _row_scalars(B, slot, block_start, exclude_start, kv_limit,
+                           exclude_len)
 
-    def live_m1(s):
-        # last live cache tile (index maps clamp dead tiles here: revisiting
-        # the same block index issues no new DMA)
-        return jnp.maximum(pl.cdiv(s[0], kt) - 1, 0)
+    def live_m1(b, s):
+        # last live cache tile of ROW b (index maps clamp dead tiles here:
+        # revisiting the same block index issues no new DMA)
+        return jnp.maximum(pl.cdiv(s[KVLIM, b], kt) - 1, 0)
 
     kernel = functools.partial(
-        _kernel, nk=nk, nkk=nkk, kt=kt, bt=bt, bs=bs, T=T,
-        exclude_len=exclude_len, window=window,
+        _attn_kernel, paged=False, nk=nk, nkk=nkk, kt=kt, bt=bt, bs=bs,
+        T=T, exclude=bool(exclude_len), window=window,
         count_tiles=debug_tile_counts)
 
     # the tile-count output exists only in debug mode — production calls
@@ -262,10 +319,10 @@ def cached_block_attention_pallas(
             pl.BlockSpec((1, 1, qt, D), lambda b, h, i, j, s: (b, h, i, 0)),
             pl.BlockSpec((1, kt, 1, D),
                          lambda b, h, i, j, s: (
-                             b, jnp.minimum(j, live_m1(s)), h, 0)),
+                             b, jnp.minimum(j, live_m1(b, s)), h, 0)),
             pl.BlockSpec((1, kt, 1, D),
                          lambda b, h, i, j, s: (
-                             b, jnp.minimum(j, live_m1(s)), h, 0)),
+                             b, jnp.minimum(j, live_m1(b, s)), h, 0)),
             pl.BlockSpec((1, bt, 1, D),
                          lambda b, h, i, j, s: (
                              b, jnp.maximum(j - nk, 0), h, 0)),
@@ -274,7 +331,7 @@ def cached_block_attention_pallas(
                              b, jnp.maximum(j - nk, 0), h, 0)),
             pl.BlockSpec((1, kt),
                          lambda b, h, i, j, s: (
-                             0, jnp.minimum(j, live_m1(s)))),
+                             0, jnp.minimum(j, live_m1(b, s)))),
         ],
         out_specs=out_specs,
         scratch_shapes=scratch,
@@ -301,73 +358,6 @@ def cached_block_attention_pallas(
 # paged variant: page-table indirection via scalar prefetch
 # ---------------------------------------------------------------------------
 
-def _paged_kernel(s_ref, pt_ref, q_ref, ck_ref, cv_ref, bk_ref, bv_ref,
-                  pos_ref, *refs, n_log: int, nkk: int, ps: int, bt: int,
-                  bs: int, T: int, exclude_len: int, window: int,
-                  count_tiles: bool):
-    """Per-page body. Identical online-softmax math to ``_kernel``; the
-    differences are (a) kv tiles are POOL pages routed per row by the
-    scalar-prefetched page table (the BlockSpec index maps below), and
-    (b) a tile is live only if it is inside THIS ROW's ``kv_limit`` AND
-    mapped for the row — dead rows touch zero cache pages, and a row
-    retired mid-batch (per-row limit 0) stops touching its still-mapped
-    tail pages the moment the scheduler's ``live`` mask drops it."""
-    if count_tiles:
-        o_ref, cnt_ref, m_scr, l_scr, acc_scr, n_scr = refs
-    else:
-        o_ref, m_scr, l_scr, acc_scr = refs
-        cnt_ref = n_scr = None
-    b = pl.program_id(0)
-    j = pl.program_id(3)
-    slot = s_ref[0]
-    exc0 = s_ref[1]
-    kv_limit = s_ref[3 + b]  # per-row valid extent (retired rows: 0)
-
-    @pl.when(j == 0)
-    def _init():
-        _acc_init(m_scr, l_scr, acc_scr, n_scr)
-
-    accumulate = _make_accumulate(q_ref, m_scr, l_scr, acc_scr, n_scr)
-
-    is_cache = j < n_log
-    jm = jnp.minimum(j, n_log - 1)
-    page_mapped = pt_ref[b, jm] >= 0
-    tile_live = is_cache & ((j * ps) < kv_limit) & page_mapped
-
-    @pl.when(tile_live)
-    def _cache_tile():
-        k = ck_ref[0, :, 0, :].astype(jnp.float32)  # [ps, D]
-        v = cv_ref[0, :, 0, :].astype(jnp.float32)
-        pos = pos_ref[...]                          # [1, ps] int32
-        ids = jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1) + j * ps
-        valid = (pos >= 0) & (ids < kv_limit) & (ids < T)
-        valid &= ~((ids >= slot) & (ids < slot + bs))
-        if exclude_len:
-            valid &= ~((ids >= exc0) & (ids < exc0 + exclude_len))
-        if window:
-            qmax = s_ref[2] + bs - 1
-            valid &= (qmax - pos) < window
-        accumulate(k, v, valid)
-
-    @pl.when(~is_cache)
-    def _block_tile():
-        jb = j - n_log
-        k = bk_ref[0, :, 0, :].astype(jnp.float32)  # [bt, D]
-        v = bv_ref[0, :, 0, :].astype(jnp.float32)
-        r = jax.lax.broadcasted_iota(jnp.int32, (1, bt), 1) + jb * bt
-        valid = r < bs
-        if exclude_len:
-            ids = slot + r
-            valid &= ~((ids >= exc0) & (ids < exc0 + exclude_len))
-        if window:
-            valid &= (bs - 1 - r) < window
-        accumulate(k, v, valid)
-
-    @pl.when(j == nkk - 1)
-    def _finish():
-        _acc_finish(o_ref, cnt_ref, m_scr, l_scr, acc_scr, n_scr)
-
-
 def paged_block_attention_pallas(
         q: Array, pool_k: Array, pool_v: Array, block_k: Array,
         block_v: Array, kv_pos: Array, page_table: Array, *, slot: Array,
@@ -384,12 +374,13 @@ def paged_block_attention_pallas(
     kv_pos    [T] int32        logical-slot positions (shared across rows)
     page_table[B, n_log] int32 physical page per (row, logical page);
                                -1 = unmapped (dead row / reclaimed)
-    kv_limit  [] or [B] int32  valid cache extent — PER ROW when rank 1:
-                               a retired row passes 0 and its still-mapped
-                               tail pages stop being touched *within* the
-                               batch (the fresh-block tile stays live, so
-                               ride-along mask flushes keep working)
-    slot/block_start/exclude/window — as the dense kernel.
+    slot / block_start / exclude_start / kv_limit — each [] or PER-ROW
+    [B], exactly as the dense kernel: the [5, B] scalar-prefetch operand
+    carries every row's own block geometry, so mixed-cursor slices run
+    the paged kernel natively. A retired row passes ``kv_limit = 0`` and
+    its still-mapped tail pages stop being touched *within* the batch
+    (the fresh-block tile stays live unless the row's write slot is the
+    ``>= T`` sentinel, so ride-along mask flushes keep working).
 
     The page table rides as a second scalar-prefetch operand, so the kv
     BlockSpec index maps resolve (row, logical page) → physical pool page
@@ -411,9 +402,6 @@ def paged_block_attention_pallas(
     G = H // Kh
     if kv_limit is None:
         kv_limit = kv_limit_from_pos(kv_pos)
-    # normalize to per-row [B] (a scalar bound applies to every row)
-    kv_limit = jnp.broadcast_to(
-        jnp.asarray(kv_limit, jnp.int32).reshape(-1), (B,))
     if exclude_start is None:
         exclude_start = jnp.zeros((), jnp.int32)
         exclude_len = 0
@@ -441,18 +429,13 @@ def paged_block_attention_pallas(
     if Tp != T:
         pos2d = jnp.pad(pos2d, (0, Tp - T), constant_values=-1)
     pos2d = pos2d.reshape(1, Tp)
-    # scalar layout: [slot, exclude_start, block_start, kv_limit[0..B)]
-    scalars = jnp.concatenate([
-        jnp.stack([jnp.asarray(slot, jnp.int32).reshape(()),
-                   jnp.asarray(exclude_start, jnp.int32).reshape(()),
-                   jnp.asarray(block_start, jnp.int32).reshape(())]),
-        kv_limit,
-    ])
+    scalars = _row_scalars(B, slot, block_start, exclude_start, kv_limit,
+                           exclude_len)
     pt = page_table.astype(jnp.int32)
 
     def live_m1(b, s):
         # last live tile of ROW b (per-row kv_limit)
-        return jnp.maximum(pl.cdiv(s[3 + b], ps) - 1, 0)
+        return jnp.maximum(pl.cdiv(s[KVLIM, b], ps) - 1, 0)
 
     def page_for(b, j, s, pt):
         # route tile j of row b to its pool page; dead/unmapped tiles
@@ -462,8 +445,8 @@ def paged_block_attention_pallas(
         return jnp.maximum(pt[b, jm], 0)
 
     kernel = functools.partial(
-        _paged_kernel, n_log=n_log, nkk=nkk, ps=ps, bt=bt, bs=bs, T=T,
-        exclude_len=exclude_len, window=window,
+        _attn_kernel, paged=True, nk=n_log, nkk=nkk, kt=ps, bt=bt, bs=bs,
+        T=T, exclude=bool(exclude_len), window=window,
         count_tiles=debug_tile_counts)
 
     out_shape = [jax.ShapeDtypeStruct((B, Kh, Rp, D), q.dtype)]

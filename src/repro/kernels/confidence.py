@@ -25,34 +25,53 @@ from repro.kernels.pallas_compat import compiler_params
 Array = jax.Array
 
 
+def softmax_acc_reset(m_scr, s_scr, i_scr) -> None:
+    """Reset the running (max, sum-exp, argmax) accumulators — THE one
+    definition, shared with the fused-step epilogue kernel."""
+    m_scr[...] = jnp.full_like(m_scr, -jnp.inf)
+    s_scr[...] = jnp.zeros_like(s_scr)
+    i_scr[...] = jnp.zeros_like(i_scr)
+
+
+def softmax_acc_update(x, col, m_scr, s_scr, i_scr) -> None:
+    """One vocab-tile update of the running (max, sum-exp, argmax).
+
+    ``x`` [rt, vt] float32 logits (padding already -inf), ``col`` [rt, vt]
+    int32 global column ids. Tie-break is EXACTLY ``jnp.argmax``
+    (first occurrence), including across vocab tiles: within the tile the
+    min column id among the tile maxima wins, and the strict
+    ``tile_max > m_old`` compare rejects a later tile whose maximum only
+    EQUALS the running max, keeping the earlier tile's index. (Verified
+    against a crafted cross-tile-tie regression suite and an
+    integer-logit fuzz sweep vs ``jnp.argmax`` — do not weaken either
+    compare to ``>=``.)
+    """
+    tile_max = jnp.max(x, axis=-1)
+    # first-occurrence argmax within the tile
+    hit = x == tile_max[:, None]
+    tile_arg = jnp.min(jnp.where(hit, col, jnp.iinfo(jnp.int32).max), axis=-1)
+    m_old = m_scr[...]
+    m_new = jnp.maximum(m_old, tile_max)
+    s_scr[...] = s_scr[...] * jnp.exp(m_old - m_new) + jnp.sum(
+        jnp.exp(x - m_new[:, None]), axis=-1)
+    i_scr[...] = jnp.where(tile_max > m_old, tile_arg, i_scr[...])
+    m_scr[...] = m_new
+
+
 def _kernel(x_ref, conf_ref, tok_ref, m_scr, s_scr, i_scr, *, nv: int,
             vt: int, vocab: int):
     j = pl.program_id(1)
 
     @pl.when(j == 0)
     def _init():
-        m_scr[...] = jnp.full_like(m_scr, -jnp.inf)
-        s_scr[...] = jnp.zeros_like(s_scr)
-        i_scr[...] = jnp.zeros_like(i_scr)
+        softmax_acc_reset(m_scr, s_scr, i_scr)
 
     x = x_ref[...].astype(jnp.float32)  # [rt, vt]
     rt = x.shape[0]
     # column ids of this tile; mask tail padding beyond the true vocab
     col = jax.lax.broadcasted_iota(jnp.int32, (rt, vt), 1) + j * vt
     x = jnp.where(col < vocab, x, -jnp.inf)
-
-    tile_max = jnp.max(x, axis=-1)
-    # first-occurrence argmax within the tile
-    hit = x == tile_max[:, None]
-    tile_arg = jnp.min(jnp.where(hit, col, jnp.iinfo(jnp.int32).max), axis=-1)
-
-    m_old = m_scr[...]
-    m_new = jnp.maximum(m_old, tile_max)
-    s_scr[...] = s_scr[...] * jnp.exp(m_old - m_new) + jnp.sum(
-        jnp.exp(x - m_new[:, None]), axis=-1)
-    # strict > keeps the earliest global argmax (matches jnp.argmax)
-    i_scr[...] = jnp.where(tile_max > m_old, tile_arg, i_scr[...])
-    m_scr[...] = m_new
+    softmax_acc_update(x, col, m_scr, s_scr, i_scr)
 
     @pl.when(j == nv - 1)
     def _finish():

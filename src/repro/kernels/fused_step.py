@@ -1,0 +1,116 @@
+"""Fused denoising-step epilogue Pallas-TPU kernel.
+
+One denoising step's epilogue is unembed -> confidence -> threshold:
+
+    logits = hidden @ head            # [rows, vocab] -> HBM   (dispatch 1)
+    conf, tok = confidence(logits)    # 1 more HBM pass        (dispatch 2)
+    above = masked & (conf > tau)     # elementwise            (dispatch 3)
+
+At OSDT's vocab sizes (151k-202k) the [rows, vocab] logits round-trip
+dominates the step (PAPERS.md, confidence-aware calibration). This kernel
+streams each lm-head logit TILE straight out of the MXU into the running
+(max, argmax, sum-exp) accumulators shared with ``kernels/confidence.py``
+and applies the per-row threshold compare in the final-tile epilogue: the
+logits never touch HBM, and the 3-dispatch chain collapses into ONE
+kernel emitting ``(conf, tok, above)`` — [rows] each, a ~vocab/3 x
+reduction in epilogue HBM traffic.
+
+Grid: rows x vocab tiles, vocab minor ("arbitrary" so the accumulators
+carry). The weight tile is [vocab_tile, M] (tied embed table) or
+[M, vocab_tile] (untied head) — vocab_tile bounds the VMEM residency at
+``vocab_tile * M * 4`` bytes, so the default 512 keeps a 4k-wide model
+inside ~8 MiB. The threshold table lookup (per-row slot -> tau) and the
+cross-row argmax FALLBACK (Algorithm 1 l.21) stay in the decode loop;
+they are [rows]-sized, not [rows, vocab]. Oracle: ``ref.fused_step_ref``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.confidence import softmax_acc_reset, softmax_acc_update
+from repro.kernels.pallas_compat import compiler_params
+
+Array = jax.Array
+
+
+def _kernel(x_ref, w_ref, tau_ref, msk_ref, conf_ref, tok_ref, abv_ref,
+            m_scr, s_scr, i_scr, *, nv: int, vt: int, vocab: int,
+            tied: bool):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        softmax_acc_reset(m_scr, s_scr, i_scr)
+
+    x = x_ref[...].astype(jnp.float32)      # [rt, M]
+    w = w_ref[...].astype(jnp.float32)      # [vt, M] tied / [M, vt] untied
+    logits = jnp.dot(x, w.T if tied else w,
+                     preferred_element_type=jnp.float32)  # [rt, vt]
+    rt = logits.shape[0]
+    col = jax.lax.broadcasted_iota(jnp.int32, (rt, vt), 1) + j * vt
+    logits = jnp.where(col < vocab, logits, -jnp.inf)
+    softmax_acc_update(logits, col, m_scr, s_scr, i_scr)
+
+    @pl.when(j == nv - 1)
+    def _finish():
+        conf = 1.0 / s_scr[...]
+        conf_ref[...] = conf
+        tok_ref[...] = i_scr[...]
+        abv_ref[...] = ((msk_ref[...] != 0)
+                        & (conf > tau_ref[...])).astype(jnp.int32)
+
+
+def fused_step_pallas(x: Array, w: Array, tau: Array, masked: Array, *,
+                      tied: bool, row_tile: int = 8, vocab_tile: int = 512,
+                      interpret: bool = False
+                      ) -> Tuple[Array, Array, Array]:
+    """x [R, M] hidden; w [V, M] (tied) or [M, V]; tau [R]; masked [R]
+    -> (conf [R] f32, tok [R] i32, above [R] bool)."""
+    R, M = x.shape
+    V = w.shape[0] if tied else w.shape[1]
+    rt = min(row_tile, R)
+    Rp = -(-R // rt) * rt
+    vt = min(vocab_tile, -(-V // 128) * 128)
+    Vp = -(-V // vt) * vt
+    Mp = -(-M // 128) * 128
+    nr, nv = Rp // rt, Vp // vt
+
+    # zero padding everywhere: pad-M contributes 0 to every dot product,
+    # pad-V columns are masked to -inf by ``col < vocab``, pad rows are
+    # sliced off
+    x = jnp.pad(x, ((0, Rp - R), (0, Mp - M)))
+    w = jnp.pad(w, ((0, Vp - V), (0, Mp - M)) if tied
+                else ((0, Mp - M), (0, Vp - V)))
+    tau = jnp.pad(tau.astype(jnp.float32), (0, Rp - R))
+    masked = jnp.pad(masked.astype(jnp.int32), (0, Rp - R))
+
+    w_spec = pl.BlockSpec((vt, Mp), lambda i, j: (j, 0)) if tied \
+        else pl.BlockSpec((Mp, vt), lambda i, j: (0, j))
+    kernel = functools.partial(_kernel, nv=nv, vt=vt, vocab=V, tied=tied)
+    conf, tok, above = pl.pallas_call(
+        kernel,
+        grid=(nr, nv),
+        in_specs=[pl.BlockSpec((rt, Mp), lambda i, j: (i, 0)),
+                  w_spec,
+                  pl.BlockSpec((rt,), lambda i, j: (i,)),
+                  pl.BlockSpec((rt,), lambda i, j: (i,))],
+        out_specs=[pl.BlockSpec((rt,), lambda i, j: (i,)),
+                   pl.BlockSpec((rt,), lambda i, j: (i,)),
+                   pl.BlockSpec((rt,), lambda i, j: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((Rp,), jnp.float32),
+                   jax.ShapeDtypeStruct((Rp,), jnp.int32),
+                   jax.ShapeDtypeStruct((Rp,), jnp.int32)],
+        scratch_shapes=[pltpu.VMEM((rt,), jnp.float32),
+                        pltpu.VMEM((rt,), jnp.float32),
+                        pltpu.VMEM((rt,), jnp.int32)],
+        compiler_params=compiler_params(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, w, tau, masked)
+    return conf[:R], tok[:R], above[:R] != 0

@@ -19,6 +19,7 @@ from repro.kernels.block_attention import (cached_block_attention_pallas,
                                            paged_block_attention_pallas)
 from repro.kernels.confidence import fused_confidence_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.fused_step import fused_step_pallas
 
 Array = jax.Array
 
@@ -44,6 +45,40 @@ def fused_confidence(logits: Array) -> Tuple[Array, Array]:
     fn = _fused_confidence_tpu if _on_tpu() else _fused_confidence_ref
     conf, tok = fn(flat)
     return conf.reshape(shape), tok.reshape(shape)
+
+
+def fused_step(x: Array, w: Array, tau: Array, masked: Array, *,
+               tied: bool, interpret: bool = False
+               ) -> Tuple[Array, Array, Array]:
+    """Fused denoising-step epilogue: unembed + confidence + threshold.
+
+    x [..., M] final-norm'd hidden (``block_step(..., head=False)``);
+    w [V, M] embed table (``tied=True``) or [M, V] head; tau [...] per-row
+    threshold; masked [...] bool. Returns ``(conf, tok, above)`` — see
+    ``ref.fused_step_ref``.
+
+    TPU (or ``interpret=True``) -> the Pallas kernel streaming lm-head
+    logit tiles straight through the running (max, argmax, sum-exp)
+    accumulators and the threshold compare: the [rows, vocab] logits
+    never touch HBM and the 3-dispatch epilogue chain (head matmul,
+    confidence pass, threshold select) collapses into ONE kernel.
+    Elsewhere -> the unfused jnp chain, bit-identical to running the
+    three steps separately.
+    """
+    if _on_tpu() or interpret:
+        lead = x.shape[:-1]
+        conf, tok, above = fused_step_pallas(
+            x.reshape(-1, x.shape[-1]), w, tau.reshape(-1),
+            masked.reshape(-1), tied=tied, interpret=interpret)
+        return (conf.reshape(lead), tok.reshape(lead), above.reshape(lead))
+    # shape-preserving: the ref lowers to the same HLO as the unfused
+    # chain (bit-identity contract, see ref.fused_step_ref)
+    return _fused_step_ref(x, w, tau, masked, tied)
+
+
+@partial(jax.jit, static_argnames=("tied",))
+def _fused_step_ref(x, w, tau, masked, tied: bool):
+    return ref.fused_step_ref(x, w, tau, masked, tied=tied)
 
 
 @partial(jax.jit, static_argnames=("causal",))
@@ -93,15 +128,6 @@ def _q_pos(block_start: Array, bs: int) -> Array:
     return block_start + ar
 
 
-def _per_row(*args) -> bool:
-    """True when any block-offset argument is per-row [B] — the sliced
-    decode loop's mixed-cursor form. The Pallas kernels scalar-prefetch
-    one slot/block_start/exclude for the whole batch (only ``kv_limit``
-    is per-row, for the paged kernel), so per-row offsets route to the
-    length-aware XLA fallback on every backend (KERNELS.md)."""
-    return any(getattr(a, "ndim", 0) >= 1 for a in args if a is not None)
-
-
 def cached_block_attention(
         q: Array, cache_k: Array, cache_v: Array, block_k: Array,
         block_v: Array, *, kv_pos: Array, slot: Array, block_start: Array,
@@ -117,14 +143,19 @@ def cached_block_attention(
     never read: TPU -> the Pallas kernel (tile skipping + native GQA),
     elsewhere -> the bounded ``attend_flash`` path. ``interpret=True``
     forces the Pallas kernel in interpret mode (tests/benchmarks).
+
+    ``slot`` / ``block_start`` / ``exclude_start`` / ``kv_limit`` may each
+    be [] or PER-ROW [B] — the sliced decode loop's mixed-cursor batches
+    ride the kernel's [5, B] scalar-prefetch operand natively (a sentinel
+    ``slot >= T`` hides a finished row's fresh block), so there is no
+    per-row XLA fallback on TPU anymore.
     """
     if kv_limit is None:
         kv_limit = kv_limit_from_pos(kv_pos)
     if exclude_start is None:
         exclude_start = jnp.zeros((), jnp.int32)
         exclude_len = 0
-    if not _per_row(slot, block_start, exclude_start, kv_limit) \
-            and (_on_tpu() or interpret):
+    if _on_tpu() or interpret:
         return cached_block_attention_pallas(
             q, cache_k, cache_v, block_k, block_v, kv_pos, slot=slot,
             block_start=block_start, kv_limit=kv_limit,
@@ -146,10 +177,12 @@ def paged_block_attention(
 
     q [B,bs,H,D]; pool_k/v [P,ps,Kh,D] (one layer of the page pool);
     block_k/v [B,bs,Kh,D]; kv_pos [T]; page_table [B, n_log] (-1 =
-    unmapped); kv_limit [] or PER-ROW [B] (a retired row passes 0 and
-    its still-mapped tail pages stop being touched within the batch).
-    TPU (or ``interpret=True``) -> the paged Pallas kernel,
-    which DMAs pool pages in place and skips dead/unmapped pages;
+    unmapped). ``slot`` / ``block_start`` / ``exclude_start`` /
+    ``kv_limit`` may each be [] or PER-ROW [B] (a retired row passes
+    ``kv_limit=0`` and its still-mapped tail pages stop being touched
+    within the batch; mixed-cursor slices ride the [5, B] scalar-prefetch
+    operand natively). TPU (or ``interpret=True``) -> the paged Pallas
+    kernel, which DMAs pool pages in place and skips dead/unmapped pages;
     elsewhere -> gather the dense logical view through the page table and
     run the length-aware ``paged_cached_block_attend`` flash path, which
     is bit-identical to the dense layout's fallback for fully-mapped
@@ -160,10 +193,7 @@ def paged_block_attention(
     if exclude_start is None:
         exclude_start = jnp.zeros((), jnp.int32)
         exclude_len = 0
-    # per-row kv_limit is kernel-native (scalar-prefetched); per-row
-    # slot/block_start/exclude offsets are not — XLA fallback (KERNELS.md)
-    if not _per_row(slot, block_start, exclude_start) \
-            and (_on_tpu() or interpret):
+    if _on_tpu() or interpret:
         return paged_block_attention_pallas(
             q, pool_k, pool_v, block_k, block_v, kv_pos, page_table,
             slot=slot, block_start=block_start, kv_limit=kv_limit,

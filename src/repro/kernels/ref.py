@@ -21,6 +21,45 @@ def confidence_ref(logits: Array) -> Tuple[Array, Array]:
     return 1.0 / s, tok
 
 
+def fused_step_ref(x: Array, w: Array, tau: Array, masked: Array, *,
+                   tied: bool) -> Tuple[Array, Array, Array]:
+    """Oracle for ``fused_step.fused_step_pallas`` — the unfused epilogue
+    chain, spelled exactly like the decode loop runs it off-TPU so the
+    fused path can be compared bit-for-bit.
+
+    x      [..., M]  final-norm'd hidden states (``block_step`` with
+                     ``head=False``)
+    w      [V, M] (``tied=True``: the embed table) or [M, V] (untied head)
+    tau    [...]     f32 per-row threshold (the row's slot's table entry)
+    masked [...]     bool, rows still masked (candidates for unmasking)
+
+    Returns ``(conf [...] f32, tok [...] i32, above [...] bool)`` where
+    ``above = masked & (conf > tau)`` — Algorithm 1's threshold rule; the
+    argmax FALLBACK (line 21) needs a cross-row reduction and stays in
+    the decode loop (``decoder._unmask_choice``).
+
+    Shape-preserving and spelled with EXACTLY the unfused chain's op
+    sequence (``layers.unembed`` contraction, then
+    ``core.confidence.confidence_ref``'s exp(max - logsumexp)), so the
+    off-TPU fused decode program lowers to the same HLO as the unfused
+    one — token/conf bit-identity, not just allclose.
+    """
+    # identical contraction to layers.unembed (logits in float32)
+    if tied:
+        logits = jnp.einsum("...m,vm->...v", x.astype(jnp.float32),
+                            w.astype(jnp.float32))
+    else:
+        logits = jnp.einsum("...m,mv->...v", x.astype(jnp.float32),
+                            w.astype(jnp.float32))
+    # identical op sequence to core.confidence.confidence_ref
+    m = jnp.max(logits, axis=-1)
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    lse = m + jnp.log(jnp.sum(jnp.exp(logits - m[..., None]), axis=-1))
+    conf = jnp.exp(m - lse)
+    above = masked & (conf > tau.astype(jnp.float32))
+    return conf, tok, above
+
+
 def attention_ref(q: Array, k: Array, v: Array, *, causal: bool) -> Array:
     """q [B,H,S,D], k/v [B,H,T,D] -> [B,H,S,D] (float32 math)."""
     S, T = q.shape[2], k.shape[2]
@@ -35,47 +74,101 @@ def attention_ref(q: Array, k: Array, v: Array, *, causal: bool) -> Array:
                       ).astype(q.dtype)
 
 
+def _as_row(v, B: int) -> Array:
+    return jnp.broadcast_to(jnp.asarray(v, jnp.int32).reshape(-1), (B,))
+
+
+def _block_attend_oracle(
+        q: Array, ck: Array, cv: Array, block_k: Array, block_v: Array,
+        kv_pos: Array, *, slot: Array, block_start: Array,
+        kv_limit: Optional[Array], exclude_start: Optional[Array],
+        exclude_len: int, window: int,
+        extra_valid: Optional[Array] = None) -> Array:
+    """THE shared oracle core for both block-attention kernels (dense and
+    paged — the paged wrapper gathers its pool view first and passes the
+    page-mapped mask as ``extra_valid``).
+
+    Every block-geometry argument is per-row [B] (scalars are broadcast by
+    the wrappers — the uniform call is the broadcast special case, same as
+    the kernels' [5, B] scalar-prefetch operand). The fresh block is
+    inserted *virtually* via a per-row mask instead of
+    ``dynamic_update_slice`` so a sentinel ``slot >= T - bs + 1`` leaves
+    the cache untouched and the block invisible (the sliced loop's
+    finished rows), matching the kernels' ``slot + bs <= T`` block-tile
+    gate and ``attention.cached_block_attend``'s dropped row writes.
+
+    Mask semantics (kv-side only — "full" mode):
+      * cache slot valid iff ``pos >= 0`` and ``ids < kv_limit`` (per row)
+      * the row's own fresh block is ALWAYS visible (kv_limit-exempt) at
+        ids ``[slot, slot+bs)``; those slots' cache entries are stale and
+        served by the block operand instead
+      * the dual-cache exclusion ``[exc0, exc1)`` applies to cache AND
+        block slots alike (ids-based, as in the kernels)
+      * ``window`` measures against the row's block-END position
+    Fully-masked rows output 0 (the kernels' ``l`` clamp convention).
+    """
+    B, bs, H, D = q.shape
+    T, Kh = ck.shape[1], ck.shape[2]
+    G = H // Kh
+    slot = _as_row(slot, B)
+    block_start = _as_row(block_start, B)
+    lim = _as_row(T if kv_limit is None else kv_limit, B)
+
+    ids = jnp.arange(T, dtype=jnp.int32)
+    off = ids[None, :] - slot[:, None]                       # [B, T]
+    in_blk = (off >= 0) & (off < bs) & (slot[:, None] + bs <= T)
+    offc = jnp.clip(off, 0, bs - 1)
+    # virtual write: where in-block, serve the fresh K/V and its position
+    bkg = jnp.take_along_axis(block_k.astype(jnp.float32),
+                              offc[:, :, None, None], axis=1)  # [B,T,Kh,D]
+    bvg = jnp.take_along_axis(block_v.astype(jnp.float32),
+                              offc[:, :, None, None], axis=1)
+    ckx = jnp.where(in_blk[:, :, None, None], bkg, ck.astype(jnp.float32))
+    cvx = jnp.where(in_blk[:, :, None, None], bvg, cv.astype(jnp.float32))
+    posv = jnp.where(in_blk, block_start[:, None] + offc,
+                     kv_pos.astype(jnp.int32)[None])          # [B, T]
+
+    valid = jnp.where(in_blk, True, (posv >= 0) & (ids[None] < lim[:, None]))
+    if extra_valid is not None:
+        valid &= extra_valid | in_blk
+    if exclude_start is not None and exclude_len:
+        exc = _as_row(exclude_start, B)
+        valid &= ~((ids[None] >= exc[:, None])
+                   & (ids[None] < exc[:, None] + exclude_len))
+    if window:
+        qmax = block_start[:, None] + bs - 1
+        valid &= (qmax - posv) < window
+
+    scale = 1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32))
+    qg = q.reshape(B, bs, Kh, G, D).astype(jnp.float32)
+    s = jnp.einsum("bskgd,btkd->bkgst", qg, ckx) * scale
+    s = jnp.where(valid[:, None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", p, cvx)
+    out = jnp.where(valid.any(-1)[:, None, None, None, None], out, 0.0)
+    return out.reshape(B, bs, H, D).astype(q.dtype)
+
+
 def cached_block_attention_ref(
         q: Array, cache_k: Array, cache_v: Array, block_k: Array,
         block_v: Array, kv_pos: Array, *, slot: Array, block_start: Array,
+        kv_limit: Optional[Array] = None,
         exclude_start: Optional[Array] = None, exclude_len: int = 0,
         window: int = 0) -> Array:
     """Oracle for ``block_attention.cached_block_attention_pallas``.
 
-    Emulates ``model.block_step``'s attention literally: write the fresh
-    block's K/V (and positions) into the cache at ``slot``, build the
-    kv-side validity mask, dense-softmax in float32.
+    Emulates ``model.block_step``'s attention: (virtually) write the fresh
+    block's K/V and positions at ``slot``, build the kv-side validity
+    mask, dense-softmax in float32 — see ``_block_attend_oracle``. Every
+    offset argument may be [] or per-row [B].
 
     q [B,bs,H,D]; cache_k/v [B,T,Kh,D]; block_k/v [B,bs,Kh,D]; kv_pos [T].
     """
-    B, bs, H, D = q.shape
-    T, Kh = cache_k.shape[1], cache_k.shape[2]
-    G = H // Kh
-    q_pos = block_start + jnp.arange(bs, dtype=jnp.int32)
-    slot = jnp.asarray(slot, jnp.int32)
-    b0 = jnp.zeros((), jnp.int32)
-    ck = jax.lax.dynamic_update_slice(
-        cache_k, block_k.astype(cache_k.dtype), (b0, slot, b0, b0))
-    cv = jax.lax.dynamic_update_slice(
-        cache_v, block_v.astype(cache_v.dtype), (b0, slot, b0, b0))
-    pos = jax.lax.dynamic_update_slice(kv_pos.astype(jnp.int32),
-                                       q_pos, (slot,))
-    valid = pos >= 0
-    ids = jnp.arange(T, dtype=jnp.int32)
-    if exclude_start is not None and exclude_len:
-        valid &= ~((ids >= exclude_start) & (ids < exclude_start
-                                             + exclude_len))
-    if window:
-        valid &= (q_pos[-1] - pos) < window
-
-    scale = 1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32))
-    qg = q.reshape(B, bs, Kh, G, D).astype(jnp.float32)
-    s = jnp.einsum("bskgd,btkd->bkgst", qg,
-                   ck.astype(jnp.float32)) * scale
-    s = jnp.where(valid[None, None, None, None, :], s, -1e30)
-    p = jax.nn.softmax(s, axis=-1)
-    out = jnp.einsum("bkgst,btkd->bskgd", p, cv.astype(jnp.float32))
-    return out.reshape(B, bs, H, D).astype(q.dtype)
+    return _block_attend_oracle(
+        q, cache_k, cache_v, block_k, block_v, kv_pos, slot=slot,
+        block_start=block_start, kv_limit=kv_limit,
+        exclude_start=exclude_start, exclude_len=exclude_len,
+        window=window)
 
 
 def paged_block_attention_ref(
@@ -88,20 +181,16 @@ def paged_block_attention_ref(
 
     Gathers each row's dense logical [T, Kh, D] view through its page
     table (unmapped slots read page 0 and are masked), then defers to the
-    dense oracle with a per-row validity refinement: the result must
-    equal dense attention over the materialised view. ``kv_limit`` ([] or
-    per-row [B]) additionally masks cache slots at or beyond the row's
-    valid extent — the fresh block itself always stays attendable, exactly
-    as the kernel's block tile ignores the limit.
+    shared dense oracle core with the page-mapped mask as the extra
+    validity term: the result must equal dense attention over the
+    materialised view. All offset arguments may be [] or per-row [B],
+    exactly as the dense oracle.
 
     q [B,bs,H,D]; pool_k/v [P,ps,Kh,D]; block_k/v [B,bs,Kh,D];
     kv_pos [T]; page_table [B, n_log].
     """
-    B, bs, H, D = q.shape
     ps = pool_k.shape[1]
     T = kv_pos.shape[0]
-    Kh = pool_k.shape[2]
-    G = H // Kh
     slots = jnp.arange(T, dtype=jnp.int32)
     lp, off = slots // ps, slots % ps
     pp = page_table[:, lp]                       # [B, T]
@@ -109,34 +198,8 @@ def paged_block_attention_ref(
     pp = jnp.maximum(pp, 0)
     ck = pool_k[pp, off[None]]                   # [B, T, Kh, D]
     cv = pool_v[pp, off[None]]
-
-    q_pos = block_start + jnp.arange(bs, dtype=jnp.int32)
-    slot = jnp.asarray(slot, jnp.int32)
-    b0 = jnp.zeros((), jnp.int32)
-    ck = jax.lax.dynamic_update_slice(
-        ck, block_k.astype(ck.dtype), (b0, slot, b0, b0))
-    cv = jax.lax.dynamic_update_slice(
-        cv, block_v.astype(cv.dtype), (b0, slot, b0, b0))
-    pos = jax.lax.dynamic_update_slice(kv_pos.astype(jnp.int32),
-                                       q_pos, (slot,))
-    ids = jnp.arange(T, dtype=jnp.int32)
-    in_block = (ids >= slot) & (ids < slot + bs)
-    valid = (pos >= 0)[None] & (mapped | in_block[None])  # [B, T]
-    if kv_limit is not None:
-        lim = jnp.broadcast_to(
-            jnp.asarray(kv_limit, jnp.int32).reshape(-1), (B,))
-        valid &= (ids[None] < lim[:, None]) | in_block[None]
-    if exclude_start is not None and exclude_len:
-        valid &= ~((ids >= exclude_start) & (ids < exclude_start
-                                             + exclude_len))[None]
-    if window:
-        valid &= ((q_pos[-1] - pos) < window)[None]
-
-    scale = 1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32))
-    qg = q.reshape(B, bs, Kh, G, D).astype(jnp.float32)
-    s = jnp.einsum("bskgd,btkd->bkgst", qg,
-                   ck.astype(jnp.float32)) * scale
-    s = jnp.where(valid[:, None, None, None, :], s, -1e30)
-    p = jax.nn.softmax(s, axis=-1)
-    out = jnp.einsum("bkgst,btkd->bskgd", p, cv.astype(jnp.float32))
-    return out.reshape(B, bs, H, D).astype(q.dtype)
+    return _block_attend_oracle(
+        q, ck, cv, block_k, block_v, kv_pos, slot=slot,
+        block_start=block_start, kv_limit=kv_limit,
+        exclude_start=exclude_start, exclude_len=exclude_len,
+        window=window, extra_valid=mapped)

@@ -186,13 +186,29 @@ def _embed_inputs(params: dict, cfg: ModelConfig, tokens: Array,
     return shard_ctx.act_bsd(x)
 
 
+def _pre_head(params: dict, cfg: ModelConfig, x: Array) -> Array:
+    """The final norm — everything of the head EXCEPT the unembed matmul.
+
+    ``forward`` / ``block_step`` with ``head=False`` return this, so the
+    fused step epilogue (``ops.fused_step``) can run the unembed tile-wise
+    in-kernel on exactly the hidden states the unfused head would see.
+    """
+    return rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
 def _head(params: dict, cfg: ModelConfig, x: Array) -> Array:
-    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    x = _pre_head(params, cfg, x)
     if cfg.tie_embeddings:
         logits = unembed(params["embed"], x, transpose=True)
     else:
         logits = unembed(params["head"], x, transpose=False)
     return shard_ctx.logits_bsv(logits)
+
+
+def head_weights(params: dict, cfg: ModelConfig) -> Array:
+    """The unembed matrix the fused step epilogue streams tile-wise:
+    [V, M] (tied — the embed table) or [M, V] (separate head)."""
+    return params["embed"] if cfg.tie_embeddings else params["head"]
 
 
 # ---------------------------------------------------------------------------
@@ -203,8 +219,11 @@ def forward(params: dict, cfg: ModelConfig, tokens: Array, *,
             mode: Optional[str] = None, window: int = 0,
             positions: Optional[Array] = None,
             frontend_feats: Optional[Array] = None,
-            remat: bool = False, remat_group: int = 1) -> Tuple[Array, dict]:
+            remat: bool = False, remat_group: int = 1,
+            head: bool = True) -> Tuple[Array, dict]:
     """tokens [B, S_tok] -> logits [B, S_total, V] (float32), aux dict.
+    ``head=False`` returns the final-norm'd hidden [B, S, M] instead of
+    logits — the fused step epilogue unembeds in-kernel.
 
     ``mode`` defaults to causal for AR families and must be set to "full"
     for MDLM training/inference on attention archs. ``remat=True`` wraps
@@ -252,7 +271,7 @@ def forward(params: dict, cfg: ModelConfig, tokens: Array, *,
         aux = {"aux_loss": jnp.zeros((), jnp.float32)}
     else:
         raise ValueError(cfg.family)
-    return _head(params, cfg, x), aux
+    return (_head(params, cfg, x) if head else _pre_head(params, cfg, x)), aux
 
 
 def _hybrid_forward(params: dict, cfg: ModelConfig, x: Array,
@@ -581,8 +600,13 @@ def block_step(params: dict, cfg: ModelConfig, block_tokens: Array,
                window: int = 0, attn_impl: str = "auto",
                page_size: int = 0,
                row_live: Optional[Array] = None,
-               row_limit: Optional[Array] = None) -> Tuple[Array, dict]:
+               row_limit: Optional[Array] = None,
+               head: bool = True) -> Tuple[Array, dict]:
     """One denoising forward of the active block against the cache.
+
+    ``head=False`` returns the final-norm'd hidden [B, bs, M] instead of
+    logits — the fused step epilogue (``ops.fused_step``) unembeds
+    in-kernel.
 
     block_tokens [B, bs] (masked positions hold cfg.mask_token_id);
     block_start: [] int32 absolute position of the block's first token,
@@ -724,7 +748,7 @@ def block_step(params: dict, cfg: ModelConfig, block_tokens: Array,
     else:
         x, kv_new = jax.lax.scan(body, x, (params["layers"],
                                            kv["k"], kv["v"]))
-    logits = _head(params, cfg, x)
+    logits = _head(params, cfg, x) if head else _pre_head(params, cfg, x)
     if write:
         ck_new, cv_new = kv_new
         upd = dict(kp=ck_new, vp=cv_new) if paged else \

@@ -165,6 +165,109 @@ def hbm_bytes_per_device(cfg: ModelConfig, shape: ShapeConfig, kind: str,
     return total
 
 
+# ---------------------------------------------------------------------------
+# denoising-step time model (KERNELS.md "fused step", EXPERIMENTS.md §step)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class HWSpec:
+    """Per-chip peak numbers the µs/step model rooflines against.
+
+    Defaults are TPU v5e: 197 TFLOP/s bf16 MXU peak, 819 GB/s HBM,
+    ~2 µs per kernel dispatch (Pallas launch + XLA host overhead).
+    """
+
+    name: str = "tpu-v5e"
+    peak_flops: float = 197e12
+    hbm_bw: float = 819e9
+    dispatch_us: float = 2.0
+
+
+#: every (cache layout x scalar-prefetch geometry x epilogue) decode variant
+STEP_VARIANTS = tuple(
+    f"{layout}/{rows}/{fusion}"
+    for layout in ("dense", "paged")
+    for rows in ("scalar", "per_row")
+    for fusion in ("unfused", "fused"))
+
+
+def step_time_model(cfg: ModelConfig, *, batch: int, ctx: int,
+                    block_size: int, hw: HWSpec = HWSpec(),
+                    avg_fill: float = 0.5,
+                    page_size: int = 16) -> dict:
+    """First-order µs per denoising step for every decode variant.
+
+    One step = one ``block_step`` forward over ``batch`` rows x
+    ``block_size`` fresh queries against a ``ctx``-slot KV cache, plus the
+    epilogue (lm-head matmul, confidence pass, threshold select). Returns
+    ``{variant: {us, flops, hbm_bytes, dispatches, bound}}`` for each of
+    :data:`STEP_VARIANTS`:
+
+    * ``scalar`` vs ``per_row`` — the uniform-offset kernel streams every
+      row to the batch-max ``kv_limit``; the per-row scalar-prefetch
+      kernel stops each row at its OWN limit, so cache traffic and the
+      score matmul scale by ``avg_fill`` (mean row fill fraction; a
+      mixed-cursor sliced batch sits well below the max).
+    * ``unfused`` vs ``fused`` — the unfused epilogue writes the
+      [rows, V] f32 logits to HBM, re-reads them for the confidence
+      pass, and re-touches conf/tok for the threshold select (3 passes,
+      3 dispatches); ``ops.fused_step`` streams logit tiles through the
+      accumulators in ONE kernel (logits never reach HBM).
+    * ``paged`` adds the page-table read; its unmapped-page skip is the
+      same tile-liveness math as ``per_row`` (one kv tile == one page).
+
+    ``bound`` names the roofline term the variant sits on (``compute`` /
+    ``memory``), or ``dispatch`` when launch overhead exceeds both.
+    """
+    assert cfg.family in ("dense", "moe", "vlm", "audio"), cfg.family
+    by = _bytes(cfg)
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    H, K = cfg.num_heads, cfg.num_kv_heads
+    V, F, L = cfg.vocab_size, cfg.d_ff, cfg.num_layers
+    tokens = batch * block_size
+    kd = 2 * K * hd  # K+V width per slot
+
+    out = {}
+    for variant in STEP_VARIANTS:
+        layout, rows, fusion = variant.split("/")
+        ctx_eff = ctx * (avg_fill if rows == "per_row" else 1.0)
+
+        # --- backbone (block_step forward, minus the head) ---
+        fl = L * 2.0 * tokens * d * (2 * H * hd + kd)        # qkv + o proj
+        fl += L * 2.0 * 2.0 * tokens * ctx_eff * H * hd      # scores + AV
+        fl += L * 2.0 * 3.0 * tokens * d * F                 # gated mlp
+        hbm = (cfg.param_count() - V * d) * by               # weight stream
+        hbm += 12.0 * L * tokens * d * by                    # residual io
+        hbm += L * batch * ctx_eff * kd * by                 # kv cache read
+        hbm += L * tokens * kd * by                          # fresh block rw
+        if layout == "paged":
+            hbm += batch * (-(-ctx // page_size)) * 4        # page table
+
+        # --- epilogue: head matmul + confidence + threshold ---
+        fl += 2.0 * tokens * d * V                           # lm head
+        fl += 4.0 * tokens * V                               # max/exp/sum/cmp
+        hbm += V * d * by + tokens * d * 4                   # head w + x
+        if fusion == "unfused":
+            hbm += 2.0 * tokens * V * 4                      # logits w+r
+            hbm += 3.0 * tokens * 12                         # conf/tok/above
+            epi_dispatch = 3
+        else:
+            hbm += tokens * 12                               # conf/tok/above
+            epi_dispatch = 1
+
+        # one attention-kernel launch per layer + the epilogue chain
+        dispatches = L + epi_dispatch
+        compute_us = fl / hw.peak_flops * 1e6
+        memory_us = hbm / hw.hbm_bw * 1e6
+        launch_us = dispatches * hw.dispatch_us
+        us = max(compute_us, memory_us) + launch_us
+        bound = ("dispatch" if launch_us > max(compute_us, memory_us)
+                 else "compute" if compute_us >= memory_us else "memory")
+        out[variant] = {"us": us, "flops": fl, "hbm_bytes": hbm,
+                        "dispatches": dispatches, "bound": bound}
+    return out
+
+
 def footprint_bytes_per_device(args_bytes: float, cfg: ModelConfig,
                                shape: ShapeConfig, kind: str,
                                mesh_info: MeshInfo,

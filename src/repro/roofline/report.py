@@ -1,6 +1,12 @@
-"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from the dry-run JSONs.
+"""Render EXPERIMENTS.md §Dry-run / §Roofline / §Step tables.
 
   PYTHONPATH=src python -m repro.roofline.report [--mesh 16x16]
+  PYTHONPATH=src python -m repro.roofline.report --section step
+
+§Dry-run and §Roofline read the dry-run JSONs; §Step reads
+``experiments/bench_results.csv`` (the ``roofline/step_us_model/*`` rows
+written by ``benchmarks/fused_step.py`` next to the measured epilogue
+timings) and renders the µs-per-denoising-step model per decode variant.
 """
 from __future__ import annotations
 
@@ -10,6 +16,7 @@ from pathlib import Path
 
 ROOT = Path(__file__).resolve().parents[3]
 DRYRUN = ROOT / "experiments" / "dryrun"
+BENCH_CSV = ROOT / "experiments" / "bench_results.csv"
 
 SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
 ARCHS = [
@@ -103,18 +110,77 @@ def _note(rec: dict) -> str:
     return "good: MXU-bound; overlap collectives to hold it"
 
 
+def _bench_rows() -> dict:
+    """bench_results.csv -> {name: (value, derived)}."""
+    out = {}
+    if not BENCH_CSV.exists():
+        return out
+    for line in BENCH_CSV.read_text().splitlines()[1:]:
+        if not line.strip():
+            continue
+        name, value, derived = (line.split(",", 2) + ["", ""])[:3]
+        out[name] = (value, derived)
+    return out
+
+
+def step_table() -> str:
+    """µs-per-denoising-step model per decode variant, next to the
+    measured epilogue chain (``benchmarks/fused_step.py``)."""
+    rows = _bench_rows()
+    lines = [
+        "### µs / denoising step (model: llada-8b, B=8, ctx=4k, bs=32, "
+        "tpu-v5e)",
+        "",
+        "| layout | rows | epilogue | model µs/step | bound | dispatches |",
+        "|---|---|---|---|---|---|",
+    ]
+    prefix = "roofline/step_us_model/"
+    found = False
+    for name in sorted(rows):
+        if not name.startswith(prefix):
+            continue
+        found = True
+        layout, geom, fusion = name[len(prefix):].split("/")
+        us, derived = rows[name]
+        bound, _, disp = derived.partition("_bound_d")
+        lines.append(f"| {layout} | {geom} | {fusion} | {us} | {bound} | "
+                     f"{disp} |")
+    if not found:
+        return ("(no roofline/step_us_model rows — run "
+                "`python -m benchmarks.run fused_step` first)")
+    lines += ["", "measured epilogue (CPU container; real kernel timing "
+              "needs a TPU):", ""]
+    for key in ("fused_step/unfused_epilogue", "fused_step/fused_epilogue",
+                "fused_step/dispatches_unfused",
+                "fused_step/dispatches_fused",
+                "fused_step/logit_hbm_passes_unfused",
+                "fused_step/logit_hbm_passes_fused"):
+        for name in sorted(rows):
+            if name == key or name.startswith(key + "/"):
+                us, derived = rows[name]
+                lines.append(f"* `{name}` = {us} ({derived})")
+    return "\n".join(lines)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", default="16x16")
-    ap.add_argument("--section", choices=["dryrun", "roofline", "both"],
+    ap.add_argument("--section",
+                    choices=["dryrun", "roofline", "step", "both", "all"],
                     default="both")
     args = ap.parse_args()
+    if args.section == "step":
+        print(step_table())
+        return
     recs = load(args.mesh)
-    if args.section in ("dryrun", "both"):
+    if args.section in ("dryrun", "both", "all"):
         print(dryrun_table(recs, args.mesh))
         print()
-    if args.section in ("roofline", "both"):
+    if args.section in ("roofline", "both", "all"):
         print(roofline_table(recs, args.mesh))
+    if args.section == "all":
+        print()
+        print(step_table())
 
 
 if __name__ == "__main__":

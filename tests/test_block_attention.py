@@ -124,6 +124,101 @@ def test_tile_counts_drop_with_fill(rng):
     assert seen[8] < seen[64] < seen[128] < seen[256]
 
 
+# ---------------------------------------------------------------------------
+# per-row scalar-prefetch geometry (the sliced loop's mixed-cursor batches)
+# ---------------------------------------------------------------------------
+
+def test_kernel_per_row_mixed_cursors(rng):
+    """Every block-geometry argument per-row [B]: rows at different
+    cursors, one retired (sentinel slot >= T, kv_limit=0), one with its
+    own dual-cache exclusion — the kernel must resolve each row's own
+    geometry, matching the oracle row for row."""
+    B, bs, H, Kh, D, T = 4, 8, 4, 2, 32, 128
+    q, ck, cv, bk, bv, _ = _case(rng, B, bs, H, Kh, D, T, T)
+    pos = jnp.arange(T, dtype=jnp.int32)  # fully valid buffer; limits rule
+    slot = jnp.asarray([16, 64, 96, T], jnp.int32)       # row 3 retired
+    bstart = jnp.asarray([16, 64, 96, 0], jnp.int32)
+    lim = jnp.asarray([16, 64, 96, 0], jnp.int32)
+    exc = jnp.asarray([0, 8, 0, 0], jnp.int32)           # row 1 excludes
+    out = cached_block_attention_pallas(
+        q, ck, cv, bk, bv, pos, slot=slot, block_start=bstart,
+        kv_limit=lim, exclude_start=exc, exclude_len=8, kv_tile=32,
+        interpret=True)
+    want = cached_block_attention_ref(
+        q, ck, cv, bk, bv, pos, slot=slot, block_start=bstart,
+        kv_limit=lim, exclude_start=exc, exclude_len=8)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+    # the retired row (kv_limit 0, sentinel slot) sees NOTHING -> zeros,
+    # exactly the rows-fallback's dropped-write convention
+    assert np.abs(np.asarray(out)[3]).max() == 0.0
+
+    # each per-row argument alone (others uniform) also matches
+    uni = jnp.asarray(64, jnp.int32)
+    for kw in (dict(slot=slot.clip(0, T - bs), block_start=uni, kv_limit=uni),
+               dict(slot=uni, block_start=bstart, kv_limit=uni),
+               dict(slot=uni, block_start=uni, kv_limit=lim)):
+        got = cached_block_attention_pallas(
+            q, ck, cv, bk, bv, pos, kv_tile=32, interpret=True, **kw)
+        ref_ = cached_block_attention_ref(q, ck, cv, bk, bv, pos, **kw)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref_),
+                                   rtol=2e-5, atol=2e-5, err_msg=str(kw))
+
+
+def test_kernel_per_row_tile_counts(rng):
+    """Dead tiles are skipped PER ROW: each row's tile count tracks its
+    own kv_limit (plus the fresh-block tile), not the batch max — the
+    per-row kernel's whole point versus padding every row to the max."""
+    B, bs, H, Kh, D, T = 4, 8, 2, 2, 16, 256
+    kt = 32
+    q, ck, cv, bk, bv, _ = _case(rng, B, bs, H, Kh, D, T, T)
+    pos = jnp.arange(T, dtype=jnp.int32)
+    lim = jnp.asarray([8, 64, 256, 0], jnp.int32)
+    slot = jnp.asarray([8, 64, T - bs, T], jnp.int32)
+    bstart = jnp.asarray([8, 64, 248, 0], jnp.int32)
+    _, counts = cached_block_attention_pallas(
+        q, ck, cv, bk, bv, pos, slot=slot, block_start=bstart,
+        kv_limit=lim, kv_tile=kt, debug_tile_counts=True, interpret=True)
+    counts = np.asarray(counts)
+    assert (counts[0] == 1 + 1).all()           # 1 live cache tile + block
+    assert (counts[1] == 64 // kt + 1).all()
+    assert (counts[2] == 256 // kt + 1).all()
+    # retired row: every cache tile dead; only the (fully masked,
+    # single-tile) fresh-block pass remains
+    assert (counts[3] == 1).all()
+
+
+def test_ops_dispatches_pallas_for_per_row(rng, monkeypatch):
+    """``attn_impl="kernel"`` + per-row offsets no longer falls back to
+    XLA: with the TPU gate forced on, ``ops.cached_block_attention`` must
+    route a mixed-cursor call to the Pallas kernel (recorded here, run in
+    interpret mode) and agree with the oracle."""
+    B, bs, H, Kh, D, T = 2, 8, 4, 2, 32, 128
+    q, ck, cv, bk, bv, _ = _case(rng, B, bs, H, Kh, D, T, T)
+    pos = jnp.arange(T, dtype=jnp.int32)
+    slot = jnp.asarray([16, 64], jnp.int32)
+    lim = jnp.asarray([16, 64], jnp.int32)
+
+    calls = []
+    real = ops.cached_block_attention_pallas
+
+    def record(*args, **kw):
+        calls.append({k: kw.get(k) for k in ("slot", "kv_limit")})
+        kw["interpret"] = True
+        return real(*args, **kw)
+
+    monkeypatch.setattr(ops, "cached_block_attention_pallas", record)
+    monkeypatch.setattr(ops, "_on_tpu", lambda: True)
+    out = ops.cached_block_attention(
+        q, ck, cv, bk, bv, kv_pos=pos, slot=slot, block_start=slot,
+        kv_limit=lim)
+    assert len(calls) == 1 and calls[0]["slot"].ndim == 1
+    want = cached_block_attention_ref(
+        q, ck, cv, bk, bv, pos, slot=slot, block_start=slot, kv_limit=lim)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
 def test_kv_limit_from_pos(rng):
     pos = jnp.asarray([0, 1, 2, -1, -1, 7, -1, -1], jnp.int32)
     assert int(ops.kv_limit_from_pos(pos)) == 6  # highest valid slot is 5

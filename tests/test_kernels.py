@@ -30,6 +30,43 @@ def test_confidence_kernel_tie_break(rng):
     assert (np.asarray(tok) == 100).all()
 
 
+def test_confidence_kernel_tie_break_crafted_cross_tile():
+    """First-occurrence argmax under adversarial tie layouts: multi-way
+    ties spanning 3 tiles, ties whose first element sits exactly on a
+    tile boundary, ties entirely inside a LATER tile, and an all-equal
+    row — the accumulator's strict (>, <) compare pair must match
+    jnp.argmax on every one (weakening either to >= reorders them)."""
+    V, vt = 512, 128
+    rows = {
+        0: [5, 300, 400],       # 3-way across tiles
+        1: [vt, 2 * vt],        # first occurrence ON a tile boundary
+        2: [300, 301, 510],     # tie starts inside a later tile
+        3: list(range(V)),      # fully degenerate: every logit equal
+        4: [vt - 1, vt],        # straddles a boundary by one
+    }
+    x = np.zeros((len(rows), V), np.float32)
+    for r, cols in rows.items():
+        x[r, cols] = 3.0
+    x[3, :] = 3.0
+    for dtype in (jnp.float32, jnp.bfloat16):
+        xt = jnp.asarray(x, dtype)
+        _, tok = fused_confidence_pallas(xt, vocab_tile=vt, interpret=True)
+        want = jnp.argmax(xt, axis=-1).astype(jnp.int32)
+        np.testing.assert_array_equal(np.asarray(tok), np.asarray(want))
+        assert np.asarray(tok).tolist() == [5, vt, 300, 0, vt - 1]
+
+
+def test_confidence_kernel_tie_break_fuzz(rng):
+    """Integer-valued logits make exact ties common; the kernel must agree
+    with jnp.argmax on every row across many random draws."""
+    for i in range(20):
+        x = jax.random.randint(jax.random.fold_in(rng, i), (16, 384),
+                               0, 4).astype(jnp.float32)
+        _, tok = fused_confidence_pallas(x, vocab_tile=128, interpret=True)
+        np.testing.assert_array_equal(
+            np.asarray(tok), np.asarray(jnp.argmax(x, -1), np.int32))
+
+
 def test_confidence_kernel_extreme_logits():
     x = jnp.asarray([[1e4, -1e4, 0.0, 1e4 - 1.0] + [0.0] * 124])
     conf, tok = fused_confidence_pallas(x, vocab_tile=64, interpret=True)

@@ -252,6 +252,50 @@ def test_paged_kernel_per_row_kv_limit_skips_retired_rows():
 
 
 @pytest.mark.paged
+def test_paged_kernel_per_row_mixed_cursors():
+    """The sliced loop's mixed-cursor batch, paged: per-row slot /
+    block_start / kv_limit / exclusion PLUS a reclaimed page inside one
+    row's live extent and a retired sentinel row — all against the
+    oracle in one call."""
+    rng = np.random.default_rng(23)
+    B, bs, H, Kh, D = 4, 8, 8, 2, 32
+    T, n_log = 48, 6
+    num_pages = B * n_log
+    q = jnp.asarray(rng.standard_normal((B, bs, H, D)), jnp.float32)
+    pool_k = jnp.asarray(rng.standard_normal((num_pages, PS, Kh, D)),
+                         jnp.float32)
+    pool_v = jnp.asarray(rng.standard_normal((num_pages, PS, Kh, D)),
+                         jnp.float32)
+    bk = jnp.asarray(rng.standard_normal((B, bs, Kh, D)), jnp.float32)
+    bv = jnp.asarray(rng.standard_normal((B, bs, Kh, D)), jnp.float32)
+    kv_pos = jnp.arange(T, dtype=jnp.int32)  # per-row limits do the work
+    pt = np.arange(B * n_log).reshape(B, n_log).astype(np.int32)
+    pt[1, 1] = -1                            # hole inside row 1's extent
+    pt = jnp.asarray(pt)
+    slot = jnp.asarray([8, 24, 40, T], jnp.int32)   # row 3 retired
+    bstart = jnp.asarray([8, 24, 40, 0], jnp.int32)
+    lim = jnp.asarray([8, 24, 40, 0], jnp.int32)
+    exc = jnp.asarray([0, 0, 16, 0], jnp.int32)     # row 2 excludes
+    got, cnt = paged_block_attention_pallas(
+        q, pool_k, pool_v, bk, bv, kv_pos, pt, slot=slot,
+        block_start=bstart, kv_limit=lim, exclude_start=exc,
+        exclude_len=PS, debug_tile_counts=True, interpret=True)
+    want = ref.paged_block_attention_ref(
+        q, pool_k, pool_v, bk, bv, kv_pos, pt, slot=slot,
+        block_start=bstart, kv_limit=lim, exclude_start=exc,
+        exclude_len=PS)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+    assert np.abs(np.asarray(got)[3]).max() == 0.0  # retired row -> zeros
+    # per-row tile counts: own live MAPPED pages + the block tile
+    cnt = np.asarray(cnt)
+    assert (cnt[0] == 8 // PS + 1).all()
+    assert (cnt[1] == 24 // PS - 1 + 1).all()       # hole page skipped
+    assert (cnt[2] == 40 // PS + 1).all()
+    assert (cnt[3] == 1).all()                      # masked block tile only
+
+
+@pytest.mark.paged
 def test_block_step_row_live_only_affects_retired_rows(small_model):
     """``block_step(row_live=...)``: an all-live mask is a bitwise no-op
     (live rows' limits equal the cache's valid extent, which ``pos``

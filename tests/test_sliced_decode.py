@@ -160,6 +160,58 @@ def test_slice_identity(small_model, prompts, mode, impl, layout, spec,
                                           np.asarray(got.blocks_accepted))
 
 
+def test_sliced_kernel_impl_dispatches_pallas(small_model, prompts,
+                                              monkeypatch):
+    """``attn_impl="kernel"`` in the SLICED loop rides the per-row Pallas
+    kernel — no more per-row-offsets XLA fallback. With the TPU gate
+    forced on (kernel run in interpret mode), every block-attention call
+    inside the slice program must reach ``cached_block_attention_pallas``
+    with PER-ROW [B] geometry, and the decode must match the auto path."""
+    from repro.kernels import ops
+
+    cfg, params = small_model
+    dcfg = dataclasses.replace(DCFG, max_new_tokens=8)  # fresh program key
+    nb = dcfg.num_blocks
+    table = np.full((2, nb, dcfg.steps_cap), 0.9, np.float32)
+
+    def run(impl, patched):
+        carry = init_decode_carry(cfg, dcfg, batch=2,
+                                  prompt_len=PROMPT_LEN, mask_id=tok.MASK_ID,
+                                  cache_mode="prefix")
+        carry = admit_carry_rows(carry, [0, 1], prompts, table, tok.MASK_ID)
+        adm = make_admit_fn(cfg, dcfg, cache_mode="prefix")
+        carry = adm(params, carry, jnp.asarray([True, True]))
+        with monkeypatch.context() as mp:
+            if patched:
+                real = ops.cached_block_attention_pallas
+
+                def record(*args, **kw):
+                    calls.append(getattr(kw.get("slot"), "ndim", 0))
+                    kw["interpret"] = True
+                    return real(*args, **kw)
+
+                mp.setattr(ops, "cached_block_attention_pallas", record)
+                mp.setattr(ops, "_on_tpu", lambda: True)
+            sf = make_slice_fn(cfg, dcfg, slice_len=1, cache_mode="prefix",
+                               attn_impl=impl)
+            mask = jnp.asarray(tok.MASK_ID, jnp.int32)
+            while int(np.asarray(carry.cursor).min()) < nb:
+                carry = sf(params, carry, mask, None, None)
+        return carry
+
+    calls = []
+    base = run("auto", patched=False)
+    got = run("kernel", patched=True)
+    assert calls, "kernel impl fell back: Pallas was never dispatched"
+    assert all(nd == 1 for nd in calls), \
+        "kernel saw scalar geometry — the sliced loop is per-row"
+    np.testing.assert_array_equal(np.asarray(base.resp),
+                                  np.asarray(got.resp))
+    np.testing.assert_array_equal(np.asarray(base.seq_steps),
+                                  np.asarray(got.seq_steps))
+    assert int(base.nfe) == int(got.nfe)
+
+
 def test_slice_identity_with_eos(small_model, prompts):
     """EOS retirement fires at the same step in the sliced loop."""
     cfg, params = small_model
