@@ -15,7 +15,8 @@ from typing import List
 from benchmarks import (async_admission, block_attn, cache_modes,
                         fig1_confidence, fig2_cosine, fig3_5_sweep,
                         fused_step, kernels_bench, paged_kv,
-                        scheduler_bench, spec_decode, table1_compare)
+                        prefix_cache, scheduler_bench, spec_decode,
+                        table1_compare)
 
 BENCHES = {
     "fig1": fig1_confidence.run,
@@ -30,6 +31,7 @@ BENCHES = {
     "paged_kv": paged_kv.run,
     "spec_decode": spec_decode.run,
     "async_admission": async_admission.run,
+    "prefix_cache": prefix_cache.run,
 }
 
 

@@ -1,6 +1,6 @@
 """Continuous-batching serving with per-slot OSDT tables (SERVING.md).
 
-    PYTHONPATH=src:. python examples/serve_osdt.py [--paged] [--spec] [--sliced]
+    PYTHONPATH=src:. python examples/serve_osdt.py [--paged] [--spec] [--sliced] [--prefix]
 
 Simulates a mixed request stream across three tasks. The engine keeps ONE
 calibration store and ONE compiled decode program; every task calibrates
@@ -17,7 +17,12 @@ their denoising steps. Prints per-task accuracy + throughput accounting,
 the per-request queue/decode split, page occupancy, and draft acceptance. With ``--sliced`` the engine decodes through the
 step-sliced loop (one block per compiled slice): requests admit into
 freed slots mid-generation and the per-request ``ttfb_s`` / queue waits
-are measured at slice boundaries (SERVING.md "Async admission").
+are measured at slice boundaries (SERVING.md "Async admission"). With
+``--prefix`` (implies --paged --sliced) each task's requests carry a
+per-tenant system prompt in ``Request.prefix`` and the engine runs the
+radix-tree prefix cache: repeat tenants reuse the tree's prefix pages
+and prefill only their novel remainder (SERVING.md "Radix prefix
+cache").
 """
 import sys
 
@@ -30,9 +35,10 @@ from repro.serving.engine import DiffusionEngine, Request
 
 
 def main() -> None:
-    paged = "--paged" in sys.argv
+    prefix = "--prefix" in sys.argv
+    paged = "--paged" in sys.argv or prefix
     spec = "--spec" in sys.argv
-    sliced = "--sliced" in sys.argv
+    sliced = "--sliced" in sys.argv or prefix
     cfg, params = common.get_model()
     dcfg = DecodeConfig(max_new_tokens=32, block_size=8, policy="osdt",
                         mode="block", metric="q1", cap=0.8, slack=0.15,
@@ -41,8 +47,10 @@ def main() -> None:
                         page_size=8)
     ecfg = EngineConfig(batch_size=4, prompt_len=64, cache_mode="prefix",
                         eos_early_exit=True,
-                        shared_prefix="answer briefly. " if paged else "",
-                        spec_decode=spec, slice_len=1 if sliced else 0)
+                        shared_prefix="answer briefly. "
+                        if paged and not prefix else "",
+                        spec_decode=spec, slice_len=1 if sliced else 0,
+                        prefix_cache=prefix)
     engine = DiffusionEngine(params, cfg, dcfg, ecfg=ecfg)
 
     rng = np.random.default_rng(3)
@@ -50,7 +58,12 @@ def main() -> None:
     uid = 0
     for task in TASKS:
         for s in TASKS[task].make(rng, 8):
-            stream.append(Request(uid, task, s.prompt))
+            # per-tenant system prompt: under --prefix each task's
+            # requests share one radix chain and repeat admissions
+            # reuse its pages
+            stream.append(Request(uid, task, s.prompt,
+                                  prefix=f"[{task}] answer briefly. "
+                                  if prefix else ""))
             gold[uid] = (task, s)
             uid += 1
     rng.shuffle(stream)
@@ -84,6 +97,12 @@ def main() -> None:
               f"{st.blocks_accepted} accepted "
               f"({st.draft_accept_rate:.0%}) over {st.draft_batches} "
               f"batches, ~{st.nfe_saved} forwards saved")
+    if st.prefix_hits or st.prefix_misses:
+        print(f"prefix cache: {st.prefix_hits} hits {st.prefix_misses} "
+              f"misses ({st.prefix_hit_rate:.0%}), "
+              f"{st.prefill_tokens_saved} prompt tokens saved, "
+              f"{st.prefix_inserts} inserts {st.prefix_evictions} "
+              f"evictions, prefill NFE={st.prefill_nfe}")
     if st.slices:
         ttfb = [r.ttfb_s for r in responses]
         print(f"sliced: {st.slices} slices, {st.mid_admits} mid-gen "

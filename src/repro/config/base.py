@@ -285,6 +285,23 @@ class EngineConfig:
     # slots MID-GENERATION with their own block cursor, threshold table,
     # and (spec_decode) re-planned draft mask.
     slice_len: int = 0
+    # radix-tree prefix cache (SERVING.md "Radix prefix cache"): page-
+    # aligned multi-tenant prefix reuse. Admission walks a radix tree of
+    # immutable prefix pages for the longest match on the row's
+    # ``shared_prefix + Request.prefix`` stream, share()s the matched
+    # pages and prefills only the novel remainder; retirement promotes
+    # the row's now-immutable prompt pages back into the tree. Requires
+    # the paged layout and the step-sliced loop (slice_len >= 1).
+    # ``shared_prefix`` stops being a statically prefilled run and
+    # becomes the pre-seeded first tree node instead.
+    prefix_cache: bool = False
+    # page budget the tree may pin (LRU-trimmed past it); 0 -> bounded
+    # by the pool only (eviction happens on demand under page pressure)
+    prefix_cache_pages: int = 0
+    # eviction watermark: fraction of the pool kept free *beyond* the
+    # pages an admission immediately needs — eviction at admission frees
+    # down to (need + watermark * capacity) before load-shedding kicks in
+    prefix_cache_watermark: float = 0.0
 
     def resolved_cache_mode(self) -> str:
         assert self.cache_mode in ("prefix", "dual", "none"), self.cache_mode

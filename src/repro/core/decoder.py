@@ -602,53 +602,101 @@ def init_decode_carry(cfg: ModelConfig, dcfg: DecodeConfig, *,
         cache=cache)
 
 
+@lru_cache(maxsize=None)
+def _admit_rows_prog(bucket: int, has_pages: bool, mark: bool):
+    """The compiled admission-scatter program for a power-of-two row
+    bucket. ``rows`` is padded to ``bucket`` with the out-of-range
+    sentinel ``B`` — every ``.at[rows]`` scatter runs ``mode="drop"``,
+    so pad entries touch nothing. One program per (bucket, has_pages,
+    mark) triple -> an O(log B) family instead of one eager dispatch
+    chain per admission count."""
+
+    def prog(carry: DecodeCarry, rows, prompts, tables, lives, mask_id,
+             page_rows):
+        kw = dict(
+            resp=carry.resp.at[rows].set(mask_id, mode="drop"),
+            prompt=carry.prompt.at[rows].set(prompts, mode="drop"),
+            table=carry.table.at[rows].set(tables, mode="drop"),
+            live=carry.live.at[rows].set(lives, mode="drop"),
+            cursor=carry.cursor.at[rows].set(0, mode="drop"),
+            conf=carry.conf.at[rows].set(0.0, mode="drop"),
+            conf_valid=carry.conf_valid.at[rows].set(False, mode="drop"),
+            seq_steps=carry.seq_steps.at[rows].set(0, mode="drop"),
+            blocks_drafted=carry.blocks_drafted.at[rows].set(
+                0, mode="drop"),
+            blocks_accepted=carry.blocks_accepted.at[rows].set(
+                0, mode="drop"))
+        if has_pages or mark:
+            kv = dict(carry.cache["attn"])
+            if has_pages:
+                kv["pt"] = kv["pt"].at[rows].set(page_rows, mode="drop")
+            if mark:
+                # radix-admission engines mark the prompt range valid
+                # HERE so an all-full-hit boundary can skip the prefill
+                # forward entirely; a non-skipped admit forward re-marks
+                # the same values (idempotent)
+                P = carry.prompt.shape[1]
+                kv["pos"] = kv["pos"].at[:P].set(
+                    jnp.arange(P, dtype=jnp.int32))
+                kv["length"] = jnp.maximum(kv["length"],
+                                           jnp.asarray(P, jnp.int32))
+            kw["cache"] = dict(carry.cache, attn=kv)
+        return carry._replace(**kw)
+
+    return jax.jit(prog)
+
+
 def admit_carry_rows(carry: DecodeCarry, rows: Sequence[int],
                      prompts: np.ndarray, tables: np.ndarray,
                      mask_id: int, *,
                      page_rows: Optional[np.ndarray] = None,
-                     live: Optional[Sequence[bool]] = None) -> DecodeCarry:
+                     live: Optional[Sequence[bool]] = None,
+                     mark_prompt_pos: bool = False) -> DecodeCarry:
     """Host-side slot (re)initialisation at admission: place each row's
     prompt / table (/ page-table row), reset its response to masks, its
     cursor to block 0, and zero its accumulators. ``live`` marks which
     of the rows carry a real request (dead pad slots admit ``False``).
     The KV prefill itself is the compiled ``make_admit_fn`` program.
 
-    All updates are fixed-shape masked selects (never index-dependent
-    scatters), so the handful of eager ops here compile once per engine
-    geometry — not once per admission count."""
+    The scatters are jitted per power-of-two admission-count bucket
+    (pad rows carry an out-of-range index and drop): the program family
+    is O(log B), and a 1-row mid-generation admission stops re-tracing
+    the whole update chain eagerly (~700 ms per slice boundary on CPU
+    with the old per-count masked selects).
+
+    ``mark_prompt_pos`` (radix prefix cache): also mark the shared
+    ``pos`` row's prompt range valid and bump ``length`` to the prompt
+    length, so a boundary whose every admitted row is a FULL radix hit
+    needs no prefill forward at all."""
     if not len(rows):
         return carry
     B = carry.live.shape[0]
     rows = list(rows)
-    sel = np.zeros((B,), bool)
-    sel[rows] = True
-    pr = np.zeros(carry.prompt.shape, np.int32)
-    pr[rows] = np.asarray(prompts, np.int32)
-    tb = np.zeros(carry.table.shape, np.float32)
-    tb[rows] = np.asarray(tables, np.float32)
-    lv = np.zeros((B,), bool)
-    lv[rows] = [True] * len(rows) if live is None else list(live)
-    m = jnp.asarray(sel)
-    m1 = m[:, None]
-    kw = dict(
-        resp=jnp.where(m1, jnp.asarray(mask_id, jnp.int32), carry.resp),
-        prompt=jnp.where(m1, jnp.asarray(pr), carry.prompt),
-        table=jnp.where(m1[..., None], jnp.asarray(tb), carry.table),
-        live=jnp.where(m, jnp.asarray(lv), carry.live),
-        cursor=jnp.where(m, 0, carry.cursor),
-        conf=jnp.where(m1[..., None, None], 0.0, carry.conf),
-        conf_valid=jnp.where(m1[..., None, None], False,
-                             carry.conf_valid),
-        seq_steps=jnp.where(m1, 0, carry.seq_steps),
-        blocks_drafted=jnp.where(m, 0, carry.blocks_drafted),
-        blocks_accepted=jnp.where(m, 0, carry.blocks_accepted))
-    if page_rows is not None:
-        pg = np.full(carry.cache["attn"]["pt"].shape, -1, np.int32)
-        pg[rows] = np.asarray(page_rows, np.int32)
-        kv = dict(carry.cache["attn"])
-        kv["pt"] = jnp.where(m1, jnp.asarray(pg), kv["pt"])
-        kw["cache"] = dict(carry.cache, attn=kv)
-    return carry._replace(**kw)
+    n = len(rows)
+    bucket = 1 << (n - 1).bit_length()
+    P = carry.prompt.shape[1]
+    nb, sc = carry.table.shape[1], carry.table.shape[2]
+    r = np.full((bucket,), B, np.int32)  # B == out of range -> drop
+    r[:n] = rows
+    pr = np.zeros((bucket, P), np.int32)
+    pr[:n] = np.asarray(prompts, np.int32)
+    tb = np.zeros((bucket, nb, sc), np.float32)
+    tb[:n] = np.asarray(tables, np.float32)
+    lv = np.zeros((bucket,), bool)
+    lv[:n] = True if live is None else list(live)
+    has_pages = page_rows is not None
+    pg = None
+    if has_pages:
+        n_log = carry.cache["attn"]["pt"].shape[1]
+        pg = np.full((bucket, n_log), -1, np.int32)
+        pg[:n] = np.asarray(page_rows, np.int32)
+    if mark_prompt_pos:
+        assert carry.cache is not None and "pt" in carry.cache["attn"], \
+            "mark_prompt_pos is a paged-carry (radix admission) feature"
+    prog = _admit_rows_prog(bucket, has_pages, bool(mark_prompt_pos))
+    return prog(carry, jnp.asarray(r), jnp.asarray(pr), jnp.asarray(tb),
+                jnp.asarray(lv), jnp.asarray(mask_id, jnp.int32),
+                jnp.asarray(pg) if has_pages else None)
 
 
 def retire_carry_rows(carry: DecodeCarry, rows: Sequence[int],
@@ -677,7 +725,7 @@ def make_admit_fn(cfg: ModelConfig, dcfg: DecodeConfig, *,
                   donate: Optional[bool] = None):
     """Build (or fetch) the compiled admission program.
 
-    fn(params, carry, admit [B] bool) -> carry
+    fn(params, carry, admit [B] bool, prefix_len [B] i32 = None) -> carry
 
     ONE full-prompt forward prefills ``carry.prompt`` for every row and
     merges the K/V of rows flagged in ``admit`` into the carried cache
@@ -687,6 +735,14 @@ def make_admit_fn(cfg: ModelConfig, dcfg: DecodeConfig, *,
     all of a slice boundary's admissions into one call, so an initial
     full batch pays exactly the monolithic program's one prefill. The
     cacheless mode has no admission program (nothing to prefill).
+
+    ``prefix_len`` (paged only, mutually exclusive with the static
+    ``shared_prefix_len``): per-row radix-cache hit lengths in tokens
+    (page-aligned, 0 = full miss). Hit positions read their K/V from the
+    row's already-mapped shared pages instead of the fresh projections,
+    and the write-back page table unmaps the hit pages so the shared
+    runs stay immutable. Passing a zero vector is bit-exact with
+    omitting the argument (the jit specializes on its presence).
     """
     cache_mode, attn_impl, cache_layout, Sp, _ = _norm_slice_key(
         cfg, dcfg, True, cache_mode, attn_impl, cache_layout,
@@ -707,7 +763,7 @@ def _make_admit_fn(cfg: ModelConfig, dcfg: DecodeConfig, cache_mode: str,
     N, bs = dcfg.max_new_tokens, dcfg.block_size
     dual = cache_mode == "dual"
 
-    def admit(params, carry: DecodeCarry, admit_mask):
+    def admit(params, carry: DecodeCarry, admit_mask, prefix_len=None):
         B, P = carry.prompt.shape
         max_len = P + N + (bs if dual else 0)
         kv = carry.cache["attn"]
@@ -715,6 +771,8 @@ def _make_admit_fn(cfg: ModelConfig, dcfg: DecodeConfig, cache_mode: str,
         if paged:
             pt_admit = jnp.where(admit_mask[:, None], kv["pt"], -1)
             if Sp:
+                assert prefix_len is None, \
+                    "per-row prefix_len replaces the static shared prefix"
                 # the shared pages already hold [0, Sp): encode only the
                 # per-row remainder against them (same call shape as the
                 # monolithic Sp prefill; write slot is explicit because
@@ -727,6 +785,27 @@ def _make_admit_fn(cfg: ModelConfig, dcfg: DecodeConfig, cache_mode: str,
                     attn_impl=attn_impl, page_size=ps,
                     row_limit=jnp.full((B,), Sp, jnp.int32))
                 kv1 = c1["attn"]
+            elif prefix_len is not None:
+                # radix-hit admission: each row's first prefix_len[r]
+                # positions are already resident in shared tree pages —
+                # the forward substitutes their cached K/V per layer and
+                # writes back ONLY the novel suffix (matched pages are
+                # unmapped in the write table, so scatters to them drop
+                # and the shared pages stay immutable). Rows with
+                # prefix_len == 0 take the identical [P, P] attention and
+                # all-fresh selects, so a full miss is bit-exact with the
+                # plain-prefill branch below.
+                pfx = prefix_len.astype(jnp.int32)
+                n_log = kv["pt"].shape[1]
+                drop = jnp.arange(n_log, dtype=jnp.int32)[None, :] \
+                    < (pfx[:, None] // ps)
+                pt_write = jnp.where(drop, -1, pt_admit)
+                _, c1 = M.prefill(params, cfg, carry.prompt,
+                                  max_len=max_len, mode="full",
+                                  cache={"attn": dict(kv, pt=pt_admit)},
+                                  page_size=ps, prefix_len=pfx,
+                                  write_page_table=pt_write)
+                kv1 = c1["attn"]
             else:
                 _, c1 = M.prefill(params, cfg, carry.prompt,
                                   max_len=max_len, mode="full",
@@ -738,6 +817,8 @@ def _make_admit_fn(cfg: ModelConfig, dcfg: DecodeConfig, cache_mode: str,
                           length=jnp.maximum(kv["length"],
                                              jnp.asarray(P, jnp.int32)))
         else:
+            assert prefix_len is None, \
+                "radix prefix hits require the paged layout"
             _, fresh = M.prefill(params, cfg, carry.prompt,
                                  max_len=max_len, mode="full")
             fkv = fresh["attn"]

@@ -58,6 +58,18 @@ def main() -> None:
                          "freed slots MID-generation (0 = monolithic "
                          "batch-boundary admission, SERVING.md 'Async "
                          "admission')")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="radix-tree prefix cache: reuse page-aligned "
+                         "prompt-prefix KV across requests and tenants, "
+                         "prefilling only each row's novel remainder "
+                         "(needs --cache-layout paged and --slice-len "
+                         ">= 1; SERVING.md 'Radix prefix cache')")
+    ap.add_argument("--prefix-cache-pages", type=int, default=0,
+                    help="page budget the tree may pin (0 = bounded by "
+                         "the pool; LRU-evicted under pressure)")
+    ap.add_argument("--prefix-cache-watermark", type=float, default=0.0,
+                    help="fraction of the pool eviction keeps free "
+                         "beyond each admission's immediate need")
     args = ap.parse_args()
 
     from benchmarks.common import bench_config
@@ -77,7 +89,10 @@ def main() -> None:
                         shared_prefix=args.shared_prefix,
                         spec_decode=args.spec_decode,
                         draft_max_steps=args.draft_max_steps,
-                        slice_len=args.slice_len)
+                        slice_len=args.slice_len,
+                        prefix_cache=args.prefix_cache,
+                        prefix_cache_pages=args.prefix_cache_pages,
+                        prefix_cache_watermark=args.prefix_cache_watermark)
     engine = DiffusionEngine(params, cfg, dcfg, ecfg=ecfg)
     rng = np.random.default_rng(0)
     samples = TASKS[args.task].make(rng, args.n)
@@ -98,6 +113,14 @@ def main() -> None:
               f"{st.blocks_accepted} accepted "
               f"({st.draft_accept_rate:.0%}) over {st.draft_batches} "
               f"batches, ~{st.nfe_saved} forwards saved")
+    if st.prefix_hits or st.prefix_misses or st.prefix_inserts:
+        print(f"# prefix cache: {st.prefix_hits} hits "
+              f"{st.prefix_misses} misses "
+              f"({st.prefix_hit_rate:.0%} hit rate), "
+              f"{st.prefix_hit_pages} pages reused "
+              f"({st.prefill_tokens_saved} prompt tokens), "
+              f"{st.prefix_inserts} inserts {st.prefix_evictions} "
+              f"evictions, prefill NFE={st.prefill_nfe}")
     if st.slices:
         q = [r.queue_s for r in out]
         ttfb = [r.ttfb_s for r in out]

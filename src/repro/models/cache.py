@@ -316,9 +316,13 @@ class PageAllocator:
         return pages
 
     def share(self, pages: Sequence[int]) -> None:
-        for p in pages:
+        for p in pages:  # validate ALL pages before bumping ANY refcount:
+            # raising mid-list would leak the bumps already taken and the
+            # ledger could never balance again (no caller can tell which
+            # prefix of the list was shared)
             if self._refs[p] <= 0:  # real raise: -O must not strip this
                 raise ValueError(f"sharing an unallocated page {p}")
+        for p in pages:
             self._refs[p] += 1
 
     def fork(self, parent: Sequence[int], n_private: int
@@ -352,10 +356,199 @@ class PageAllocator:
         return list(parent), private
 
     def free(self, pages: Sequence[int]) -> None:
+        drops: dict = {}  # validate-all-first (duplicate-aware), like
+        # share(): a mid-list raise must leave the ledger exactly as it
+        # found it
         for p in pages:
-            if self._refs[p] <= 0:  # a double free would silently hand a
+            drops[p] = drops.get(p, 0) + 1
+        for p, n in drops.items():
+            if self._refs[p] < n:  # a double free would silently hand a
                 # live (possibly shared-prefix) page to the next alloc
                 raise ValueError(f"double free of page {p}")
+        for p in pages:
             self._refs[p] -= 1
             if self._refs[p] == 0:
                 self._free.append(p)
+
+
+# ---------------------------------------------------------------------------
+# radix prefix cache (host-side; the serving scheduler drives this)
+# ---------------------------------------------------------------------------
+
+class PrefixNode:
+    """One radix-tree node: a page-aligned run of immutable prefix pages.
+
+    ``tokens`` is the EXACT token run the node's pages cover (length a
+    ``page_size`` multiple); the run starts where the parent chain ends,
+    so a root-to-node chain spells out a full left-anchored prompt
+    prefix. Nodes are never split: the bidirectional (MDLM "full"-mode)
+    prefill makes a page's KV depend on the *entire* forward it was
+    written by, so only whole-node boundaries — which are exactly the
+    admission boundaries the donor row was encoded at — can be reused
+    bit-identically.
+    """
+
+    __slots__ = ("tokens", "pages", "children", "parent", "tick")
+
+    def __init__(self, tokens: Tuple[int, ...], pages: List[int],
+                 parent: Optional["PrefixNode"]):
+        self.tokens = tokens
+        self.pages = pages
+        self.children: dict = {}  # token run -> PrefixNode
+        self.parent = parent
+        self.tick = 0
+
+    @property
+    def start(self) -> int:
+        """Logical slot where this node's run begins."""
+        n, off = self.parent, 0
+        while n is not None:
+            off += len(n.tokens)
+            n = n.parent
+        return off
+
+
+class RadixPrefixCache:
+    """Radix tree over page-aligned prefix chunks (SERVING.md "Radix
+    prefix cache").
+
+    The tree OWNS one allocator reference per page it pins: ``insert``
+    adopts pages by refcount *transfer* (the caller must not free pages
+    a successful insert took), ``evict`` frees LRU leaves whose pages no
+    live row references (refcount exactly the tree's own 1). Matching
+    returns the longest chain of whole nodes whose concatenated token
+    runs prefix the query row; the scheduler ``share()``s the matched
+    pages into the admitted row's page table and prefills only the
+    remainder.
+    """
+
+    def __init__(self, allocator: PageAllocator, page_size: int, *,
+                 max_pages: int = 0):
+        assert page_size > 0
+        self.allocator = allocator
+        self.page_size = page_size
+        self.max_pages = int(max_pages)  # 0 -> bounded by the pool only
+        self.root = PrefixNode((), [], None)
+        self.pages_pinned = 0
+        self.nodes = 0
+        self._tick = 0
+
+    # -- walk -----------------------------------------------------------
+    def _best(self, node: PrefixNode, ids: Sequence[int], off: int
+              ) -> Tuple[int, List[PrefixNode]]:
+        """Deepest whole-node match under ``node`` at offset ``off``.
+        Recursion is over MATCHING children only — at most one child per
+        distinct run length can match, so the fan-out is the number of
+        node-boundary layouts, not the tenant count. The deepest chain
+        wins (equal-depth sibling layouts tie-break to the earliest
+        inserted, deterministically): donors insert under the chain they
+        matched, so the winning chain is lineage-consistent — a warm hit
+        maps exactly the pages a cold admission at the same boundary
+        would have written."""
+        best_end, best_chain = off, []
+        for run, child in node.children.items():
+            end = off + len(run)
+            if end <= len(ids) and tuple(ids[off:end]) == run:
+                sub_end, sub_chain = self._best(child, ids, end)
+                if sub_end > best_end:
+                    best_end, best_chain = sub_end, [child] + sub_chain
+        return best_end, best_chain
+
+    def match(self, ids: Sequence[int]
+              ) -> Tuple[int, List[int], List[PrefixNode]]:
+        """Longest node-boundary match for a [prompt_len] token row.
+        Returns ``(matched_len, pages, chain)`` and refreshes the
+        chain's LRU ticks."""
+        ids = list(ids)
+        end, chain = self._best(self.root, ids, 0)
+        self._tick += 1
+        pages: List[int] = []
+        for n in chain:
+            n.tick = self._tick
+            pages.extend(n.pages)
+        return end, pages, chain
+
+    # -- insert (refcount transfer) -------------------------------------
+    def insert(self, ids: Sequence[int], start: int, pages: List[int]
+               ) -> bool:
+        """Adopt ``pages`` as the node covering
+        ``ids[start : start + len(pages) * page_size]``.
+
+        ``True``: ownership TRANSFERRED — the caller's reference on the
+        pages is now the tree's and the caller must NOT free them.
+        ``False``: nothing inserted (empty run, boundary mismatch, or an
+        identical node already exists) — the caller keeps ownership and
+        frees as usual."""
+        ps = self.page_size
+        if not pages or start % ps:
+            return False
+        run = tuple(ids[start:start + len(pages) * ps])
+        if len(run) != len(pages) * ps:
+            return False
+        end, chain = self._best(self.root, list(ids), 0)
+        if end != start:
+            # a deeper match means an identical donor already promoted
+            # this run; shallower means the boundary chain is gone — in
+            # both cases adopting would break lineage consistency
+            return False
+        parent = chain[-1] if chain else self.root
+        if run in parent.children:
+            return False
+        node = PrefixNode(run, list(pages), parent)
+        self._tick += 1
+        node.tick = self._tick
+        parent.children[run] = node
+        self.pages_pinned += len(pages)
+        self.nodes += 1
+        return True
+
+    # -- eviction (LRU over tree-only pages) ----------------------------
+    def _evictable(self) -> List[PrefixNode]:
+        """Leaves whose every page only the tree references (refcount
+        exactly 1): no live row maps them, no child chains through
+        them."""
+        out, stack = [], list(self.root.children.values())
+        while stack:
+            n = stack.pop()
+            if n.children:
+                stack.extend(n.children.values())
+            elif all(self.allocator.refcount(p) == 1 for p in n.pages):
+                out.append(n)
+        return out
+
+    def evict(self, n_pages: int) -> Tuple[int, int]:
+        """Free least-recently-matched evictable leaves until at least
+        ``n_pages`` pages returned to the allocator (or nothing is left
+        to evict). Evicting a leaf can expose its parent, so the
+        candidate set is recomputed per victim. A live row can never
+        lose a mapped page: its ``share()`` reference keeps every page
+        it maps above refcount 1, which disqualifies the whole chain.
+        Returns ``(nodes_evicted, pages_freed)``."""
+        nodes = freed = 0
+        while freed < n_pages:
+            cand = self._evictable()
+            if not cand:
+                break
+            victim = min(cand, key=lambda n: n.tick)
+            assert all(self.allocator.refcount(p) == 1
+                       for p in victim.pages), \
+                "evicting a page a live row still maps"
+            self.allocator.free(victim.pages)
+            del victim.parent.children[victim.tokens]
+            self.pages_pinned -= len(victim.pages)
+            self.nodes -= 1
+            freed += len(victim.pages)
+            nodes += 1
+        return nodes, freed
+
+    def trim(self) -> Tuple[int, int]:
+        """Enforce the ``max_pages`` cap (insert-time backpressure).
+        Returns ``(nodes_evicted, pages_freed)``."""
+        nodes = freed = 0
+        while self.max_pages and self.pages_pinned > self.max_pages:
+            n, f = self.evict(self.pages_pinned - self.max_pages)
+            if not n:
+                break
+            nodes += n
+            freed += f
+        return nodes, freed

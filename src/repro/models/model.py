@@ -154,11 +154,18 @@ def _mlp_part(p: dict, cfg: ModelConfig, x: Array) -> Tuple[Array, dict]:
 
 
 def _attn_layer_full(p: dict, cfg: ModelConfig, x: Array, positions: Array,
-                     mode: str, window: int) -> Tuple[Array, dict, Tuple]:
+                     mode: str, window: int,
+                     kv_map=None) -> Tuple[Array, dict, Tuple]:
     """Self-attention over the full sequence. Returns rotated (k, v) so
-    prefill can capture them for the cache."""
+    prefill can capture them for the cache. ``kv_map``, when given, maps
+    the freshly computed (k, v) before attention AND capture — the
+    radix-admission prefill substitutes cached page values below each
+    row's prefix boundary (an elementwise select: rows whose positions
+    are all fresh flow through bit-exactly)."""
     h = rms_norm(x, p["ln1"], cfg.norm_eps)
     q, k, v = _qkv(p, cfg, h, positions)
+    if kv_map is not None:
+        k, v = kv_map(k, v)
     attn = attention(q, k, v, q_pos=positions, kv_pos=positions,
                      mode=mode, window=window)
     B, S = x.shape[:2]
@@ -313,7 +320,9 @@ def prefill(params: dict, cfg: ModelConfig, tokens: Array, *, max_len: int,
             window: int = 0, mode: Optional[str] = None,
             frontend_feats: Optional[Array] = None,
             cache: Optional[dict] = None,
-            page_size: int = 0) -> Tuple[Array, dict]:
+            page_size: int = 0,
+            prefix_len: Optional[Array] = None,
+            write_page_table: Optional[Array] = None) -> Tuple[Array, dict]:
     """Forward over the prompt; returns (logits, cache).
 
     ``mode`` defaults to causal (AR serving) — pass ``"full"`` for MDLM
@@ -326,6 +335,19 @@ def prefill(params: dict, cfg: ModelConfig, tokens: Array, *, max_len: int,
     pool instead of a freshly allocated dense buffer (``page_size`` must
     match the pool's). The serving scheduler uses this to prefill a shared
     system-prompt prefix once into refcounted pages.
+
+    ``prefix_len`` [B] int32 (paged external cache only): the radix
+    prefix-cache admission forward. Positions below a row's boundary are
+    CACHE HITS — each layer replaces their freshly computed (k, v) with
+    the values gathered from the row's already-mapped prefix pages, so
+    the novel suffix attends [cached prefix ∥ itself] exactly as a cold
+    full prefill would have seen it, while the hit positions' (garbage)
+    hidden states never contaminate the pool: their writes are dropped
+    via ``write_page_table`` (the caller unmaps matched pages there).
+    Rows with boundary 0 are bit-exact with the plain prefill — the
+    substitution is an elementwise select and every attention shape is
+    unchanged. ``write_page_table``, when given, replaces the cache's
+    page table for the final scatter only.
     """
     x = _embed_inputs(params, cfg, tokens, frontend_feats)
     B, S, _ = x.shape
@@ -337,17 +359,44 @@ def prefill(params: dict, cfg: ModelConfig, tokens: Array, *, max_len: int,
             "external prefill cache must be a paged attention cache"
         assert page_size > 0 and not window
     else:
+        assert prefix_len is None and write_page_table is None, \
+            "prefix-composed prefill needs an external paged cache"
         cache = cache_lib.init_cache(cfg, B, max_len, x.dtype, window=window)
 
     if cfg.family in ATTN_FAMILIES:
-        def body(h, lp):
-            h, _, (k, v) = _attn_layer_full(lp, cfg, h, positions, mode, window)
-            return h, (k, v)
-        x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+        if prefix_len is None:
+            def body(h, lp):
+                h, _, (k, v) = _attn_layer_full(lp, cfg, h, positions,
+                                                mode, window)
+                return h, (k, v)
+            x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+        else:
+            kv0 = cache["attn"]
+            fresh = (positions[None, :]
+                     >= prefix_len.astype(jnp.int32)[:, None])
+            fm = fresh[..., None, None]
+            pt = kv0["pt"]
+
+            def body(h, xs):
+                lp, kp_l, vp_l = xs
+
+                def compose(k, v):
+                    ck, cv, _ = cache_lib.paged_kv_gather(
+                        kp_l, vp_l, pt, S, page_size=page_size)
+                    return (jnp.where(fm, k, ck.astype(k.dtype)),
+                            jnp.where(fm, v, cv.astype(v.dtype)))
+
+                h, _, (k, v) = _attn_layer_full(lp, cfg, h, positions,
+                                                mode, window,
+                                                kv_map=compose)
+                return h, (k, v)
+            x, (ks, vs) = jax.lax.scan(
+                body, x, (params["layers"], kv0["kp"], kv0["vp"]))
         kv = cache["attn"]
         if "kp" in kv:  # paged: scatter through the page table
+            wpt = kv["pt"] if write_page_table is None else write_page_table
             kp, vp = cache_lib.paged_kv_write_layers(
-                kv["kp"], kv["vp"], ks, vs, kv["pt"],
+                kv["kp"], kv["vp"], ks, vs, wpt,
                 jnp.zeros((), jnp.int32), page_size=page_size)
             cache["attn"] = dict(
                 kv, kp=kp, vp=vp,

@@ -36,6 +36,17 @@ engine construction; every slot's page table then maps those pages
 read-only (copy-on-write boundaries are page-aligned, so decode writes
 never touch them).
 
+With ``EngineConfig.prefix_cache`` the scheduler additionally owns a
+:class:`~repro.models.cache.RadixPrefixCache` next to the allocator
+(SERVING.md "Radix prefix cache"): admission walks the tree for the
+longest page-aligned match on the row's ``shared_prefix + prefix``
+stream, ``share()``s the matched pages into the row's page table, and
+prefills only the novel remainder through a per-row composed forward
+(``prefix_len``); retirement promotes the row's immutable prompt pages
+back into the tree so the cache warms itself from live traffic, and an
+LRU over tree-only nodes evicts under page pressure BEFORE admission
+load-shedding.
+
 With ``EngineConfig.spec_decode`` the scheduler also owns the DRAFT
 lifecycle (SERVING.md "Speculative drafting"): the decode program is the
 ``variant="draft"`` executable, a :class:`~repro.spec.drafter.Drafter`
@@ -52,8 +63,10 @@ import os
 import time
 from collections import deque
 from dataclasses import dataclass
+from functools import lru_cache
 from typing import Deque, Dict, List, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -65,7 +78,7 @@ from repro.core.decoder import (admit_carry_rows, init_decode_carry,
 from repro.core.osdt import CalibrationStore
 from repro.data import tokenizer as tok
 from repro.models import model as M
-from repro.models.cache import PageAllocator
+from repro.models.cache import PageAllocator, RadixPrefixCache
 from repro.spec.drafter import Drafter
 
 DEAD_TASK = "__dead__"  # pseudo-task of pad slots (resolves to the static table)
@@ -76,6 +89,13 @@ class Request:
     uid: int
     task: str
     prompt: str
+    # cacheable prompt prefix (tenant system prompt, few-shot template,
+    # resubmitted history): under EngineConfig.prefix_cache the radix
+    # tree deduplicates its KV pages across requests. The decoded row is
+    # always ``shared_prefix + prefix + prompt`` — engines WITHOUT the
+    # cache lay the row out identically and simply prefill it whole, so
+    # oracle comparisons stay token-identical.
+    prefix: str = ""
 
 
 @dataclass
@@ -96,6 +116,11 @@ class Response:
     # the batch-granular runtime can only observe the batch end, so there
     # it equals wall_s (stats glossary).
     ttfb_s: float = 0.0
+    # radix prefix cache (0 with prefix_cache off): tree pages this
+    # row's admission reused, and the prompt tokens whose prefill those
+    # pages replaced
+    prefix_hit_pages: int = 0
+    prefill_tokens_saved: int = 0
 
 
 @dataclass
@@ -123,6 +148,13 @@ class Slot:
     ttfb_s: float = 0.0
     calib_task: str = ""
     was_mid: bool = False  # admitted while the batch was mid-generation
+    # radix prefix cache: tree pages share()d into this row (freed at
+    # retirement — their KV belongs to the tree), the token length they
+    # cover (the row's composed-prefill offset), and how many of them
+    # pre-dated this request's own seeding (the actual reuse)
+    prefix_pages: Optional[List[int]] = None
+    prefix_len: int = 0
+    prefix_hit_pages: int = 0
 
     def admit(self, rs: Optional[RequestState],
               pages: Optional[List[int]] = None) -> None:
@@ -133,6 +165,9 @@ class Slot:
         self.ttfb_s = 0.0
         self.calib_task = ""
         self.was_mid = False
+        self.prefix_pages = None
+        self.prefix_len = 0
+        self.prefix_hit_pages = 0
         if rs is not None:
             rs.slot = self.index
 
@@ -141,6 +176,9 @@ class Slot:
         self.pages = None
         self.state = "free"
         self.calib_task = ""
+        self.prefix_pages = None
+        self.prefix_len = 0
+        self.prefix_hit_pages = 0
 
 
 @dataclass
@@ -174,6 +212,17 @@ class EngineStats:
     #                           already mid-generation (cursor > 0 rows
     #                           present) — the async-admission payoff
     ttfb_s: float = 0.0       # sum of per-request time-to-first-block
+    # radix prefix cache (all 0 with prefix_cache off)
+    prefix_hits: int = 0      # admissions that reused >= 1 tree node
+    prefix_misses: int = 0    # non-empty-prefix admissions reusing none
+    prefix_inserts: int = 0   # nodes adopted (seeds + promotions)
+    prefix_evictions: int = 0  # LRU nodes reclaimed under page pressure
+    prefix_hit_pages: int = 0  # tree pages served at admission
+    prefill_tokens_saved: int = 0  # prompt tokens those pages replaced
+    prefill_nfe: int = 0      # prefill forwards: admission + seeding +
+    #                           the one-time shared prefill; the radix
+    #                           cache's headline reduction (a full-hit
+    #                           admission skips its forward outright)
 
     @property
     def tokens_per_s(self) -> float:
@@ -192,6 +241,42 @@ class EngineStats:
     def draft_accept_rate(self) -> float:
         return self.blocks_accepted / self.blocks_drafted \
             if self.blocks_drafted else 0.0
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        n = self.prefix_hits + self.prefix_misses
+        return self.prefix_hits / n if n else 0.0
+
+
+@lru_cache(maxsize=None)
+def _seed_prefill_prog(cfg: ModelConfig, max_len: int, ps: int,
+                       end: int, composed: bool):
+    """Compiled B=1 donor prefill for one seed-segment shape. Module-
+    level so every engine in the process shares one program per
+    (config, boundary-length) pair — an eager ``M.prefill`` re-traces
+    its scan every call, which costs more than the forward itself and
+    would stall the slice loop on every cold tenant."""
+    if composed:
+        def fn(params, tokens, kp, vp, pt, prefix_len, wpt):
+            cache = {"attn": {
+                "kp": kp, "vp": vp, "pt": pt,
+                "pos": jnp.full((max_len,), -1, jnp.int32),
+                "length": jnp.zeros((), jnp.int32)}}
+            _, c = M.prefill(params, cfg, tokens, max_len=max_len,
+                             mode="full", cache=cache, page_size=ps,
+                             prefix_len=prefix_len,
+                             write_page_table=wpt)
+            return c["attn"]["kp"], c["attn"]["vp"]
+    else:
+        def fn(params, tokens, kp, vp, pt):
+            cache = {"attn": {
+                "kp": kp, "vp": vp, "pt": pt,
+                "pos": jnp.full((max_len,), -1, jnp.int32),
+                "length": jnp.zeros((), jnp.int32)}}
+            _, c = M.prefill(params, cfg, tokens, max_len=max_len,
+                             mode="full", cache=cache, page_size=ps)
+            return c["attn"]["kp"], c["attn"]["vp"]
+    return jax.jit(fn)
 
 
 class Scheduler:
@@ -229,14 +314,28 @@ class Scheduler:
         self.seen_tasks: Dict[str, int] = {}  # task -> requests admitted
 
         self.paged = dcfg.cache_layout == "paged" and mode != "none"
+        self.prefix_cache = bool(self.ecfg.prefix_cache)
+        if self.prefix_cache:
+            # the radix tree shares PAGES and admits through per-row
+            # composed prefills at slice boundaries — both are paged /
+            # step-sliced machinery
+            assert self.paged, "prefix_cache needs the paged KV layout"
+            assert self.ecfg.slice_len >= 1, \
+                "prefix_cache admits through the step-sliced loop"
+        self.prefix_tree: Optional[RadixPrefixCache] = None
+        self._prefix_memo: Dict[str, Tuple[List[int], int]] = {}
         # the shared system prompt is prepended to every row's prompt
         # under BOTH layouts (same tokens in, comparable runs); the page
         # rounding applies regardless so the prompts match — only the
-        # paged layout additionally dedups its KV into shared pages
+        # paged layout additionally dedups its KV into shared pages.
+        # Under prefix_cache the static machinery stays OFF: the shared
+        # prefix becomes the pre-seeded first radix node instead
+        # (SERVING.md migration note), folded into every row's prefix
+        # stream by _row_prefix_ids.
         self.shared_len = 0           # shared-prefix tokens (page multiple)
         self._shared_ids: List[int] = []
         self._shared_pages: List[int] = []
-        if self.ecfg.shared_prefix:
+        if self.ecfg.shared_prefix and not self.prefix_cache:
             ps = dcfg.page_size
             ids = tok.encode(self.ecfg.shared_prefix, bos=True)
             # round DOWN to a page multiple (and keep at least one page
@@ -316,6 +415,14 @@ class Scheduler:
             self._pool_k = cache["attn"]["kp"]
             self._pool_v = cache["attn"]["vp"]
             self.stats.nfe += 1  # the one-time shared-prefix forward
+            self.stats.prefill_nfe += 1
+        if self.prefix_cache:
+            # the tree owns prefix pages WITHIN this pool; a rebuilt
+            # pool (donated-carry failure) gets a fresh empty tree —
+            # the old pages died with the old pool
+            self.prefix_tree = RadixPrefixCache(
+                self.allocator, ps,
+                max_pages=self.ecfg.prefix_cache_pages)
         self.stats.pages_shared = len(self._shared_pages)
         self.stats.pages_peak = self.allocator.in_use
 
@@ -495,6 +602,7 @@ class Scheduler:
                 self.stats.nfe_saved += skipped - 2
             self.stats.requests += len(picked)
             self.stats.nfe += int(res.nfe)
+            self.stats.prefill_nfe += 1  # the batch's fused prefill
             self.stats.wall_s += decode_s
             self.stats.batches += 1
             self.stats.dead_slots += n_dead
@@ -560,9 +668,168 @@ class Scheduler:
 
     def _prompt_row(self, rs: RequestState) -> List[int]:
         P = self.ecfg.prompt_len
+        if self.prefix_cache or rs.req.prefix:
+            # prefix-layout row: the cacheable stream left-anchored up
+            # to its page-rounded boundary, the remainder right-aligned
+            # in the rest (pads in the middle). Engines WITHOUT the
+            # radix cache build the identical row for a prefix-carrying
+            # request and prefill it whole — that is what keeps the
+            # paged/dense and sliced/monolithic oracle comparisons
+            # token-identical.
+            return self._row_tokens(rs.req)
         ids = tok.encode(rs.req.prompt, bos=True)
         ids = ids[-(P - self.shared_len):]
         return self._shared_ids + tok.pad_left(ids, P - self.shared_len)
+
+    # -- radix prefix cache (SERVING.md "Radix prefix cache") -----------
+    def _row_tokens(self, req: Request) -> List[int]:
+        """The request's full [prompt_len] row in the prefix layout:
+        cacheable stream left-anchored up to its page-rounded boundary,
+        remainder right-aligned (pads in the middle)."""
+        P = self.ecfg.prompt_len
+        pfx, _ = self._row_prefix_ids(req)
+        L = len(pfx)
+        full = tok.encode(self.ecfg.shared_prefix + req.prefix
+                          + req.prompt, bos=True)
+        rest = full[L:][-(P - L):]
+        return list(pfx) + tok.pad_left(rest, P - L)
+
+    def _row_prefix_ids(self, req: Request) -> Tuple[List[int], int]:
+        """The request's cacheable token stream and its shared-template
+        boundary: ``(ids, m0)`` where ``ids`` is the page-rounded (and
+        capped — at least one page of the row must stay per-request)
+        encoding of ``shared_prefix + req.prefix`` and ``ids[:m0]`` is
+        the page-rounded shared template alone. Tree nodes are seeded
+        exactly at these two boundaries, so every tenant chains through
+        ONE cross-tenant template node. The byte tokenizer concatenates
+        (``encode(a + b) == encode(a) + bytes(b)``), which is what makes
+        the boundaries stable under memoization by tenant prefix."""
+        hit = self._prefix_memo.get(req.prefix)
+        if hit is not None:
+            return hit
+        ps, P = self.dcfg.page_size, self.ecfg.prompt_len
+        cap = (max(P - ps, 0) // ps) * ps
+        shared = tok.encode(self.ecfg.shared_prefix, bos=True) \
+            if self.ecfg.shared_prefix else []
+        ids = tok.encode(self.ecfg.shared_prefix + req.prefix, bos=True)
+        L = min((len(ids) // ps) * ps, cap)
+        m0 = min((len(shared) // ps) * ps, cap, L)
+        out = (ids[:L], m0)
+        self._prefix_memo[req.prefix] = out
+        return out
+
+    def _evict_pages(self, need: int) -> None:
+        """LRU-evict tree-only nodes until ``need`` pages plus the
+        configured watermark headroom are free. Ordered BEFORE the
+        load-shedding break in page-gated admission: a request only
+        waits once live rows and the watermark genuinely exhaust the
+        pool, never because cold cache entries sit on it."""
+        if not self.prefix_cache:
+            return
+        head = int(self.ecfg.prefix_cache_watermark
+                   * self.stats.page_capacity)
+        want = need + head - self.allocator.available
+        if want > 0:
+            n, _ = self.prefix_tree.evict(want)
+            self.stats.prefix_evictions += n
+
+    def _live_kv(self) -> dict:
+        """The pool the seed forward reads/writes: the live carry's (the
+        arrays move INTO the carry) or the scheduler's parked ones."""
+        if self._carry is not None:
+            return self._carry.cache["attn"]
+        return {"kp": self._pool_k, "vp": self._pool_v}
+
+    def _put_kv(self, kp, vp) -> None:
+        if self._carry is not None:
+            kv = dict(self._carry.cache["attn"], kp=kp, vp=vp)
+            self._carry = self._carry._replace(
+                cache=dict(self._carry.cache, attn=kv))
+        else:
+            self._pool_k, self._pool_v = kp, vp
+
+    def _seed_segment(self, ids: List[int], start: int, end: int,
+                      chain_pages: List[int]) -> List[int]:
+        """One B=1 donor forward over ``ids[:end]``, composed against
+        the already-seeded chain covering ``[0, start)``; writes ONLY
+        the fresh pages for ``[start, end)`` and returns them (refcount
+        1, destined for the tree via ``insert``'s ownership transfer).
+        Seeding at node boundaries is what keeps warm hits bit-exact:
+        a row composing this node sees exactly the K/V this forward
+        wrote, which is exactly what ITS OWN admission would have
+        computed for those positions."""
+        ps = self.dcfg.page_size
+        pages = self.allocator.alloc((end - start) // ps)
+        try:
+            kv = self._live_kv()
+            spt = np.full((1, self.n_log), -1, np.int32)
+            spt[0, :start // ps] = chain_pages
+            spt[0, start // ps: end // ps] = pages
+            tokens = jnp.asarray(ids[:end], jnp.int32)[None]
+            prog = _seed_prefill_prog(self.cfg, self.max_len, ps, end,
+                                      bool(start))
+            if start:
+                wpt = spt.copy()
+                wpt[0, :start // ps] = -1  # chain pages stay immutable
+                kp, vp = prog(self.params, tokens, kv["kp"], kv["vp"],
+                              jnp.asarray(spt),
+                              jnp.asarray([start], jnp.int32),
+                              jnp.asarray(wpt))
+            else:
+                kp, vp = prog(self.params, tokens, kv["kp"], kv["vp"],
+                              jnp.asarray(spt))
+            self._put_kv(kp, vp)
+            self.stats.nfe += 1
+            self.stats.prefill_nfe += 1
+            return pages
+        except BaseException:
+            self.allocator.free(pages)
+            raise
+
+    def _prefix_claim(self, req: Request
+                      ) -> Optional[Tuple[int, List[int], List[int], int]]:
+        """Walk the tree for ``req``'s prefix (seeding missing segments
+        on demand), then claim this row's pages: ``share()`` the chain
+        and allocate the private remainder. Returns ``(prefix_len,
+        chain_pages, private_pages, hit_pages)`` — ``hit_pages`` counts
+        only pages that PRE-dated this call's seeding (true reuse) — or
+        ``None`` under page pressure eviction could not relieve (the
+        caller sheds load; seeds already adopted stay in the tree, so
+        the retry only needs the private pages)."""
+        pfx_ids, m0 = self._row_prefix_ids(req)
+        L = len(pfx_ids)
+        # walk the FULL row, not just the prefix stream: retirement
+        # promotes prompt pages at boundaries past L, and matching them
+        # is what makes an identical resubmission near-zero-prefill
+        row = self._row_tokens(req)
+        matched, mpages, _ = self.prefix_tree.match(row)
+        hit_pages = len(mpages)
+        if matched < L:
+            try:
+                for b in (m0, L):
+                    if matched < b:
+                        self._evict_pages((b - matched)
+                                          // self.dcfg.page_size)
+                        new = self._seed_segment(row, matched, b, mpages)
+                        if self.prefix_tree.insert(row, matched, new):
+                            self.stats.prefix_inserts += 1
+                        else:  # cannot happen single-threaded (the walk
+                            # just missed); keep the ledger honest anyway
+                            self.allocator.free(new)
+                        matched, mpages, _ = self.prefix_tree.match(row)
+            except MemoryError:
+                return None
+        need = self.n_log - len(mpages)
+        self._evict_pages(need)
+        if self.allocator.available < need:
+            return None
+        self.allocator.share(mpages)
+        try:
+            private = self.allocator.alloc(need)
+        except MemoryError:
+            self.allocator.free(mpages)
+            return None
+        return matched, list(mpages), private, hit_pages
 
     def _admit_sliced(self) -> List[Slot]:
         """Pop admissible requests into free slots (FIFO; paged admission
@@ -577,16 +844,36 @@ class Scheduler:
         for slot in free:
             if not self.queue:
                 break
-            if self.paged and \
+            claim = None
+            if self.prefix_cache:
+                # peek — the claim itself evicts LRU tree nodes before
+                # giving up, and a shed request must stay at the head
+                claim = self._prefix_claim(self.queue[0].req)
+                if claim is None:
+                    break  # page pressure even after eviction
+            elif self.paged and \
                     self.allocator.available < self.private_per_slot:
                 break
             rs = self.queue.popleft()
             rs.t_admit = now
             pages = None
-            if self.paged:
+            if self.prefix_cache:
+                pfx_len, chain, pages, hit_pages = claim
+            elif self.paged:
                 _, pages = self.allocator.fork(self._shared_pages,
                                                self.private_per_slot)
             slot.admit(rs, pages)
+            if self.prefix_cache:
+                slot.prefix_pages = chain
+                slot.prefix_len = pfx_len
+                slot.prefix_hit_pages = hit_pages
+                if hit_pages:
+                    self.stats.prefix_hits += 1
+                elif pfx_len:
+                    self.stats.prefix_misses += 1
+                self.stats.prefix_hit_pages += hit_pages
+                self.stats.prefill_tokens_saved += \
+                    hit_pages * self.dcfg.page_size
             slot.was_mid = mid_gen
             t = rs.req.task
             self.seen_tasks[t] = self.seen_tasks.get(t, 0) + 1
@@ -607,21 +894,43 @@ class Scheduler:
         tables = self.store.tables_for([s.rs.req.task for s in admitted])
         page_rows = None
         if self.paged:
-            n_shared = self.shared_len // self.dcfg.page_size
             page_rows = np.full((len(admitted), self.n_log), -1, np.int32)
-            for i, s in enumerate(admitted):
-                page_rows[i, :n_shared] = self._shared_pages
-                page_rows[i, n_shared:] = s.pages
+            if self.prefix_cache:
+                for i, s in enumerate(admitted):
+                    row_pages = list(s.prefix_pages) + list(s.pages)
+                    page_rows[i, :len(row_pages)] = row_pages
+            else:
+                n_shared = self.shared_len // self.dcfg.page_size
+                for i, s in enumerate(admitted):
+                    page_rows[i, :n_shared] = self._shared_pages
+                    page_rows[i, n_shared:] = s.pages
             self.stats.pages_peak = max(self.stats.pages_peak,
                                         self.allocator.in_use)
         self._carry = admit_carry_rows(self._carry, rows, prompts,
                                        np.asarray(tables), self.mask_id,
-                                       page_rows=page_rows)
+                                       page_rows=page_rows,
+                                       mark_prompt_pos=self.prefix_cache)
         if self._admit_fn is not None:
             admit_mask = np.zeros((self.ecfg.batch_size,), bool)
             admit_mask[rows] = True
-            self._carry = self._admit_fn(self.params, self._carry,
-                                         jnp.asarray(admit_mask))
+            if self.prefix_cache:
+                P = self.ecfg.prompt_len
+                if all(s.prefix_len == P for s in admitted):
+                    # zero-prefill admission: every prompt position of
+                    # every admitted row is already resident in tree
+                    # pages (admit_carry_rows marked pos/length) — the
+                    # composed forward would compute nothing fresh
+                    return admitted
+                pfx = np.zeros((self.ecfg.batch_size,), np.int32)
+                for s in admitted:
+                    pfx[s.index] = s.prefix_len
+                self._carry = self._admit_fn(self.params, self._carry,
+                                             jnp.asarray(admit_mask),
+                                             jnp.asarray(pfx))
+            else:
+                self._carry = self._admit_fn(self.params, self._carry,
+                                             jnp.asarray(admit_mask))
+            self.stats.prefill_nfe += 1
         return admitted
 
     def _retire_sliced(self) -> List[Response]:
@@ -666,7 +975,10 @@ class Scheduler:
                 tokens_out=len(row),
                 tokens_dropped=tokens.shape[1] - len(row),
                 blocks_drafted=int(drafted[j]),
-                blocks_accepted=int(accepted[j]), ttfb_s=slot.ttfb_s))
+                blocks_accepted=int(accepted[j]), ttfb_s=slot.ttfb_s,
+                prefix_hit_pages=slot.prefix_hit_pages,
+                prefill_tokens_saved=slot.prefix_hit_pages
+                * self.dcfg.page_size))
             self.stats.tokens += len(row)
             self.stats.tokens_dropped += tokens.shape[1] - len(row)
             self.stats.queue_s += queue_s
@@ -677,9 +989,31 @@ class Scheduler:
             self.stats.blocks_drafted += int(drafted[j])
             self.stats.blocks_accepted += int(accepted[j])
             if self.paged and slot.pages is not None:
-                self.allocator.free(slot.pages)
-                self.allocator.free(self._shared_pages)
-                self.stats.pages_freed += len(slot.pages)
+                pages = slot.pages
+                if self.prefix_cache:
+                    # promote the row's now-immutable prompt pages into
+                    # the tree by refcount TRANSFER (no copy): the next
+                    # identical submission becomes a near-zero-prefill
+                    # full hit. Only whole pages strictly inside the
+                    # prompt qualify — the page straddling prompt/
+                    # generation was decode-written and stays private.
+                    ps = self.dcfg.page_size
+                    n_promo = (self.ecfg.prompt_len - slot.prefix_len) \
+                        // ps
+                    promo = pages[:n_promo]
+                    if promo and self.prefix_tree.insert(
+                            self._prompt_row(slot.rs),
+                            slot.prefix_len, promo):
+                        self.stats.prefix_inserts += 1
+                        pages = pages[n_promo:]
+                        n, _ = self.prefix_tree.trim()
+                        self.stats.prefix_evictions += n
+                    self.allocator.free(pages)
+                    self.allocator.free(slot.prefix_pages or [])
+                else:
+                    self.allocator.free(pages)
+                    self.allocator.free(self._shared_pages)
+                self.stats.pages_freed += len(pages)
             slot.retire()
         self._carry = retire_carry_rows(carry, [s.index for s in done], nb)
         return out
@@ -729,9 +1063,22 @@ class Scheduler:
                     self.stats.mid_admits -= 1
                 if slot.calib_task:
                     self._calibrating.pop(slot.calib_task, None)
+                if self.prefix_cache:
+                    # re-admission re-counts the lookup (possibly with a
+                    # deeper match — seeds survive the failure)
+                    if slot.prefix_hit_pages:
+                        self.stats.prefix_hits -= 1
+                    elif slot.prefix_len:
+                        self.stats.prefix_misses -= 1
+                    self.stats.prefix_hit_pages -= slot.prefix_hit_pages
+                    self.stats.prefill_tokens_saved -= \
+                        slot.prefix_hit_pages * self.dcfg.page_size
                 if self.paged and slot.pages is not None:
                     self.allocator.free(slot.pages)
-                    self.allocator.free(self._shared_pages)
+                    if self.prefix_cache:
+                        self.allocator.free(slot.prefix_pages or [])
+                    else:
+                        self.allocator.free(self._shared_pages)
                 slot.retire()
             self._teardown_carry()
             raise

@@ -62,6 +62,50 @@ def test_allocator_free_list_and_refcounts():
     assert sorted(again) == list(range(8))
 
 
+def _ledger(a):
+    return list(a._refs), list(a._free)
+
+
+def test_share_raising_midway_leaves_ledger_untouched():
+    a = cache_lib.PageAllocator(8)
+    own = a.alloc(3)
+    stale = a.alloc(1)
+    a.free(stale)                       # refcount 0: unshareable
+    before = _ledger(a)
+    with pytest.raises(ValueError):
+        # the bad page sits LAST: a non-atomic share would bump the two
+        # valid pages before raising and leak both references
+        a.share(own[:2] + stale)
+    assert _ledger(a) == before
+    a.free(own)
+    assert a.available == 8
+
+
+def test_free_with_duplicate_page_leaves_ledger_untouched():
+    a = cache_lib.PageAllocator(8)
+    own = a.alloc(2)
+    before = _ledger(a)
+    with pytest.raises(ValueError):
+        # duplicate inside ONE call: each page holds a single reference,
+        # so the second drop is a double free even though the first
+        # would have succeeded
+        a.free([own[0], own[1], own[0]])
+    assert _ledger(a) == before
+    a.free(own)
+    assert a.available == 8
+
+
+def test_fork_exhaustion_midway_leaves_ledger_untouched():
+    a = cache_lib.PageAllocator(8)
+    shared = a.alloc(3)
+    a.alloc(4)                          # only 1 page left
+    before = _ledger(a)
+    with pytest.raises(MemoryError):
+        a.fork(shared, 2)               # private alloc cannot be met
+    assert _ledger(a) == before
+    assert all(a.refcount(p) == 1 for p in shared)
+
+
 # ---------------------------------------------------------------------------
 # gather / scatter round-trip through arbitrary page tables
 # ---------------------------------------------------------------------------
