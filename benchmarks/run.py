@@ -1,13 +1,16 @@
 """Benchmark entry point — one function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows (and tees them to
-experiments/bench_results.csv). See DESIGN.md §7 for the experiment index.
+Prints ``name,us_per_call,derived`` CSV rows, tees them to
+experiments/bench_results.csv, and writes each bench's rows to
+``experiments/BENCH_<name>.json`` (machine-readable per-bench artifact).
+See DESIGN.md §7 for the experiment index.
 
   python -m benchmarks.run            # everything
   python -m benchmarks.run table1     # one benchmark
 """
 from __future__ import annotations
 
+import json
 import sys
 from pathlib import Path
 from typing import List
@@ -15,8 +18,8 @@ from typing import List
 from benchmarks import (async_admission, block_attn, cache_modes,
                         fig1_confidence, fig2_cosine, fig3_5_sweep,
                         fused_step, kernels_bench, paged_kv,
-                        prefix_cache, scheduler_bench, spec_decode,
-                        table1_compare)
+                        prefix_cache, quantized_decode, scheduler_bench,
+                        spec_decode, table1_compare)
 
 BENCHES = {
     "fig1": fig1_confidence.run,
@@ -32,6 +35,7 @@ BENCHES = {
     "spec_decode": spec_decode.run,
     "async_admission": async_admission.run,
     "prefix_cache": prefix_cache.run,
+    "quant": quantized_decode.run,
 }
 
 
@@ -49,15 +53,31 @@ def _merge(out: Path, rows: List[str]) -> List[str]:
     return merged
 
 
+def _bench_json(exp_dir: Path, name: str, rows: List[str]) -> None:
+    """experiments/BENCH_<name>.json: the bench's rows as records —
+    the per-bench artifact CI and notebooks consume without parsing the
+    merged csv."""
+    recs = []
+    for r in rows:
+        parts = r.split(",", 2)
+        recs.append({"name": parts[0],
+                     "us_per_call": parts[1] if len(parts) > 1 else "",
+                     "derived": parts[2] if len(parts) > 2 else ""})
+    (exp_dir / f"BENCH_{name}.json").write_text(
+        json.dumps({"bench": name, "rows": recs}, indent=1) + "\n")
+
+
 def main() -> None:
     which = sys.argv[1:] or list(BENCHES)
     rows: List[str] = []
+    exp_dir = Path(__file__).resolve().parents[1] / "experiments"
+    exp_dir.mkdir(parents=True, exist_ok=True)
     print("name,us_per_call,derived")
     for name in which:
+        n0 = len(rows)
         BENCHES[name](rows, verbose=True)
-    out = Path(__file__).resolve().parents[1] / "experiments" / \
-        "bench_results.csv"
-    out.parent.mkdir(parents=True, exist_ok=True)
+        _bench_json(exp_dir, name, rows[n0:])
+    out = exp_dir / "bench_results.csv"
     merged = _merge(out, rows)
     out.write_text("name,us_per_call,derived\n" + "\n".join(merged) + "\n")
     print(f"# wrote {len(rows)} rows ({len(merged)} total) -> {out}")

@@ -226,6 +226,16 @@ class DecodeConfig:
     #             kernel on TPU (bit-identical jnp chain elsewhere);
     #             threshold rule only (quota == 0)
     step_fusion: str = "unfused"
+    # decode-path weight streaming (KERNELS.md "Quantized matmuls"):
+    #   bf16 — weights stream in their stored dtype (the bit-identity
+    #          oracle; the name covers f32-stored params too)
+    #   int8 — the decode program expects params quantized ONCE at load
+    #          by models.quantize.quantize_decode_params: QKV/O, MLP and
+    #          lm-head tiles stream as symmetric per-output-channel int8
+    #          and dequantize in-register before each contraction (half
+    #          the weight HBM bytes of bf16; NOT bit-identical — the
+    #          accuracy contract is the token-match gate, KERNELS.md)
+    weight_dtype: str = "bf16"
 
     @property
     def num_blocks(self) -> int:
@@ -254,6 +264,11 @@ class EngineConfig:
     prompt_len: int = 64
     cache_mode: str = "prefix"    # prefix | dual | none (decoder variants)
     attn_impl: str = ""           # "" -> DecodeConfig.attn_impl
+    # "" -> DecodeConfig.weight_dtype; "int8" makes the scheduler run
+    # models.quantize.quantize_decode_params ONCE at construction and
+    # serve every decode/prefill forward from the int8 tiles
+    # (EngineStats.weight_bytes_streamed tracks the streamed footprint)
+    weight_dtype: str = ""
     # retire rows at the first completed block containing EOS; dead slots
     # and retired rows stop forcing denoising steps
     eos_early_exit: bool = True

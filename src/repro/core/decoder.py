@@ -38,6 +38,7 @@ from repro.core.confidence import confidence
 from repro.kernels import ops as kops
 from repro.models import cache as cache_lib
 from repro.models import model as M
+from repro.models.quantize import WEIGHT_DTYPES
 
 Array = jax.Array
 
@@ -93,7 +94,7 @@ def make_generate_fn(cfg: ModelConfig, dcfg: DecodeConfig, *,
                      use_kernel: bool = False, cache_mode: str = "",
                      attn_impl: str = "", cache_layout: str = "",
                      shared_prefix_len: int = 0, variant: str = "step",
-                     step_fusion: str = ""):
+                     step_fusion: str = "", weight_dtype: str = ""):
     """Build (or fetch) the jitted generate function.
 
     fn(params, prompt [B, P] int32, table, mask_id [],
@@ -162,24 +163,31 @@ def make_generate_fn(cfg: ModelConfig, dcfg: DecodeConfig, *,
     classic epilogue (head matmul, confidence pass, threshold select —
     3 dispatches + 3 HBM passes over [rows, vocab] logits per step);
     "fused" collapses it into the single ``ops.fused_step`` kernel on
-    TPU (bit-identical jnp chain elsewhere). Requires the threshold rule
-    (``quota == 0`` — the quota baseline needs a full [rows] sort).
+    TPU (bit-identical jnp chain elsewhere). With ``quota > 0`` the
+    kernel's final-tile select switches to the fixed-step baseline's
+    per-row top-``quota`` (in-kernel pairwise ranking, one batch row's
+    block per tile), bit-identical to the unfused quota rule.
+
+    ``weight_dtype`` (default ``dcfg.weight_dtype``): "bf16" expects raw
+    params (any storage dtype — bit-identity oracle); "int8" keys the
+    program for params pre-quantized by
+    ``models.quantize.quantize_decode_params`` (the scheduler does this
+    once at load) — projections and the lm-head then stream int8 tiles
+    through the dequant-in-register kernels.
 
     Memoized on the NORMALIZED variant key, so spelling-equivalent calls
     (e.g. ``use_cache=True`` vs ``cache_mode="prefix"``) share one jitted
     program — one trace/compile per (cfg, dcfg, variant) process-wide.
     """
-    cache_mode, attn_impl, cache_layout, shared_prefix_len, step_fusion = \
-        _norm_slice_key(cfg, dcfg, use_cache, cache_mode, attn_impl,
-                        cache_layout, shared_prefix_len, variant,
-                        step_fusion)
+    cache_mode, attn_impl, cache_layout, shared_prefix_len, step_fusion, \
+        weight_dtype = _norm_slice_key(
+            cfg, dcfg, use_cache, cache_mode, attn_impl, cache_layout,
+            shared_prefix_len, variant, step_fusion, weight_dtype)
     assert not (variant == "draft" and quota > 0), \
         "drafting presupposes the threshold rule, not the quota baseline"
-    assert not (step_fusion == "fused" and quota > 0), \
-        "the fused epilogue implements the threshold rule, not the quota"
     return _make_generate_fn(cfg, dcfg, quota, use_kernel, cache_mode,
                              attn_impl, cache_layout, shared_prefix_len,
-                             variant, step_fusion)
+                             variant, step_fusion, weight_dtype)
 
 
 @lru_cache(maxsize=None)
@@ -187,7 +195,11 @@ def _make_generate_fn(cfg: ModelConfig, dcfg: DecodeConfig, quota: int,
                       use_kernel: bool, cache_mode: str, attn_impl: str,
                       cache_layout: str = "dense",
                       shared_prefix_len: int = 0, variant: str = "step",
-                      step_fusion: str = "unfused"):
+                      step_fusion: str = "unfused",
+                      weight_dtype: str = "bf16"):
+    # weight_dtype is pure program identity: routing is isinstance-based
+    # (QuantizedTensor leaves), but int8 params trace to a different HLO,
+    # so the memo key must separate them.
     assert cfg.supports_mdlm, f"{cfg.name}: diffusion decoding inapplicable"
     use_cache = cache_mode != "none"
     dual = cache_mode == "dual"
@@ -375,8 +387,11 @@ def _make_generate_fn(cfg: ModelConfig, dcfg: DecodeConfig, quota: int,
                     conf, toks, above = kops.fused_step(
                         xh, M.head_weights(params, cfg),
                         jnp.broadcast_to(tau[:, None], masked.shape),
-                        masked, tied=cfg.tie_embeddings)
-                    unmask = _threshold_fallback(conf, masked, above, live)
+                        masked, tied=cfg.tie_embeddings, quota=quota)
+                    # quota: the in-kernel top-k IS the full rule (the
+                    # fixed-step baseline has no argmax fallback)
+                    unmask = above if quota else _threshold_fallback(
+                        conf, masked, above, live)
                 else:
                     logits = model_out(block, resp)
                     conf, toks = confidence(logits, use_kernel=use_kernel)
@@ -513,7 +528,7 @@ class DecodeCarry(NamedTuple):
 def _norm_slice_key(cfg: ModelConfig, dcfg: DecodeConfig, use_cache: bool,
                     cache_mode: str, attn_impl: str, cache_layout: str,
                     shared_prefix_len: int, variant: str,
-                    step_fusion: str = ""):
+                    step_fusion: str = "", weight_dtype: str = ""):
     """THE program-key normalization — ``make_generate_fn`` and the
     sliced family share it, so spelling-equivalent calls can never key
     the oracle and the sliced programs differently."""
@@ -530,6 +545,9 @@ def _norm_slice_key(cfg: ModelConfig, dcfg: DecodeConfig, use_cache: bool,
     if not step_fusion:
         step_fusion = dcfg.step_fusion or "unfused"
     assert step_fusion in ("unfused", "fused"), step_fusion
+    if not weight_dtype:
+        weight_dtype = dcfg.weight_dtype or "bf16"
+    assert weight_dtype in WEIGHT_DTYPES, weight_dtype
     if cache_mode == "none":
         cache_layout = "dense"
     if cache_layout != "paged":
@@ -538,7 +556,7 @@ def _norm_slice_key(cfg: ModelConfig, dcfg: DecodeConfig, use_cache: bool,
         assert shared_prefix_len % dcfg.page_size == 0, \
             (shared_prefix_len, dcfg.page_size)
     return (cache_mode, attn_impl, cache_layout, shared_prefix_len,
-            step_fusion)
+            step_fusion, weight_dtype)
 
 
 def _donate_default() -> bool:
@@ -560,7 +578,7 @@ def init_decode_carry(cfg: ModelConfig, dcfg: DecodeConfig, *,
     (dead rows all ``-1``); a non-zero ``shared_prefix_len`` expects the
     pool's shared pages to be prefilled already (scheduler ctor) and
     marks their slots valid exactly like the monolithic program."""
-    cache_mode, _, cache_layout, Sp, _ = _norm_slice_key(
+    cache_mode, _, cache_layout, Sp, _, _ = _norm_slice_key(
         cfg, dcfg, True, cache_mode, "auto", cache_layout,
         shared_prefix_len, "step")
     B, P = batch, prompt_len
@@ -744,7 +762,7 @@ def make_admit_fn(cfg: ModelConfig, dcfg: DecodeConfig, *,
     runs stay immutable. Passing a zero vector is bit-exact with
     omitting the argument (the jit specializes on its presence).
     """
-    cache_mode, attn_impl, cache_layout, Sp, _ = _norm_slice_key(
+    cache_mode, attn_impl, cache_layout, Sp, _, _ = _norm_slice_key(
         cfg, dcfg, True, cache_mode, attn_impl, cache_layout,
         shared_prefix_len, "step")
     assert cache_mode != "none", "cacheless decode has nothing to admit"
@@ -843,7 +861,7 @@ def make_slice_fn(cfg: ModelConfig, dcfg: DecodeConfig, *,
                   use_kernel: bool = False, cache_mode: str = "prefix",
                   attn_impl: str = "", cache_layout: str = "",
                   shared_prefix_len: int = 0, variant: str = "step",
-                  step_fusion: str = "",
+                  step_fusion: str = "", weight_dtype: str = "",
                   donate: Optional[bool] = None):
     """Build (or fetch) the compiled block-slice program.
 
@@ -875,22 +893,24 @@ def make_slice_fn(cfg: ModelConfig, dcfg: DecodeConfig, *,
 
     ``step_fusion`` mirrors ``make_generate_fn`` — "fused" collapses each
     step's epilogue (head matmul + confidence + threshold) into the one
-    ``ops.fused_step`` kernel; requires ``quota == 0``.
+    ``ops.fused_step`` kernel; ``quota > 0`` runs the in-kernel top-k
+    select (bit-identical to the unfused quota baseline).
+    ``weight_dtype`` mirrors ``make_generate_fn`` too — "int8" keys the
+    program for pre-quantized params.
 
     Memoized like ``make_generate_fn``: one compiled program per
     (cfg, dcfg, variant, slice_len) process-wide.
     """
-    cache_mode, attn_impl, cache_layout, Sp, step_fusion = _norm_slice_key(
-        cfg, dcfg, True, cache_mode, attn_impl, cache_layout,
-        shared_prefix_len, variant, step_fusion)
+    cache_mode, attn_impl, cache_layout, Sp, step_fusion, weight_dtype = \
+        _norm_slice_key(cfg, dcfg, True, cache_mode, attn_impl,
+                        cache_layout, shared_prefix_len, variant,
+                        step_fusion, weight_dtype)
     assert slice_len >= 1, slice_len
     assert not (variant == "draft" and quota > 0), \
         "drafting presupposes the threshold rule, not the quota baseline"
-    assert not (step_fusion == "fused" and quota > 0), \
-        "the fused epilogue implements the threshold rule, not the quota"
     return _make_slice_fn(cfg, dcfg, int(slice_len), quota, use_kernel,
                           cache_mode, attn_impl, cache_layout, Sp, variant,
-                          step_fusion,
+                          step_fusion, weight_dtype,
                           _donate_default() if donate is None
                           else bool(donate))
 
@@ -900,7 +920,7 @@ def _make_slice_fn(cfg: ModelConfig, dcfg: DecodeConfig, slice_len: int,
                    quota: int, use_kernel: bool, cache_mode: str,
                    attn_impl: str, cache_layout: str,
                    shared_prefix_len: int, variant: str, step_fusion: str,
-                   donate: bool):
+                   weight_dtype: str, donate: bool):
     assert cfg.supports_mdlm, f"{cfg.name}: diffusion decoding inapplicable"
     use_cache = cache_mode != "none"
     dual = cache_mode == "dual"
@@ -1059,8 +1079,11 @@ def _make_slice_fn(cfg: ModelConfig, dcfg: DecodeConfig, slice_len: int,
                     conf, toks, above = kops.fused_step(
                         xh, M.head_weights(params, cfg),
                         jnp.broadcast_to(tau[:, None], masked.shape),
-                        masked, tied=cfg.tie_embeddings)
-                    unmask = _threshold_fallback(conf, masked, above, live)
+                        masked, tied=cfg.tie_embeddings, quota=quota)
+                    # quota: the in-kernel top-k IS the full rule (the
+                    # fixed-step baseline has no argmax fallback)
+                    unmask = above if quota else _threshold_fallback(
+                        conf, masked, above, live)
                 else:
                     logits = model_out(block, resp, live)
                     conf, toks = confidence(logits, use_kernel=use_kernel)

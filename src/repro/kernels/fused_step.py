@@ -39,19 +39,19 @@ from repro.kernels.pallas_compat import compiler_params
 Array = jax.Array
 
 
-def _kernel(x_ref, w_ref, tau_ref, msk_ref, conf_ref, tok_ref, abv_ref,
-            m_scr, s_scr, i_scr, *, nv: int, vt: int, vocab: int,
-            tied: bool):
-    j = pl.program_id(1)
+def _epilogue(logits, j, tau_ref, msk_ref, conf_ref, tok_ref, abv_ref,
+              m_scr, s_scr, i_scr, *, nv: int, vt: int, vocab: int,
+              quota: int):
+    """Shared per-tile accumulate + final-tile select, threshold or quota.
 
-    @pl.when(j == 0)
-    def _init():
-        softmax_acc_reset(m_scr, s_scr, i_scr)
-
-    x = x_ref[...].astype(jnp.float32)      # [rt, M]
-    w = w_ref[...].astype(jnp.float32)      # [vt, M] tied / [M, vt] untied
-    logits = jnp.dot(x, w.T if tied else w,
-                     preferred_element_type=jnp.float32)  # [rt, vt]
+    ``quota > 0`` switches the final-tile compare from the per-row
+    threshold rule to the fixed-step baseline's top-``quota``: the whole
+    row tile is ONE ranking group (the dispatch lays each batch row's
+    block out as one tile), and the stable descending rank is computed
+    by pairwise counting — ``rank_i = #{j : c_j > c_i or (c_j == c_i
+    and j < i)}`` — which equals the decoder's stable
+    ``argsort(argsort(-conf_m))`` spelling exactly (``quota_rank_ref``).
+    """
     rt = logits.shape[0]
     col = jax.lax.broadcasted_iota(jnp.int32, (rt, vt), 1) + j * vt
     logits = jnp.where(col < vocab, logits, -jnp.inf)
@@ -62,43 +62,68 @@ def _kernel(x_ref, w_ref, tau_ref, msk_ref, conf_ref, tok_ref, abv_ref,
         conf = 1.0 / s_scr[...]
         conf_ref[...] = conf
         tok_ref[...] = i_scr[...]
-        abv_ref[...] = ((msk_ref[...] != 0)
-                        & (conf > tau_ref[...])).astype(jnp.int32)
+        msk = msk_ref[...] != 0
+        if quota:
+            cm = jnp.where(msk, conf, -jnp.inf)
+            gt = cm[None, :] > cm[:, None]                    # [rt, rt]
+            row_i = jax.lax.broadcasted_iota(jnp.int32, (rt, rt), 0)
+            col_j = jax.lax.broadcasted_iota(jnp.int32, (rt, rt), 1)
+            tie = (cm[None, :] == cm[:, None]) & (col_j < row_i)
+            rank = jnp.sum((gt | tie).astype(jnp.int32), axis=1)
+            abv_ref[...] = ((rank < quota) & msk).astype(jnp.int32)
+        else:
+            abv_ref[...] = (msk & (conf > tau_ref[...])).astype(jnp.int32)
 
 
-def fused_step_pallas(x: Array, w: Array, tau: Array, masked: Array, *,
-                      tied: bool, row_tile: int = 8, vocab_tile: int = 512,
-                      interpret: bool = False
-                      ) -> Tuple[Array, Array, Array]:
-    """x [R, M] hidden; w [V, M] (tied) or [M, V]; tau [R]; masked [R]
-    -> (conf [R] f32, tok [R] i32, above [R] bool)."""
-    R, M = x.shape
-    V = w.shape[0] if tied else w.shape[1]
-    rt = min(row_tile, R)
-    Rp = -(-R // rt) * rt
-    vt = min(vocab_tile, -(-V // 128) * 128)
-    Vp = -(-V // vt) * vt
-    Mp = -(-M // 128) * 128
+def _kernel(x_ref, w_ref, tau_ref, msk_ref, conf_ref, tok_ref, abv_ref,
+            m_scr, s_scr, i_scr, *, nv: int, vt: int, vocab: int,
+            tied: bool, quota: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        softmax_acc_reset(m_scr, s_scr, i_scr)
+
+    x = x_ref[...].astype(jnp.float32)      # [rt, M]
+    w = w_ref[...].astype(jnp.float32)      # [vt, M] tied / [M, vt] untied
+    logits = jnp.dot(x, w.T if tied else w,
+                     preferred_element_type=jnp.float32)  # [rt, vt]
+    _epilogue(logits, j, tau_ref, msk_ref, conf_ref, tok_ref, abv_ref,
+              m_scr, s_scr, i_scr, nv=nv, vt=vt, vocab=vocab, quota=quota)
+
+
+def _qkernel(x_ref, w_ref, s_ref, tau_ref, msk_ref, conf_ref, tok_ref,
+             abv_ref, m_scr, s_scr, i_scr, *, nv: int, vt: int,
+             vocab: int, tied: bool, quota: int):
+    """Int8-head variant: the logit tile's weights stream as int8 and are
+    dequantized against the per-vocab-channel scale IN the epilogue
+    stream, keeping the 1-dispatch / no-HBM-logits property at half the
+    head-weight bytes (KERNELS.md "Quantized matmuls")."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        softmax_acc_reset(m_scr, s_scr, i_scr)
+
+    x = x_ref[...].astype(jnp.float32)      # [rt, M]
+    w = w_ref[...].astype(jnp.float32)      # int8 [vt, M] / [M, vt]
+    sc = s_ref[...]                         # [1, vt] f32 per-vocab scale
+    w = w * (sc[0, :][:, None] if tied else sc)
+    logits = jnp.dot(x, w.T if tied else w,
+                     preferred_element_type=jnp.float32)  # [rt, vt]
+    _epilogue(logits, j, tau_ref, msk_ref, conf_ref, tok_ref, abv_ref,
+              m_scr, s_scr, i_scr, nv=nv, vt=vt, vocab=vocab, quota=quota)
+
+
+def _call(kernel, operands, *, R, Rp, rt, Vp, vt, extra_specs,
+          interpret):
     nr, nv = Rp // rt, Vp // vt
-
-    # zero padding everywhere: pad-M contributes 0 to every dot product,
-    # pad-V columns are masked to -inf by ``col < vocab``, pad rows are
-    # sliced off
-    x = jnp.pad(x, ((0, Rp - R), (0, Mp - M)))
-    w = jnp.pad(w, ((0, Vp - V), (0, Mp - M)) if tied
-                else ((0, Mp - M), (0, Vp - V)))
-    tau = jnp.pad(tau.astype(jnp.float32), (0, Rp - R))
-    masked = jnp.pad(masked.astype(jnp.int32), (0, Rp - R))
-
-    w_spec = pl.BlockSpec((vt, Mp), lambda i, j: (j, 0)) if tied \
-        else pl.BlockSpec((Mp, vt), lambda i, j: (0, j))
-    kernel = functools.partial(_kernel, nv=nv, vt=vt, vocab=V, tied=tied)
     conf, tok, above = pl.pallas_call(
         kernel,
         grid=(nr, nv),
-        in_specs=[pl.BlockSpec((rt, Mp), lambda i, j: (i, 0)),
-                  w_spec,
-                  pl.BlockSpec((rt,), lambda i, j: (i,)),
+        in_specs=[pl.BlockSpec((rt, operands[0].shape[1]),
+                               lambda i, j: (i, 0))] + extra_specs +
+                 [pl.BlockSpec((rt,), lambda i, j: (i,)),
                   pl.BlockSpec((rt,), lambda i, j: (i,))],
         out_specs=[pl.BlockSpec((rt,), lambda i, j: (i,)),
                    pl.BlockSpec((rt,), lambda i, j: (i,)),
@@ -112,5 +137,82 @@ def fused_step_pallas(x: Array, w: Array, tau: Array, masked: Array, *,
         compiler_params=compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
-    )(x, w, tau, masked)
+    )(*operands)
     return conf[:R], tok[:R], above[:R] != 0
+
+
+def fused_step_pallas(x: Array, w: Array, tau: Array, masked: Array, *,
+                      tied: bool, row_tile: int = 8, vocab_tile: int = 512,
+                      quota: int = 0, interpret: bool = False
+                      ) -> Tuple[Array, Array, Array]:
+    """x [R, M] hidden; w [V, M] (tied) or [M, V]; tau [R]; masked [R]
+    -> (conf [R] f32, tok [R] i32, above [R] bool).
+
+    ``quota > 0``: the fixed-step baseline's per-row top-k replaces the
+    threshold compare, ranking WITHIN each row tile — the caller must
+    lay one ranking group (one batch row's block, padded to ``row_tile``
+    with ``masked=False`` rows) per tile and pass ``row_tile`` equal to
+    the padded group size (``ops.fused_step`` does).
+    """
+    R, M = x.shape
+    V = w.shape[0] if tied else w.shape[1]
+    rt = min(row_tile, R)
+    Rp = -(-R // rt) * rt
+    vt = min(vocab_tile, -(-V // 128) * 128)
+    Vp = -(-V // vt) * vt
+    Mp = -(-M // 128) * 128
+    assert not (quota and (R % rt or rt != row_tile)), \
+        "quota ranking groups must tile exactly"
+
+    # zero padding everywhere: pad-M contributes 0 to every dot product,
+    # pad-V columns are masked to -inf by ``col < vocab``, pad rows are
+    # sliced off
+    x = jnp.pad(x, ((0, Rp - R), (0, Mp - M)))
+    w = jnp.pad(w, ((0, Vp - V), (0, Mp - M)) if tied
+                else ((0, Mp - M), (0, Vp - V)))
+    tau = jnp.pad(tau.astype(jnp.float32), (0, Rp - R))
+    masked = jnp.pad(masked.astype(jnp.int32), (0, Rp - R))
+
+    w_spec = pl.BlockSpec((vt, Mp), lambda i, j: (j, 0)) if tied \
+        else pl.BlockSpec((Mp, vt), lambda i, j: (0, j))
+    kernel = functools.partial(_kernel, nv=Vp // vt, vt=vt, vocab=V,
+                               tied=tied, quota=quota)
+    return _call(kernel, (x, w, tau, masked), R=R, Rp=Rp, rt=rt, Vp=Vp,
+                 vt=vt, extra_specs=[w_spec], interpret=interpret)
+
+
+def quantized_fused_step_pallas(x: Array, q: Array, scale: Array,
+                                tau: Array, masked: Array, *, tied: bool,
+                                row_tile: int = 8, vocab_tile: int = 512,
+                                quota: int = 0, interpret: bool = False
+                                ) -> Tuple[Array, Array, Array]:
+    """Int8-head fused step: ``q`` int8 [V, M] (tied) or [M, V] with the
+    per-vocab-channel f32 ``scale`` (any shape reshaping to [V]) — the
+    lm-head tiles stream at 1 byte/weight and dequantize in the epilogue
+    stream. Same contract as :func:`fused_step_pallas` otherwise."""
+    R, M = x.shape
+    V = q.shape[0] if tied else q.shape[1]
+    svec = scale.reshape(1, V).astype(jnp.float32)
+    rt = min(row_tile, R)
+    Rp = -(-R // rt) * rt
+    vt = min(vocab_tile, -(-V // 128) * 128)
+    Vp = -(-V // vt) * vt
+    Mp = -(-M // 128) * 128
+    assert not (quota and (R % rt or rt != row_tile)), \
+        "quota ranking groups must tile exactly"
+
+    x = jnp.pad(x, ((0, Rp - R), (0, Mp - M)))
+    q = jnp.pad(q, ((0, Vp - V), (0, Mp - M)) if tied
+                else ((0, Mp - M), (0, Vp - V)))
+    svec = jnp.pad(svec, ((0, 0), (0, Vp - V)))
+    tau = jnp.pad(tau.astype(jnp.float32), (0, Rp - R))
+    masked = jnp.pad(masked.astype(jnp.int32), (0, Rp - R))
+
+    w_spec = pl.BlockSpec((vt, Mp), lambda i, j: (j, 0)) if tied \
+        else pl.BlockSpec((Mp, vt), lambda i, j: (0, j))
+    s_spec = pl.BlockSpec((1, vt), lambda i, j: (0, j))
+    kernel = functools.partial(_qkernel, nv=Vp // vt, vt=vt, vocab=V,
+                               tied=tied, quota=quota)
+    return _call(kernel, (x, q, svec, tau, masked), R=R, Rp=Rp, rt=rt,
+                 Vp=Vp, vt=vt, extra_specs=[w_spec, s_spec],
+                 interpret=interpret)

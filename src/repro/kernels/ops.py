@@ -19,13 +19,85 @@ from repro.kernels.block_attention import (cached_block_attention_pallas,
                                            paged_block_attention_pallas)
 from repro.kernels.confidence import fused_confidence_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.fused_step import fused_step_pallas
+from repro.kernels.fused_step import (fused_step_pallas,
+                                      quantized_fused_step_pallas)
+from repro.kernels.quantized_matmul import quantized_matmul_pallas
+from repro.models.quantize import QuantizedTensor
 
 Array = jax.Array
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+# ---------------------------------------------------------------------------
+# int8 dequant-in-register matmul (the weight-streaming decode path)
+# ---------------------------------------------------------------------------
+
+def _chunks(n: int) -> int:
+    """N-chunk count for the XLA dequant-matmul: the largest power of two
+    that divides N and keeps chunks >= 128 wide. Chunking bounds the f32
+    dequant scratch to one chunk (the whole point — the weight stays int8
+    in memory and dequantizes through a cache-resident window), and is
+    BITWISE identical to whole-dequant-then-matmul: every output column's
+    contraction is computed from the same dequantized values in the same
+    order, chunking only groups the columns."""
+    for c in (32, 16, 8, 4, 2):
+        if n % c == 0 and n // c >= 128:
+            return c
+    return 1
+
+
+@partial(jax.jit, static_argnames=("transpose",))
+def _quantized_matmul_xla(x, q, scale, transpose: bool):
+    """Off-TPU fallback: dequantize-then-matmul (chunked over N), the
+    same HLO family as the oracle ``ref.quantized_matmul_ref`` and
+    bit-identical to it."""
+    N = q.shape[0] if transpose else q.shape[1]
+    C = _chunks(N)
+    if C == 1:
+        return ref.quantized_matmul_ref(x, q, scale, transpose=transpose)
+    Nc = N // C
+    if transpose:
+        qc = q.reshape(C, Nc, q.shape[1])
+        sc = scale.reshape(C, Nc, 1)
+        spec = "...k,nk->...n"
+    else:
+        qc = jnp.moveaxis(q.reshape(q.shape[0], C, Nc), 1, 0)
+        sc = jnp.moveaxis(scale.reshape(1, C, Nc), 1, 0)
+        spec = "...k,kn->...n"
+
+    def body(_, qs):
+        qi, si = qs
+        w = (qi.astype(jnp.float32) * si).astype(x.dtype)
+        return None, jnp.einsum(spec, x, w)
+
+    _, outs = jax.lax.scan(body, None, (qc, sc))     # [C, ..., Nc]
+    return jnp.moveaxis(outs, 0, -2).reshape(*x.shape[:-1], N)
+
+
+def quantized_matmul(x: Array, w: QuantizedTensor, *,
+                     transpose: bool = False,
+                     interpret: bool = False) -> Array:
+    """x [..., K] @ dequant(w)[(.T)] -> [..., N] in ``x.dtype``.
+
+    ``w.q`` int8 [K, N] (projections / untied head) or, with
+    ``transpose=True``, [N, K] (the tied embed table as the unembed).
+    TPU (or ``interpret=True``) -> the Pallas dequant-in-register kernel
+    (weight tiles stream HBM->VMEM as int8 and dequantize against the
+    per-channel scale in-register before the MXU dot); elsewhere -> the
+    chunked dequantize-then-matmul XLA form, bit-identical to the
+    oracle. Both dequantize BEFORE the contraction (accuracy contract,
+    KERNELS.md).
+    """
+    if _on_tpu() or interpret:
+        lead = x.shape[:-1]
+        out = quantized_matmul_pallas(
+            x.reshape(-1, x.shape[-1]), w.q, w.scale,
+            transpose=transpose, interpret=interpret)
+        return out.reshape(*lead, out.shape[-1])
+    return _quantized_matmul_xla(x, w.q, w.scale, transpose)
 
 
 @jax.jit
@@ -47,38 +119,86 @@ def fused_confidence(logits: Array) -> Tuple[Array, Array]:
     return conf.reshape(shape), tok.reshape(shape)
 
 
-def fused_step(x: Array, w: Array, tau: Array, masked: Array, *,
-               tied: bool, interpret: bool = False
+def fused_step(x: Array, w, tau: Array, masked: Array, *,
+               tied: bool, quota: int = 0, interpret: bool = False
                ) -> Tuple[Array, Array, Array]:
-    """Fused denoising-step epilogue: unembed + confidence + threshold.
+    """Fused denoising-step epilogue: unembed + confidence + select.
 
     x [..., M] final-norm'd hidden (``block_step(..., head=False)``);
-    w [V, M] embed table (``tied=True``) or [M, V] head; tau [...] per-row
-    threshold; masked [...] bool. Returns ``(conf, tok, above)`` — see
-    ``ref.fused_step_ref``.
+    w [V, M] embed table (``tied=True``), [M, V] head, or a
+    :class:`~repro.models.quantize.QuantizedTensor` of either (the int8
+    lm head — tiles dequantize inside the epilogue stream); tau [...]
+    per-row threshold; masked [...] bool. Returns ``(conf, tok, above)``
+    — see ``ref.fused_step_ref``.
+
+    ``quota > 0`` runs the fixed-step baseline's select instead of the
+    threshold compare: ``above`` is the per-row top-``quota`` of the
+    masked confidences over the LAST axis (x must be [B, bs, M] — one
+    ranking group per block row). On the kernel path each block row is
+    laid out as one row tile (padded to a multiple of 8 with
+    ``masked=False`` rows) so the in-kernel pairwise rank sees the whole
+    group; off-TPU the ref spells the decoder's stable-argsort quota
+    rule exactly, so fused quota decode is bit-identical to the unfused
+    baseline.
 
     TPU (or ``interpret=True``) -> the Pallas kernel streaming lm-head
     logit tiles straight through the running (max, argmax, sum-exp)
-    accumulators and the threshold compare: the [rows, vocab] logits
-    never touch HBM and the 3-dispatch epilogue chain (head matmul,
-    confidence pass, threshold select) collapses into ONE kernel.
-    Elsewhere -> the unfused jnp chain, bit-identical to running the
-    three steps separately.
+    accumulators and the select: the [rows, vocab] logits never touch
+    HBM and the 3-dispatch epilogue chain (head matmul, confidence
+    pass, select) collapses into ONE kernel. Elsewhere -> the unfused
+    jnp chain, bit-identical to running the three steps separately.
     """
     if _on_tpu() or interpret:
+        if quota:
+            assert x.ndim == 3, "quota ranks over [B, bs, M] block rows"
+            B, bs, _ = x.shape
+            bsp = -(-bs // 8) * 8
+            pad = ((0, 0), (0, bsp - bs))
+            xq = jnp.pad(x, pad + ((0, 0),)).reshape(B * bsp, x.shape[-1])
+            tauq = jnp.pad(tau.astype(jnp.float32), pad).reshape(-1)
+            mq = jnp.pad(masked, pad).reshape(-1)
+            conf, tok, above = _fused_pallas(
+                xq, w, tauq, mq, tied=tied, row_tile=bsp, quota=quota,
+                interpret=interpret)
+            return (conf.reshape(B, bsp)[:, :bs],
+                    tok.reshape(B, bsp)[:, :bs],
+                    above.reshape(B, bsp)[:, :bs])
         lead = x.shape[:-1]
-        conf, tok, above = fused_step_pallas(
+        conf, tok, above = _fused_pallas(
             x.reshape(-1, x.shape[-1]), w, tau.reshape(-1),
             masked.reshape(-1), tied=tied, interpret=interpret)
         return (conf.reshape(lead), tok.reshape(lead), above.reshape(lead))
     # shape-preserving: the ref lowers to the same HLO as the unfused
-    # chain (bit-identity contract, see ref.fused_step_ref)
-    return _fused_step_ref(x, w, tau, masked, tied)
+    # chain (bit-identity contract, see ref.fused_step_ref; the int8
+    # head dequantizes first — whole-dequant is bitwise identical to
+    # the chunked unfused unembed)
+    if isinstance(w, QuantizedTensor):
+        return _fused_step_ref_quant(x, w.q, w.scale, tau, masked, tied,
+                                     quota)
+    return _fused_step_ref(x, w, tau, masked, tied, quota)
 
 
-@partial(jax.jit, static_argnames=("tied",))
-def _fused_step_ref(x, w, tau, masked, tied: bool):
-    return ref.fused_step_ref(x, w, tau, masked, tied=tied)
+def _fused_pallas(x2d, w, tau1d, mask1d, *, tied: bool, row_tile: int = 8,
+                  quota: int = 0, interpret: bool = False):
+    if isinstance(w, QuantizedTensor):
+        return quantized_fused_step_pallas(
+            x2d, w.q, w.scale, tau1d, mask1d, tied=tied,
+            row_tile=row_tile, quota=quota, interpret=interpret)
+    return fused_step_pallas(x2d, w, tau1d, mask1d, tied=tied,
+                             row_tile=row_tile, quota=quota,
+                             interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("tied", "quota"))
+def _fused_step_ref(x, w, tau, masked, tied: bool, quota: int):
+    return ref.fused_step_ref(x, w, tau, masked, tied=tied, quota=quota)
+
+
+@partial(jax.jit, static_argnames=("tied", "quota"))
+def _fused_step_ref_quant(x, q, scale, tau, masked, tied: bool,
+                          quota: int):
+    return ref.fused_step_ref(x, q.astype(jnp.float32) * scale, tau,
+                              masked, tied=tied, quota=quota)
 
 
 @partial(jax.jit, static_argnames=("causal",))

@@ -21,8 +21,39 @@ def confidence_ref(logits: Array) -> Tuple[Array, Array]:
     return 1.0 / s, tok
 
 
+def quantized_matmul_ref(x: Array, q: Array, scale: Array, *,
+                         transpose: bool) -> Array:
+    """Oracle for ``quantized_matmul.quantized_matmul_pallas``: dequantize
+    FIRST, then contract — the order the accuracy contract is defined
+    against (scaling the accumulator after the dot is mathematically
+    equal but not bitwise equal, so the fallback must not do it).
+
+    x [..., K]; q int8 [K, N] (or [N, K] with ``transpose=True``);
+    scale f32 with the contracted dim kept size-1. The dequantized
+    weight is cast to ``x.dtype`` before the dot, so an f32 activation
+    path stays f32 end to end and a bf16 path contracts in bf16 exactly
+    like its unquantized einsum.
+    """
+    w = (q.astype(jnp.float32) * scale).astype(x.dtype)
+    if transpose:
+        return jnp.einsum("...k,nk->...n", x, w)
+    return jnp.einsum("...k,kn->...n", x, w)
+
+
+def quota_rank_ref(conf: Array, masked: Array) -> Array:
+    """Stable descending rank of ``conf`` within each row's last axis,
+    masked-out entries last — EXACTLY the decoder's quota spelling
+    (``argsort(argsort(-conf_m))`` with jnp's stable argsort), which the
+    fused kernel reproduces with the pairwise counting form
+    ``rank_i = #{j : c_j > c_i  or  (c_j == c_i and j < i)}``.
+    """
+    conf_m = jnp.where(masked, conf, -jnp.inf)
+    return jnp.argsort(jnp.argsort(-conf_m, axis=-1), axis=-1)
+
+
 def fused_step_ref(x: Array, w: Array, tau: Array, masked: Array, *,
-                   tied: bool) -> Tuple[Array, Array, Array]:
+                   tied: bool, quota: int = 0
+                   ) -> Tuple[Array, Array, Array]:
     """Oracle for ``fused_step.fused_step_pallas`` — the unfused epilogue
     chain, spelled exactly like the decode loop runs it off-TPU so the
     fused path can be compared bit-for-bit.
@@ -37,6 +68,12 @@ def fused_step_ref(x: Array, w: Array, tau: Array, masked: Array, *,
     ``above = masked & (conf > tau)`` — Algorithm 1's threshold rule; the
     argmax FALLBACK (line 21) needs a cross-row reduction and stays in
     the decode loop (``decoder._unmask_choice``).
+
+    ``quota > 0`` selects the fixed-step baseline instead: ``above``
+    becomes the per-row top-``quota`` of the masked confidences over the
+    LAST axis (stable ties — ``quota_rank_ref``), spelled exactly like
+    ``decoder._unmask_choice``'s quota branch so the fused quota decode
+    is bit-identical to the unfused baseline; ``tau`` is ignored.
 
     Shape-preserving and spelled with EXACTLY the unfused chain's op
     sequence (``layers.unembed`` contraction, then
@@ -56,7 +93,10 @@ def fused_step_ref(x: Array, w: Array, tau: Array, masked: Array, *,
     tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     lse = m + jnp.log(jnp.sum(jnp.exp(logits - m[..., None]), axis=-1))
     conf = jnp.exp(m - lse)
-    above = masked & (conf > tau.astype(jnp.float32))
+    if quota:
+        above = (quota_rank_ref(conf, masked) < quota) & masked
+    else:
+        above = masked & (conf > tau.astype(jnp.float32))
     return conf, tok, above
 
 

@@ -13,7 +13,24 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.models.quantize import QuantizedTensor
+
 Array = jax.Array
+
+
+def project(x: Array, w, spec: str) -> Array:
+    """``einsum(spec, x, w)`` for a last-axis contraction, routing
+    :class:`QuantizedTensor` weights through the dequant-in-register
+    kernel dispatch (``ops.quantized_matmul`` — int8 tiles stream at a
+    quarter of the f32 bytes and dequantize per output channel before
+    the dot). Raw weights keep the EXACT original einsum so the
+    ``weight_dtype="bf16"`` path stays bit-identical to pre-quantization
+    decode."""
+    if isinstance(w, QuantizedTensor):
+        from repro.kernels import ops as kops  # kernels sit below models
+
+        return kops.quantized_matmul(x, w)
+    return jnp.einsum(spec, x, w)
 
 
 # ---------------------------------------------------------------------------
@@ -76,10 +93,10 @@ def init_mlp(rng, d_model: int, d_ff: int, dtype) -> dict:
 
 
 def mlp(params: dict, x: Array) -> Array:
-    gate = jnp.einsum("bsm,mf->bsf", x, params["wi_gate"])
-    up = jnp.einsum("bsm,mf->bsf", x, params["wi_up"])
+    gate = project(x, params["wi_gate"], "bsm,mf->bsf")
+    up = project(x, params["wi_up"], "bsm,mf->bsf")
     hidden = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
-    return jnp.einsum("bsf,fm->bsm", hidden, params["wo"])
+    return project(hidden, params["wo"], "bsf,fm->bsm")
 
 
 # ---------------------------------------------------------------------------
@@ -94,8 +111,18 @@ def embed(table: Array, tokens: Array) -> Array:
     return jnp.take(table, tokens, axis=0)
 
 
-def unembed(table_or_head: Array, x: Array, *, transpose: bool) -> Array:
-    """Logits in float32. ``transpose`` when reusing the [V, M] embed table."""
+def unembed(table_or_head, x: Array, *, transpose: bool) -> Array:
+    """Logits in float32. ``transpose`` when reusing the [V, M] embed table.
+
+    A :class:`QuantizedTensor` head (``models.quantize`` — the int8
+    lm-head tiles) routes through the dequant-in-register dispatch; the
+    dequantized weight is f32, so the contraction stays f32 exactly like
+    the raw path."""
+    if isinstance(table_or_head, QuantizedTensor):
+        from repro.kernels import ops as kops
+
+        return kops.quantized_matmul(x.astype(jnp.float32), table_or_head,
+                                     transpose=transpose)
     if transpose:
         return jnp.einsum("bsm,vm->bsv", x.astype(jnp.float32),
                           table_or_head.astype(jnp.float32))

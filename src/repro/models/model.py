@@ -31,7 +31,7 @@ from repro.models.attention import (attention, cache_valid_mask,
 from repro.models.frontend import (frontend_embeds, frontend_len,
                                    init_frontend)
 from repro.models.layers import (apply_rope, dense_init, embed, init_embedding,
-                                 init_mlp, mlp, rms_norm, unembed)
+                                 init_mlp, mlp, project, rms_norm, unembed)
 from repro.models.mamba2 import (init_mamba2, mamba2_forward, mamba2_step)
 from repro.models.moe import init_moe, moe_mlp
 from repro.sharding import ctx as shard_ctx
@@ -123,9 +123,9 @@ def _qkv(p: dict, cfg: ModelConfig, h_norm: Array, q_pos: Array
          ) -> Tuple[Array, Array, Array]:
     B, S, _ = h_norm.shape
     hd = cfg.resolved_head_dim
-    q = shard_ctx.act_attn_out(jnp.einsum("bsm,md->bsd", h_norm, p["wq"]))
-    k = shard_ctx.act_attn_out(jnp.einsum("bsm,md->bsd", h_norm, p["wk"]))
-    v = shard_ctx.act_attn_out(jnp.einsum("bsm,md->bsd", h_norm, p["wv"]))
+    q = shard_ctx.act_attn_out(project(h_norm, p["wq"], "bsm,md->bsd"))
+    k = shard_ctx.act_attn_out(project(h_norm, p["wk"], "bsm,md->bsd"))
+    v = shard_ctx.act_attn_out(project(h_norm, p["wv"], "bsm,md->bsd"))
     if cfg.qkv_bias:
         q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
     q = q.reshape(B, S, cfg.num_heads, hd)
@@ -173,7 +173,7 @@ def _attn_layer_full(p: dict, cfg: ModelConfig, x: Array, positions: Array,
         attn.reshape(B, S, -1).astype(x.dtype))
     # anchor the TP partial-sum crossing in bf16 (pre-residual): without
     # this XLA hoists the f32 convert above the all-reduce (2x volume)
-    x = x + shard_ctx.act_bsd(jnp.einsum("bsd,dm->bsm", attn_flat, p["wo"]))
+    x = x + shard_ctx.act_bsd(project(attn_flat, p["wo"], "bsd,dm->bsm"))
     x, aux = _mlp_part(p, cfg, x)
     return shard_ctx.act_bsd(x), aux, (k, v)
 
@@ -206,16 +206,23 @@ def _pre_head(params: dict, cfg: ModelConfig, x: Array) -> Array:
 def _head(params: dict, cfg: ModelConfig, x: Array) -> Array:
     x = _pre_head(params, cfg, x)
     if cfg.tie_embeddings:
-        logits = unembed(params["embed"], x, transpose=True)
+        # int8 decode params keep the raw embed table for token gathers
+        # and add "head_q" — the quantized unembed view of it
+        logits = unembed(params.get("head_q", params["embed"]), x,
+                         transpose=True)
     else:
         logits = unembed(params["head"], x, transpose=False)
     return shard_ctx.logits_bsv(logits)
 
 
-def head_weights(params: dict, cfg: ModelConfig) -> Array:
+def head_weights(params: dict, cfg: ModelConfig):
     """The unembed matrix the fused step epilogue streams tile-wise:
-    [V, M] (tied — the embed table) or [M, V] (separate head)."""
-    return params["embed"] if cfg.tie_embeddings else params["head"]
+    [V, M] (tied — the embed table) or [M, V] (separate head); a
+    ``QuantizedTensor`` when the params were int8-quantized
+    (``models.quantize`` — tied params store it under ``"head_q"``)."""
+    if cfg.tie_embeddings:
+        return params.get("head_q", params["embed"])
+    return params["head"]
 
 
 # ---------------------------------------------------------------------------
@@ -542,8 +549,8 @@ def decode_step(params: dict, cfg: ModelConfig, token: Array, cache: dict, *,
             attn, (ck, cv) = cached_block_attend(
                 q, ck, cv, k, v, kv["pos"], slot=slot, q_pos=q_pos,
                 kv_limit=kv_limit, window=window, impl=attn_impl)
-        h = h + jnp.einsum("bsd,dm->bsm",
-                           attn.reshape(B, 1, -1).astype(h.dtype), lp["wo"])
+        h = h + project(attn.reshape(B, 1, -1).astype(h.dtype), lp["wo"],
+                        "bsd,dm->bsm")
         h, _ = _mlp_part(lp, cfg, h)
         return shard_ctx.act_bsd(h), (ck, cv)
 
@@ -617,9 +624,8 @@ def _hybrid_decode(params: dict, cfg: ModelConfig, x: Array, cache: dict,
         attn = attention(q, ck, cv, q_pos=q_pos,
                          kv_pos=jnp.maximum(new_pos, 0),
                          mode="full", kv_valid=kv_valid)
-        x = x + jnp.einsum("bsd,dm->bsm",
-                           attn.reshape(B, 1, -1).astype(x.dtype),
-                           shared["wo"])
+        x = x + project(attn.reshape(B, 1, -1).astype(x.dtype),
+                        shared["wo"], "bsd,dm->bsm")
         x, _ = _mlp_part(shared, cfg, x)
     if rem:
         lo = n_sites * every
@@ -786,8 +792,8 @@ def block_step(params: dict, cfg: ModelConfig, block_tokens: Array,
                 kv_limit=kv_limit, exclude_start=exclude_start,
                 exclude_len=exclude_len, window=window, impl=attn_impl,
                 row_valid=dense_row_valid)
-        h = h + jnp.einsum("bsd,dm->bsm",
-                           attn.reshape(B, bs, -1).astype(h.dtype), lp["wo"])
+        h = h + project(attn.reshape(B, bs, -1).astype(h.dtype), lp["wo"],
+                        "bsd,dm->bsm")
         h, _ = _mlp_part(lp, cfg, h)
         return shard_ctx.act_bsd(h), kv_out
 

@@ -1,0 +1,158 @@
+"""Post-training int8 weight quantization for the decode hot loop.
+
+The roofline verdict (``repro.roofline.step_time_model``) is that every
+decode variant is memory-bound on WEIGHT STREAMING, so the next factor
+comes from halving the bytes per weight, not from more fusion. This
+module turns the decode-path projection weights (QKV/O, the gated MLP,
+and the lm head) into symmetric per-output-channel int8 tiles with f32
+scales, computed ONCE at engine load from the bf16/f32 params:
+
+    scale_c = max_k |w[k, c]| / 127          (per output channel c)
+    q[k, c] = round(w[k, c] / scale_c)  in [-127, 127], int8
+    dequant(q, scale) = q.astype(f32) * scale
+
+Per-OUTPUT-channel is the scheme that keeps the contraction exact up to
+the rounding step: every element of output channel ``c`` is scaled by
+the same ``scale_c``, so dequantizing before the dot and scaling after
+it are mathematically equal — but NOT bitwise equal in finite
+arithmetic, which is why the XLA fallback and the oracle both dequantize
+BEFORE the contraction (KERNELS.md accuracy contract; the Pallas kernel
+dequantizes in-register, also before its MXU dot).
+
+:class:`QuantizedTensor` is a NamedTuple — a jax pytree whose leaves are
+``(q, scale)`` — with the scale keeping the contracted axes as size-1
+dims (``keepdims``). That is what lets the stacked per-layer weights
+``[L, ...]`` ride ``lax.scan`` unchanged: scan strips the leading axis
+of BOTH leaves together and the kept dims preserve the broadcast.
+
+Everything not on the decode matmul path stays in its source dtype:
+norms, biases, the MoE router/experts, and the embedding TABLE (tied
+models still gather token embeddings from the raw table; only the
+unembed/lm-head view of it is quantized, stored under ``"head_q"``).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+
+#: weight dtypes the decode path accepts (DecodeConfig.weight_dtype)
+WEIGHT_DTYPES = ("bf16", "int8")
+
+
+class QuantizedTensor(NamedTuple):
+    """Symmetric per-channel int8 weight: ``dequant = q.f32 * scale``.
+
+    ``q`` keeps the source weight's shape; ``scale`` keeps its RANK
+    (contracted axes as size-1 dims), so a stacked ``[L, ...]`` layer
+    weight unstacks under ``lax.scan`` with its scale still aligned.
+    NamedTuple registration makes it a pytree — ``tree_map`` and jit
+    tracing see two leaves, and a params dict holding these compiles to
+    a DIFFERENT program than one holding raw arrays (the program-key
+    ``weight_dtype`` field makes that explicit at the cache layer).
+    """
+
+    q: jax.Array      # int8, source shape
+    scale: jax.Array  # f32, same rank, contracted dims size-1
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return self.q.shape
+
+
+def quantize_tensor(w: jax.Array, axis) -> QuantizedTensor:
+    """Symmetric int8 over ``axis`` (the contracted/input dims).
+
+    ``axis`` names the dims reduced by the matmul this weight feeds —
+    the scale is constant along them and per-channel along the rest.
+    All-zero channels get scale ``1`` (q is all zero there anyway), so
+    dequantization never divides by zero.
+    """
+    w = jnp.asarray(w, jnp.float32)
+    amax = jnp.max(jnp.abs(w), axis=axis, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0).astype(jnp.float32)
+    q = jnp.clip(jnp.round(w / scale), -127, 127).astype(jnp.int8)
+    return QuantizedTensor(q=q, scale=scale)
+
+
+def dequantize(qt: QuantizedTensor) -> jax.Array:
+    """The dequant oracle: f32, broadcast scale over the kept dims."""
+    return qt.q.astype(jnp.float32) * qt.scale
+
+
+def max_abs_error_bound(qt: QuantizedTensor) -> jax.Array:
+    """Elementwise |w - dequant(quantize(w))| <= scale/2 (round-half)."""
+    return 0.5 * qt.scale
+
+
+def _quantize_layer(lp: dict) -> dict:
+    """Quantize one (stacked) transformer layer's decode projections.
+
+    Stacked weights ``[L, in, out]`` reduce over the IN axis (``axis=-2``
+    works stacked or unstacked); everything else passes through.
+    """
+    out = dict(lp)
+    for k in ("wq", "wk", "wv", "wo"):
+        if k in out:
+            out[k] = quantize_tensor(out[k], axis=-2)
+    mlp = out.get("mlp")
+    if isinstance(mlp, dict) and "wi_gate" in mlp:
+        out["mlp"] = dict(
+            mlp,
+            wi_gate=quantize_tensor(mlp["wi_gate"], axis=-2),
+            wi_up=quantize_tensor(mlp["wi_up"], axis=-2),
+            wo=quantize_tensor(mlp["wo"], axis=-2),
+        )
+    return out
+
+
+def quantize_decode_params(params: dict, cfg: ModelConfig) -> dict:
+    """Int8-quantize every decode-path projection of ``params``.
+
+    Returns a NEW params dict (input untouched) where:
+
+    * ``layers``: wq/wk/wv/wo and the dense-MLP wi_gate/wi_up/wo become
+      :class:`QuantizedTensor` (per-output-channel, input axis reduced);
+      norms, biases, and MoE sub-trees pass through unchanged.
+    * untied head ``[d, V]``: quantized in place (per vocab column).
+    * tied embeddings: the raw ``embed`` table stays (token gathers need
+      it) and a ``head_q`` entry is ADDED — the ``[V, d]`` table
+      quantized per vocab ROW, which is the unembed's output channel.
+    """
+    assert cfg.family in ("dense", "moe", "vlm", "audio"), \
+        f"int8 decode path covers attention families, not {cfg.family}"
+    out = dict(params)
+    out["layers"] = _quantize_layer(params["layers"])
+    if cfg.tie_embeddings:
+        out["head_q"] = quantize_tensor(params["embed"], axis=-1)
+    elif "head" in params:
+        out["head"] = quantize_tensor(params["head"], axis=-2)
+    return out
+
+
+def is_quantized(params: dict) -> bool:
+    """True when ``quantize_decode_params`` already ran on this tree."""
+    layers = params.get("layers", {})
+    return isinstance(layers.get("wq"), QuantizedTensor) \
+        or "head_q" in params
+
+
+def decode_weight_bytes(params: dict, cfg: ModelConfig) -> int:
+    """Bytes the decode forward streams for its weights, as stored.
+
+    One ``block_step`` + head reads every decode-path weight leaf once;
+    quantized leaves count their int8 payload PLUS the f32 scale vector
+    (that is the honest streamed footprint — the bandwidth the roofline
+    ``weight_dtype`` axis models). The tied embedding table counts once:
+    as ``head_q`` when quantized (the gather reads O(tokens) rows, not
+    the table).
+    """
+    head = params.get("head_q", params.get("embed")) if cfg.tie_embeddings \
+        else params.get("head")
+    leaves = jax.tree_util.tree_leaves(
+        (params["layers"], params.get("final_norm"), head))
+    return sum(int(x.size) * int(jnp.dtype(x.dtype).itemsize)
+               for x in leaves)

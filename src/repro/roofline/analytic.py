@@ -193,8 +193,8 @@ STEP_VARIANTS = tuple(
 
 def step_time_model(cfg: ModelConfig, *, batch: int, ctx: int,
                     block_size: int, hw: HWSpec = HWSpec(),
-                    avg_fill: float = 0.5,
-                    page_size: int = 16) -> dict:
+                    avg_fill: float = 0.5, page_size: int = 16,
+                    weight_dtype: str = "bf16") -> dict:
     """First-order µs per denoising step for every decode variant.
 
     One step = one ``block_step`` forward over ``batch`` rows x
@@ -218,9 +218,18 @@ def step_time_model(cfg: ModelConfig, *, batch: int, ctx: int,
 
     ``bound`` names the roofline term the variant sits on (``compute`` /
     ``memory``), or ``dispatch`` when launch overhead exceeds both.
+
+    ``weight_dtype`` prices the weight-stream terms: "int8"
+    (``models.quantize`` decode quantization) streams every projection
+    and lm-head tile at 1 byte/weight plus the f32 per-output-channel
+    scale vectors; compute terms are unchanged (dequant rides the
+    stream). The "bf16" default reproduces the pre-quantization model
+    exactly.
     """
     assert cfg.family in ("dense", "moe", "vlm", "audio"), cfg.family
+    assert weight_dtype in ("bf16", "int8"), weight_dtype
     by = _bytes(cfg)
+    wby = 1 if weight_dtype == "int8" else by  # weight-stream bytes/elt
     d, hd = cfg.d_model, cfg.resolved_head_dim
     H, K = cfg.num_heads, cfg.num_kv_heads
     V, F, L = cfg.vocab_size, cfg.d_ff, cfg.num_layers
@@ -236,7 +245,7 @@ def step_time_model(cfg: ModelConfig, *, batch: int, ctx: int,
         fl = L * 2.0 * tokens * d * (2 * H * hd + kd)        # qkv + o proj
         fl += L * 2.0 * 2.0 * tokens * ctx_eff * H * hd      # scores + AV
         fl += L * 2.0 * 3.0 * tokens * d * F                 # gated mlp
-        hbm = (cfg.param_count() - V * d) * by               # weight stream
+        hbm = (cfg.param_count() - V * d) * wby              # weight stream
         hbm += 12.0 * L * tokens * d * by                    # residual io
         hbm += L * batch * ctx_eff * kd * by                 # kv cache read
         hbm += L * tokens * kd * by                          # fresh block rw
@@ -246,7 +255,11 @@ def step_time_model(cfg: ModelConfig, *, batch: int, ctx: int,
         # --- epilogue: head matmul + confidence + threshold ---
         fl += 2.0 * tokens * d * V                           # lm head
         fl += 4.0 * tokens * V                               # max/exp/sum/cmp
-        hbm += V * d * by + tokens * d * 4                   # head w + x
+        hbm += V * d * wby + tokens * d * 4                  # head w + x
+        if weight_dtype == "int8":
+            # f32 per-output-channel scales: qkv/o + gated mlp, + head
+            ch = L * (H * hd + 2 * K * hd + 2 * d + 2 * F) + V
+            hbm += ch * 4
         if fusion == "unfused":
             hbm += 2.0 * tokens * V * 4                      # logits w+r
             hbm += 3.0 * tokens * 12                         # conf/tok/above

@@ -148,6 +148,19 @@ def step_table() -> str:
     if not found:
         return ("(no roofline/step_us_model rows — run "
                 "`python -m benchmarks.run fused_step` first)")
+    qprefix = "roofline/step_us_model_int8/"
+    qnames = [n for n in sorted(rows) if n.startswith(qprefix)]
+    if qnames:
+        lines += ["", "int8 weight streaming "
+                  "(`benchmarks/quantized_decode.py`):", "",
+                  "| layout | rows | epilogue | model µs/step | bound | "
+                  "dispatches |", "|---|---|---|---|---|---|"]
+        for name in qnames:
+            layout, geom, fusion = name[len(qprefix):].split("/")
+            us, derived = rows[name]
+            bound, _, disp = derived.partition("_bound_d")
+            lines.append(f"| {layout} | {geom} | {fusion} | {us} | "
+                         f"{bound} | {disp} |")
     lines += ["", "measured epilogue (CPU container; real kernel timing "
               "needs a TPU):", ""]
     for key in ("fused_step/unfused_epilogue", "fused_step/fused_epilogue",

@@ -79,6 +79,8 @@ from repro.core.osdt import CalibrationStore
 from repro.data import tokenizer as tok
 from repro.models import model as M
 from repro.models.cache import PageAllocator, RadixPrefixCache
+from repro.models.quantize import (WEIGHT_DTYPES, decode_weight_bytes,
+                                   is_quantized, quantize_decode_params)
 from repro.spec.drafter import Drafter
 
 DEAD_TASK = "__dead__"  # pseudo-task of pad slots (resolves to the static table)
@@ -192,6 +194,9 @@ class EngineStats:
     batches: int = 0
     dead_slots: int = 0
     seq_steps: int = 0       # sum of per-row live denoising steps
+    weight_bytes_streamed: int = 0  # decode-weight bytes read across all
+    #                           forwards (nfe x the resident footprint —
+    #                           int8 engines stream ~1/4 the f32 bytes)
     # paged layout occupancy (all 0 under the dense layout)
     page_capacity: int = 0   # total pool pages
     pages_peak: int = 0      # max pages simultaneously allocated
@@ -296,6 +301,16 @@ class Scheduler:
         self.dcfg = dcfg
         self.ecfg = ecfg if ecfg is not None else EngineConfig()
         mode = self.ecfg.resolved_cache_mode()
+        # weight streaming dtype: quantize ONCE at load (before the page
+        # pool's shared prefill — every forward thereafter streams the
+        # int8 tiles), and price each forward's weight traffic for the
+        # ``weight_bytes_streamed`` stat
+        self.weight_dtype = self.ecfg.weight_dtype or dcfg.weight_dtype \
+            or "bf16"
+        assert self.weight_dtype in WEIGHT_DTYPES, self.weight_dtype
+        if self.weight_dtype == "int8" and not is_quantized(self.params):
+            self.params = quantize_decode_params(params, cfg)
+        self._decode_w_bytes = decode_weight_bytes(self.params, cfg)
         if store is not None:
             # an explicitly passed store wins over any on-disk npz (which
             # the next calibration's save() will then overwrite)
@@ -357,7 +372,8 @@ class Scheduler:
             cfg, dcfg, cache_mode=mode, attn_impl=self.ecfg.attn_impl,
             cache_layout="paged" if self.paged else "dense",
             shared_prefix_len=self.shared_len if self.paged else 0,
-            variant="draft" if self.spec else "step")
+            variant="draft" if self.spec else "step",
+            weight_dtype=self.weight_dtype)
 
         # step-sliced decode loop (SERVING.md "Async admission")
         self.slice_len = int(self.ecfg.slice_len)
@@ -371,9 +387,17 @@ class Scheduler:
                       else 0)
             self._slice_fn = make_slice_fn(
                 cfg, dcfg, slice_len=self.slice_len,
-                variant="draft" if self.spec else "step", **kw)
+                variant="draft" if self.spec else "step",
+                weight_dtype=self.weight_dtype, **kw)
             self._admit_fn = make_admit_fn(cfg, dcfg, **kw) \
                 if mode != "none" else None
+
+    def _count_nfe(self, n: int) -> None:
+        """Every counted forward streams the decode weight set once —
+        ``weight_bytes_streamed`` is the engine's HBM weight-traffic
+        ledger (int8 engines read ~1/4 the f32 bytes per forward)."""
+        self.stats.nfe += n
+        self.stats.weight_bytes_streamed += n * self._decode_w_bytes
 
     # -- page pool (paged layout; SERVING.md "Paged KV") ----------------
     def _init_page_pool(self, mode: str) -> None:
@@ -414,7 +438,7 @@ class Scheduler:
                                  cache=cache, page_size=ps)
             self._pool_k = cache["attn"]["kp"]
             self._pool_v = cache["attn"]["vp"]
-            self.stats.nfe += 1  # the one-time shared-prefix forward
+            self._count_nfe(1)  # the one-time shared-prefix forward
             self.stats.prefill_nfe += 1
         if self.prefix_cache:
             # the tree owns prefix pages WITHIN this pool; a rebuilt
@@ -601,7 +625,7 @@ class Scheduler:
                                & reach).sum())
                 self.stats.nfe_saved += skipped - 2
             self.stats.requests += len(picked)
-            self.stats.nfe += int(res.nfe)
+            self._count_nfe(int(res.nfe))
             self.stats.prefill_nfe += 1  # the batch's fused prefill
             self.stats.wall_s += decode_s
             self.stats.batches += 1
@@ -779,7 +803,7 @@ class Scheduler:
                 kp, vp = prog(self.params, tokens, kv["kp"], kv["vp"],
                               jnp.asarray(spt))
             self._put_kv(kp, vp)
-            self.stats.nfe += 1
+            self._count_nfe(1)
             self.stats.prefill_nfe += 1
             return pages
         except BaseException:
@@ -1086,7 +1110,7 @@ class Scheduler:
         self.stats.wall_s += wall
         self.stats.slices += 1
         nfe_now = int(np.asarray(self._carry.nfe))
-        self.stats.nfe += nfe_now - self._nfe_seen
+        self._count_nfe(nfe_now - self._nfe_seen)
         self._nfe_seen = nfe_now
         for slot in active:
             slot.decode_s += wall

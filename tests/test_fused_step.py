@@ -218,14 +218,28 @@ def test_sliced_fused_bit_identity(small_model, prompts, mode, layout):
     assert int(base.nfe) == int(carry.nfe)
 
 
-def test_fused_rejects_quota_baseline(small_model):
-    """The fused epilogue implements the threshold rule only — asking for
-    it with the quota (fixed-step) baseline must refuse loudly."""
-    cfg, _ = small_model
-    with pytest.raises(AssertionError):
-        make_generate_fn(cfg, DCFG, quota=2, step_fusion="fused")
-    with pytest.raises(AssertionError):
-        make_slice_fn(cfg, DCFG, slice_len=1, quota=2, step_fusion="fused")
+@pytest.mark.parametrize("quota", [1, 2])
+def test_generate_quota_fused_bit_identity(small_model, prompts, quota):
+    """The fused epilogue now carries the quota (fixed-step) baseline
+    too: in-kernel per-row top-k over each block's masked confidences,
+    bit-identical to the unfused stable-argsort rule — same tokens,
+    conf, seq_steps, nfe."""
+    cfg, params = small_model
+    table = jnp.asarray(policies.static_table(DCFG))
+    mask = jnp.asarray(3, jnp.int32)
+    base = make_generate_fn(cfg, DCFG, quota=quota)(
+        params, prompts, table, mask, None, None)
+    fused = make_generate_fn(cfg, DCFG, quota=quota, step_fusion="fused")(
+        params, prompts, table, mask, None, None)
+    np.testing.assert_array_equal(np.asarray(base.tokens),
+                                  np.asarray(fused.tokens))
+    np.testing.assert_array_equal(np.asarray(base.conf),
+                                  np.asarray(fused.conf))
+    np.testing.assert_array_equal(np.asarray(base.seq_steps),
+                                  np.asarray(fused.seq_steps))
+    assert int(base.nfe) == int(fused.nfe) > 0
+    # the sliced family accepts the combination too (it refused pre-int8)
+    make_slice_fn(cfg, DCFG, slice_len=1, quota=quota, step_fusion="fused")
 
 
 # ---------------------------------------------------------------------------
