@@ -17,7 +17,7 @@ from typing import List
 
 from benchmarks import (async_admission, block_attn, cache_modes,
                         fig1_confidence, fig2_cosine, fig3_5_sweep,
-                        fused_step, kernels_bench, paged_kv,
+                        fused_step, kernels_bench, observability, paged_kv,
                         prefix_cache, quantized_decode, scheduler_bench,
                         spec_decode, table1_compare)
 
@@ -36,7 +36,43 @@ BENCHES = {
     "async_admission": async_admission.run,
     "prefix_cache": prefix_cache.run,
     "quant": quantized_decode.run,
+    "obs": observability.run,
 }
+
+
+def _provenance() -> dict:
+    """Environment stamp for every bench artifact: *which* code, runtime,
+    machine, and bench-model produced these numbers. A row that can't be
+    traced to its producer can't be compared across PRs."""
+    import socket
+    import subprocess
+
+    import jax
+
+    from benchmarks.common import CKPT
+    try:
+        sha = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                             capture_output=True, text=True, timeout=10,
+                             cwd=Path(__file__).resolve().parent
+                             ).stdout.strip() or "unknown"
+    except OSError:
+        sha = "unknown"
+    steps = None
+    if CKPT.exists():
+        try:
+            from repro.checkpoint.checkpoint import peek_meta
+            steps = peek_meta(str(CKPT)).get("steps")
+        except Exception:
+            steps = None
+    return {"git_sha": sha, "jax": jax.__version__,
+            "backend": jax.default_backend(),
+            "host": socket.gethostname(),
+            "bench_model_train_steps": steps}
+
+
+def _prov_row(bench: str, prov: dict) -> str:
+    kv = ";".join(f"{k}={v}" for k, v in sorted(prov.items()))
+    return f"provenance/{bench},0,{kv}"
 
 
 def _merge(out: Path, rows: List[str]) -> List[str]:
@@ -53,7 +89,8 @@ def _merge(out: Path, rows: List[str]) -> List[str]:
     return merged
 
 
-def _bench_json(exp_dir: Path, name: str, rows: List[str]) -> None:
+def _bench_json(exp_dir: Path, name: str, rows: List[str],
+                prov: dict) -> None:
     """experiments/BENCH_<name>.json: the bench's rows as records —
     the per-bench artifact CI and notebooks consume without parsing the
     merged csv."""
@@ -64,7 +101,8 @@ def _bench_json(exp_dir: Path, name: str, rows: List[str]) -> None:
                      "us_per_call": parts[1] if len(parts) > 1 else "",
                      "derived": parts[2] if len(parts) > 2 else ""})
     (exp_dir / f"BENCH_{name}.json").write_text(
-        json.dumps({"bench": name, "rows": recs}, indent=1) + "\n")
+        json.dumps({"bench": name, "provenance": prov, "rows": recs},
+                   indent=1) + "\n")
 
 
 def main() -> None:
@@ -76,7 +114,12 @@ def main() -> None:
     for name in which:
         n0 = len(rows)
         BENCHES[name](rows, verbose=True)
-        _bench_json(exp_dir, name, rows[n0:])
+        # stamp AFTER the bench ran: common.get_model may have just
+        # (re)trained the bench checkpoint this stamp describes
+        prov = _provenance()
+        _bench_json(exp_dir, name, rows[n0:], prov)
+        rows.append(_prov_row(name, prov))
+        print(rows[-1])
     out = exp_dir / "bench_results.csv"
     merged = _merge(out, rows)
     out.write_text("name,us_per_call,derived\n" + "\n".join(merged) + "\n")

@@ -36,6 +36,15 @@ def save(path: str, tree, meta: Optional[dict] = None) -> None:
     os.replace(tmp, path)
 
 
+def peek_meta(path: str) -> dict:
+    """Read just the ``__meta__`` dict of a checkpoint — no array
+    reconstruction, no structure to restore into. Used for provenance
+    stamping (bench artifacts record the bench model's train steps)."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    return payload.get("__meta__", {}) or {}
+
+
 def restore(path: str, like) -> Tuple[Any, dict]:
     """Restore into the structure of ``like`` (a pytree of arrays or
     ShapeDtypeStructs). Returns (tree, meta)."""

@@ -317,6 +317,21 @@ class EngineConfig:
     # pages an admission immediately needs — eviction at admission frees
     # down to (need + watermark * capacity) before load-shedding kicks in
     prefix_cache_watermark: float = 0.0
+    # observability (SERVING.md "Observability") — all off by default;
+    # the disabled engine's decode output and EngineStats are
+    # bit-identical to a build without the subsystem:
+    # record request-lifecycle / dispatch spans in a ring buffer
+    # (Tracer), exported as Chrome/Perfetto trace_event JSON
+    trace: bool = False
+    trace_capacity: int = 1 << 16
+    # score every retired row's confidence trajectory against the
+    # task's stored CalibrationProfile (obs.drift.DriftMonitor); a task
+    # whose windowed mean cosine drops below drift_threshold trips the
+    # staleness flag — the re-calibration trigger for the future
+    # online-refinement loop
+    drift_telemetry: bool = False
+    drift_threshold: float = 0.95
+    drift_window: int = 32
 
     def resolved_cache_mode(self) -> str:
         assert self.cache_mode in ("prefix", "dual", "none"), self.cache_mode

@@ -53,6 +53,12 @@ class GenerateResult(NamedTuple):
     live: Array          # [B] bool — row still live at exit (no EOS seen)
     blocks_drafted: Array   # [B] int32 — blocks speculatively drafted
     blocks_accepted: Array  # [B] int32 — drafted blocks that verified
+    # confidence-drift telemetry (obs.drift): accumulated in-program so
+    # the host drains them at slice boundaries only — no per-step sync
+    thr_steps: Array = None     # [B, nb] i32 — steps where >=1 position
+    #                             cleared tau outright (no fallback)
+    margin_sum: Array = None    # [B, nb] f32 — sum (conf - tau) cleared
+    margin_n: Array = None      # [B, nb] i32 — cleared positions
 
 
 def _threshold_fallback(conf: Array, masked: Array, above: Array,
@@ -224,6 +230,9 @@ def _make_generate_fn(cfg: ModelConfig, dcfg: DecodeConfig, quota: int,
         val_rec = jnp.zeros((B, nb, sc, bs), bool)
         steps_used = jnp.zeros((nb,), jnp.int32)
         seq_steps0 = jnp.zeros((B, nb), jnp.int32)
+        thr0 = jnp.zeros((B, nb), jnp.int32)
+        msum0 = jnp.zeros((B, nb), jnp.float32)
+        mn0 = jnp.zeros((B, nb), jnp.int32)
         nfe = jnp.zeros((), jnp.int32)
 
         if use_cache:
@@ -322,7 +331,7 @@ def _make_generate_fn(cfg: ModelConfig, dcfg: DecodeConfig, quota: int,
 
         def block_body(b, carry):
             resp, cache, nfe, conf_rec, val_rec, steps_used, live, \
-                seq_steps = carry
+                seq_steps, thr_steps, margin_sum, margin_n = carry
             start = b * bs
             block0 = jax.lax.dynamic_slice(resp, (jnp.zeros((), jnp.int32),
                                                   start), (B, bs))
@@ -378,7 +387,8 @@ def _make_generate_fn(cfg: ModelConfig, dcfg: DecodeConfig, quota: int,
                                              & live[:, None])
 
             def step_fn(st):
-                block, step, resp, nfe, conf_rec, val_rec, seq_steps = st
+                block, step, resp, nfe, conf_rec, val_rec, seq_steps, \
+                    thr_steps, margin_sum, margin_n = st
                 masked = block == mask_id
                 row_active = live & jnp.any(masked, axis=-1)
                 tau = table[:, b, jnp.minimum(step, sc - 1)]  # [B]
@@ -415,14 +425,28 @@ def _make_generate_fn(cfg: ModelConfig, dcfg: DecodeConfig, quota: int,
                     val_rec, rec[:, None, None, :], (z0, b, step, z0))
                 seq_steps = seq_steps.at[:, b].add(
                     row_active.astype(jnp.int32))
+                # drift telemetry (obs.drift): which live masked positions
+                # cleared tau outright, and by how much — same verdict the
+                # threshold rule used, re-derived from (conf, tau) so the
+                # fused and unfused programs accumulate identical values
+                above_t = (jnp.where(masked, conf, -jnp.inf)
+                           > tau[:, None]) & live[:, None]
+                thr_steps = thr_steps.at[:, b].add(
+                    jnp.any(above_t, axis=-1).astype(jnp.int32))
+                margin_sum = margin_sum.at[:, b].add(
+                    jnp.where(above_t, conf - tau[:, None], 0.0)
+                    .sum(axis=-1))
+                margin_n = margin_n.at[:, b].add(
+                    above_t.sum(axis=-1).astype(jnp.int32))
                 return (new_block, step + 1, new_resp, nfe + 1, conf_rec,
-                        val_rec, seq_steps)
+                        val_rec, seq_steps, thr_steps, margin_sum,
+                        margin_n)
 
-            block, steps, resp, nfe, conf_rec, val_rec, seq_steps = \
-                jax.lax.while_loop(
+            block, steps, resp, nfe, conf_rec, val_rec, seq_steps, \
+                thr_steps, margin_sum, margin_n = jax.lax.while_loop(
                     cond_fn, step_fn,
                     (block0, jnp.zeros((), jnp.int32), resp, nfe, conf_rec,
-                     val_rec, seq_steps))
+                     val_rec, seq_steps, thr_steps, margin_sum, margin_n))
             steps_used = steps_used.at[b].set(steps)
 
             if track_eos:
@@ -445,14 +469,16 @@ def _make_generate_fn(cfg: ModelConfig, dcfg: DecodeConfig, quota: int,
                 cache, nfe = jax.lax.cond(
                     jnp.any(live), commit, lambda c, n: (c, n), cache, nfe)
             return (resp, cache, nfe, conf_rec, val_rec, steps_used, live,
-                    seq_steps)
+                    seq_steps, thr_steps, margin_sum, margin_n)
 
         carry = (resp, cache0, nfe, conf_rec, val_rec, steps_used, live0,
-                 seq_steps0)
-        resp, _, nfe, conf_rec, val_rec, steps_used, live_out, seq_steps = \
+                 seq_steps0, thr0, msum0, mn0)
+        resp, _, nfe, conf_rec, val_rec, steps_used, live_out, seq_steps, \
+            thr_steps, margin_sum, margin_n = \
             jax.lax.fori_loop(0, nb, block_body, carry)
         return GenerateResult(resp, nfe, conf_rec, val_rec, steps_used,
-                              seq_steps, live_out, drafted_ct, accepted_ct)
+                              seq_steps, live_out, drafted_ct, accepted_ct,
+                              thr_steps, margin_sum, margin_n)
 
     return jax.jit(gen)
 
@@ -515,6 +541,11 @@ class DecodeCarry(NamedTuple):
     blocks_drafted: Array   # [B] int32
     blocks_accepted: Array  # [B] int32
     cache: Any           # KV cache dict ({"attn": ...}) or None
+    # drift telemetry (obs.drift) — see GenerateResult; carried so the
+    # host drains it at slice boundaries, zeroed per-row at admission
+    thr_steps: Array = None     # [B, nb] int32
+    margin_sum: Array = None    # [B, nb] float32
+    margin_n: Array = None      # [B, nb] int32
 
     def result(self) -> GenerateResult:
         """The accumulated state in ``GenerateResult`` form, so
@@ -522,7 +553,9 @@ class DecodeCarry(NamedTuple):
         return GenerateResult(self.resp, self.nfe, self.conf,
                               self.conf_valid, self.steps_used,
                               self.seq_steps, self.live,
-                              self.blocks_drafted, self.blocks_accepted)
+                              self.blocks_drafted, self.blocks_accepted,
+                              self.thr_steps, self.margin_sum,
+                              self.margin_n)
 
 
 def _norm_slice_key(cfg: ModelConfig, dcfg: DecodeConfig, use_cache: bool,
@@ -617,7 +650,10 @@ def init_decode_carry(cfg: ModelConfig, dcfg: DecodeConfig, *,
         nfe=jnp.zeros((), jnp.int32),
         blocks_drafted=jnp.zeros((B,), jnp.int32),
         blocks_accepted=jnp.zeros((B,), jnp.int32),
-        cache=cache)
+        cache=cache,
+        thr_steps=jnp.zeros((B, nb), jnp.int32),
+        margin_sum=jnp.zeros((B, nb), jnp.float32),
+        margin_n=jnp.zeros((B, nb), jnp.int32))
 
 
 @lru_cache(maxsize=None)
@@ -643,7 +679,10 @@ def _admit_rows_prog(bucket: int, has_pages: bool, mark: bool):
             blocks_drafted=carry.blocks_drafted.at[rows].set(
                 0, mode="drop"),
             blocks_accepted=carry.blocks_accepted.at[rows].set(
-                0, mode="drop"))
+                0, mode="drop"),
+            thr_steps=carry.thr_steps.at[rows].set(0, mode="drop"),
+            margin_sum=carry.margin_sum.at[rows].set(0.0, mode="drop"),
+            margin_n=carry.margin_n.at[rows].set(0, mode="drop"))
         if has_pages or mark:
             kv = dict(carry.cache["attn"])
             if has_pages:
@@ -1012,7 +1051,7 @@ def _make_slice_fn(cfg: ModelConfig, dcfg: DecodeConfig, slice_len: int,
 
         def iter_body(_, st):
             resp, cache, nfe, conf_rec, val_rec, steps_used, live, \
-                seq_steps, cursor = st
+                seq_steps, cursor, thr_steps, margin_sum, margin_n = st
             cur_c = jnp.minimum(cursor, nb - 1)       # [B] gather-safe
             todo = cursor < nb                        # [B]
             start = cur_c * bs                        # [B]
@@ -1070,7 +1109,8 @@ def _make_slice_fn(cfg: ModelConfig, dcfg: DecodeConfig, slice_len: int,
                                              & live[:, None])
 
             def step_fn(st):
-                block, step, resp, nfe, conf_rec, val_rec, seq_steps = st
+                block, step, resp, nfe, conf_rec, val_rec, seq_steps, \
+                    thr_steps, margin_sum, margin_n = st
                 masked = block == mask_id
                 row_active = live & jnp.any(masked, axis=-1)
                 tau = table[rows, cur_c, jnp.minimum(step, sc - 1)]  # [B]
@@ -1099,14 +1139,28 @@ def _make_slice_fn(cfg: ModelConfig, dcfg: DecodeConfig, slice_len: int,
                     rec, mode="drop")
                 seq_steps = seq_steps.at[rows, rec_blk].add(
                     row_active.astype(jnp.int32), mode="drop")
+                # drift telemetry — the sliced twin of the monolithic
+                # accumulators (per-row rec_blk scatter, finished rows
+                # drop), so slice-driven decode drains identical values
+                above_t = (jnp.where(masked, conf, -jnp.inf)
+                           > tau[:, None]) & live[:, None]
+                thr_steps = thr_steps.at[rows, rec_blk].add(
+                    jnp.any(above_t, axis=-1).astype(jnp.int32),
+                    mode="drop")
+                margin_sum = margin_sum.at[rows, rec_blk].add(
+                    jnp.where(above_t, conf - tau[:, None], 0.0)
+                    .sum(axis=-1), mode="drop")
+                margin_n = margin_n.at[rows, rec_blk].add(
+                    above_t.sum(axis=-1).astype(jnp.int32), mode="drop")
                 return (new_block, step + 1, new_resp, nfe + 1, conf_rec,
-                        val_rec, seq_steps)
+                        val_rec, seq_steps, thr_steps, margin_sum,
+                        margin_n)
 
-            block, steps, resp, nfe, conf_rec, val_rec, seq_steps = \
-                jax.lax.while_loop(
+            block, steps, resp, nfe, conf_rec, val_rec, seq_steps, \
+                thr_steps, margin_sum, margin_n = jax.lax.while_loop(
                     cond_fn, step_fn,
                     (block0, jnp.zeros((), jnp.int32), resp, nfe, conf_rec,
-                     val_rec, seq_steps))
+                     val_rec, seq_steps, thr_steps, margin_sum, margin_n))
             steps_used = steps_used.at[rec_blk].max(steps, mode="drop")
 
             if track_eos:
@@ -1133,17 +1187,20 @@ def _make_slice_fn(cfg: ModelConfig, dcfg: DecodeConfig, slice_len: int,
                     cache, nfe)
             cursor = jnp.minimum(cursor + 1, nb)
             return (resp, cache, nfe, conf_rec, val_rec, steps_used, live,
-                    seq_steps, cursor)
+                    seq_steps, cursor, thr_steps, margin_sum, margin_n)
 
         st = (resp, cache, nfe, carry.conf, carry.conf_valid,
-              carry.steps_used, live0, carry.seq_steps, cursor0)
+              carry.steps_used, live0, carry.seq_steps, cursor0,
+              carry.thr_steps, carry.margin_sum, carry.margin_n)
         resp, cache, nfe, conf_rec, val_rec, steps_used, live, seq_steps, \
-            cursor = jax.lax.fori_loop(0, slice_len, iter_body, st)
+            cursor, thr_steps, margin_sum, margin_n = \
+            jax.lax.fori_loop(0, slice_len, iter_body, st)
         return carry._replace(
             resp=resp, cache=cache, nfe=nfe, conf=conf_rec,
             conf_valid=val_rec, steps_used=steps_used, live=live,
             seq_steps=seq_steps, cursor=cursor,
-            blocks_drafted=drafted_ct, blocks_accepted=accepted_ct)
+            blocks_drafted=drafted_ct, blocks_accepted=accepted_ct,
+            thr_steps=thr_steps, margin_sum=margin_sum, margin_n=margin_n)
 
     return jax.jit(slice_fn, donate_argnums=(1,) if donate else ())
 

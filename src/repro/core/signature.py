@@ -39,3 +39,11 @@ def mean_offdiag_cosine(profiles: List[CalibrationProfile]) -> float:
 def trajectory(profile: CalibrationProfile) -> np.ndarray:
     """[num_blocks, steps_cap] mean-confidence trajectory (Fig 1)."""
     return profile.stepblock_means()
+
+
+def signature_cosine(ref: CalibrationProfile,
+                     live: CalibrationProfile) -> float:
+    """Cosine between two profiles' signatures — the pairwise entry of
+    :func:`cosine_matrix` that ``obs.drift.DriftMonitor`` tracks per
+    task (stored calibration profile vs a live generation)."""
+    return float(cosine_matrix([ref, live])[0, 1])

@@ -70,6 +70,22 @@ def main() -> None:
     ap.add_argument("--prefix-cache-watermark", type=float, default=0.0,
                     help="fraction of the pool eviction keeps free "
                          "beyond each admission's immediate need")
+    ap.add_argument("--trace-out", default="",
+                    help="write a Chrome/Perfetto trace_event JSON of the "
+                         "run here (enables the ring-buffer tracer; "
+                         "SERVING.md 'Observability')")
+    ap.add_argument("--trace-capacity", type=int, default=1 << 16,
+                    help="trace ring size in events (oldest evicted)")
+    ap.add_argument("--metrics", default="",
+                    help="write a Prometheus text-exposition snapshot of "
+                         "the engine's metrics registry here ('-' = stdout)")
+    ap.add_argument("--metrics-json", default="",
+                    help="write the full JSON snapshot (metrics + drift + "
+                         "measured dispatch timing) here")
+    ap.add_argument("--drift", action="store_true",
+                    help="confidence-drift telemetry: score each retiring "
+                         "row's live trajectory against the task's stored "
+                         "calibration profile and flag staleness")
     args = ap.parse_args()
 
     from benchmarks.common import bench_config
@@ -92,7 +108,10 @@ def main() -> None:
                         slice_len=args.slice_len,
                         prefix_cache=args.prefix_cache,
                         prefix_cache_pages=args.prefix_cache_pages,
-                        prefix_cache_watermark=args.prefix_cache_watermark)
+                        prefix_cache_watermark=args.prefix_cache_watermark,
+                        trace=bool(args.trace_out),
+                        trace_capacity=args.trace_capacity,
+                        drift_telemetry=args.drift)
     engine = DiffusionEngine(params, cfg, dcfg, ecfg=ecfg)
     rng = np.random.default_rng(0)
     samples = TASKS[args.task].make(rng, args.n)
@@ -128,6 +147,33 @@ def main() -> None:
               f"mid-generation admits, queue p95 "
               f"{np.percentile(q, 95) * 1e3:.1f}ms, ttfb p95 "
               f"{np.percentile(ttfb, 95) * 1e3:.1f}ms")
+    obs = engine.obs
+    if args.drift and obs.drift is not None:
+        for task, row in sorted(obs.drift.snapshot().items()):
+            print(f"# drift[{task}]: cosine={row['cosine']:.4f} "
+                  f"score={row['drift']:.4f} stale={row['stale']} "
+                  f"obs={row['observations']} "
+                  f"fallback={row['fallback_frac']:.2f} "
+                  f"margin={row['margin_mean']:.3f}")
+    if args.trace_out:
+        obs.save_trace(args.trace_out)
+        print(f"# trace: {len(obs.tracer.events())} events -> "
+              f"{args.trace_out}"
+              + (f" ({obs.tracer.dropped} dropped)"
+                 if obs.tracer.dropped else ""))
+    if args.metrics:
+        text = obs.prometheus()
+        if args.metrics == "-":
+            print(text, end="")
+        else:
+            with open(args.metrics, "w") as f:
+                f.write(text)
+            print(f"# metrics: {args.metrics}")
+    if args.metrics_json:
+        import json
+        with open(args.metrics_json, "w") as f:
+            json.dump(obs.snapshot(), f, indent=1, sort_keys=True)
+        print(f"# metrics json: {args.metrics_json}")
     for r in out[:3]:
         print(f"  [{r.uid}] {r.text!r}")
 

@@ -161,6 +161,19 @@ def step_table() -> str:
             bound, _, disp = derived.partition("_bound_d")
             lines.append(f"| {layout} | {geom} | {fusion} | {us} | "
                          f"{bound} | {disp} |")
+    mprefix = "roofline/step_us_measured/"
+    mnames = [n for n in sorted(rows) if n.startswith(mprefix)]
+    if mnames:
+        lines += ["", "measured dispatch wall (`obs.StepTimer` via "
+                  "`benchmarks/observability.py`; this container — model "
+                  "column above assumes tpu-v5e):", "",
+                  "| program | measured µs/forward | forwards | "
+                  "dispatches |", "|---|---|---|---|"]
+        for name in mnames:
+            us, derived = rows[name]
+            fwd, _, disp = derived.partition("_d")
+            lines.append(f"| {name[len(mprefix):]} | {us} | "
+                         f"{fwd.lstrip('f')} | {disp} |")
     lines += ["", "measured epilogue (CPU container; real kernel timing "
               "needs a TPU):", ""]
     for key in ("fused_step/unfused_epilogue", "fused_step/fused_epilogue",

@@ -84,6 +84,12 @@ class DiffusionEngine:
         return self.scheduler.stats
 
     @property
+    def obs(self):
+        """The scheduler's :class:`repro.obs.Observability` bundle
+        (tracer, metrics registry, drift monitor, dispatch timer)."""
+        return self.scheduler.obs
+
+    @property
     def sessions(self) -> Dict[str, TaskView]:
         """task → read-only calibration view, for every task ever admitted."""
         return {t: TaskView(self.store, t)

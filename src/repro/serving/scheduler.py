@@ -71,6 +71,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config.base import DecodeConfig, EngineConfig, ModelConfig
+from repro.core.calibrate import CalibrationProfile
 from repro.core.decoder import (admit_carry_rows, init_decode_carry,
                                 make_admit_fn, make_generate_fn,
                                 make_slice_fn, result_profile,
@@ -81,6 +82,8 @@ from repro.models import model as M
 from repro.models.cache import PageAllocator, RadixPrefixCache
 from repro.models.quantize import (WEIGHT_DTYPES, decode_weight_bytes,
                                    is_quantized, quantize_decode_params)
+from repro.obs import Observability
+from repro.obs.metrics import MetricsRegistry
 from repro.spec.drafter import Drafter
 
 DEAD_TASK = "__dead__"  # pseudo-task of pad slots (resolves to the static table)
@@ -183,51 +186,101 @@ class Slot:
         self.prefix_hit_pages = 0
 
 
-@dataclass
-class EngineStats:
-    requests: int = 0
-    tokens: int = 0          # delivered tokens (post-EOS truncation)
-    tokens_dropped: int = 0  # generated-but-truncated tokens
-    nfe: int = 0             # model forwards across all batches
-    wall_s: float = 0.0      # sum of batch decode walls
-    queue_s: float = 0.0     # sum of per-request queue waits
-    batches: int = 0
-    dead_slots: int = 0
-    seq_steps: int = 0       # sum of per-row live denoising steps
-    weight_bytes_streamed: int = 0  # decode-weight bytes read across all
-    #                           forwards (nfe x the resident footprint —
-    #                           int8 engines stream ~1/4 the f32 bytes)
+# EngineStats field spec: name -> (python type, help text). Every field
+# exports as a Prometheus GAUGE, not a counter — the failed-slice requeue
+# path backs admissions out with ``-=``, which a counter contract forbids.
+_STATS_FIELDS: Dict[str, tuple] = {
+    "requests": (int, "requests admitted"),
+    "tokens": (int, "delivered tokens (post-EOS truncation)"),
+    "tokens_dropped": (int, "generated-but-truncated tokens"),
+    "nfe": (int, "model forwards across all batches"),
+    "wall_s": (float, "sum of batch decode walls"),
+    "queue_s": (float, "sum of per-request queue waits"),
+    "batches": (int, "monolithic decode batches"),
+    "dead_slots": (int, "pad rows admitted dead"),
+    "seq_steps": (int, "sum of per-row live denoising steps"),
+    # nfe x the resident decode footprint — int8 engines stream ~1/4
+    # the f32 bytes per forward
+    "weight_bytes_streamed": (int, "decode-weight bytes read"),
     # paged layout occupancy (all 0 under the dense layout)
-    page_capacity: int = 0   # total pool pages
-    pages_peak: int = 0      # max pages simultaneously allocated
-    pages_shared: int = 0    # pages pinned by the shared prefix
-    pages_freed: int = 0     # private-page frees at retirement (reclaim)
+    "page_capacity": (int, "total pool pages"),
+    "pages_peak": (int, "max pages simultaneously allocated"),
+    "pages_shared": (int, "pages pinned by the shared prefix"),
+    "pages_freed": (int, "private-page frees at retirement"),
     # speculative drafting (all 0 with spec_decode off)
-    blocks_drafted: int = 0   # row-blocks flagged by the signature
-    blocks_accepted: int = 0  # ... that survived verification
-    draft_batches: int = 0    # batches that ran the draft+verify forwards
-    nfe_saved: int = 0        # forwards saved vs stepping (estimate: one
-    #                           per batch-block whose step loop never ran
-    #                           while some row was still live to reach
-    #                           it, minus the 2 draft forwards per batch;
-    #                           blocks past every row's EOS don't count)
+    "blocks_drafted": (int, "row-blocks flagged by the signature"),
+    "blocks_accepted": (int, "drafted blocks surviving verification"),
+    "draft_batches": (int, "batches running the draft+verify forwards"),
+    # estimate: one per batch-block whose step loop never ran while some
+    # row was still live to reach it, minus the 2 draft forwards per
+    # batch; blocks past every row's EOS don't count
+    "nfe_saved": (int, "forwards saved vs stepping (lower bound)"),
     # step-sliced decode (all 0 with slice_len == 0)
-    slices: int = 0           # compiled slice dispatches
-    mid_admits: int = 0       # requests admitted while the batch was
-    #                           already mid-generation (cursor > 0 rows
-    #                           present) — the async-admission payoff
-    ttfb_s: float = 0.0       # sum of per-request time-to-first-block
+    "slices": (int, "compiled slice dispatches"),
+    # the async-admission payoff: admitted while cursor > 0 rows present
+    "mid_admits": (int, "requests admitted mid-generation"),
+    "ttfb_s": (float, "sum of per-request time-to-first-block"),
     # radix prefix cache (all 0 with prefix_cache off)
-    prefix_hits: int = 0      # admissions that reused >= 1 tree node
-    prefix_misses: int = 0    # non-empty-prefix admissions reusing none
-    prefix_inserts: int = 0   # nodes adopted (seeds + promotions)
-    prefix_evictions: int = 0  # LRU nodes reclaimed under page pressure
-    prefix_hit_pages: int = 0  # tree pages served at admission
-    prefill_tokens_saved: int = 0  # prompt tokens those pages replaced
-    prefill_nfe: int = 0      # prefill forwards: admission + seeding +
-    #                           the one-time shared prefill; the radix
-    #                           cache's headline reduction (a full-hit
-    #                           admission skips its forward outright)
+    "prefix_hits": (int, "admissions that reused >= 1 tree node"),
+    "prefix_misses": (int, "non-empty-prefix admissions reusing none"),
+    "prefix_inserts": (int, "tree nodes adopted (seeds + promotions)"),
+    "prefix_evictions": (int, "LRU nodes reclaimed under page pressure"),
+    "prefix_hit_pages": (int, "tree pages served at admission"),
+    "prefill_tokens_saved": (int, "prompt tokens those pages replaced"),
+    # admission + seeding + the one-time shared prefill; the radix
+    # cache's headline reduction (a full-hit skips its forward outright)
+    "prefill_nfe": (int, "prefill forwards"),
+}
+
+
+class EngineStats:
+    """Engine counters — a typed VIEW over a ``MetricsRegistry``.
+
+    Field access reads/writes ``engine_<name>`` gauges in the backing
+    registry, so the scheduler's ledger IS the exported metric — one
+    source of truth, no snapshot copying, and ``obs.prometheus()`` /
+    ``snapshot()`` expose exactly what the stats report prints. The
+    attribute surface (every ``_STATS_FIELDS`` name plus the derived
+    properties) is unchanged from the former dataclass; reads come back
+    in the field's declared python type. SERVING.md "Stats glossary"
+    documents the semantics.
+    """
+
+    PREFIX = "engine_"
+
+    def __init__(self, registry=None):
+        reg = registry if registry is not None else MetricsRegistry()
+        gauges = {}
+        for name, (_, help) in _STATS_FIELDS.items():
+            g = reg.gauge(self.PREFIX + name, help)
+            g.set(0.0)
+            gauges[name] = g
+        object.__setattr__(self, "registry", reg)
+        object.__setattr__(self, "_g", gauges)
+
+    def __getattr__(self, name):  # fields only; properties hit the class
+        f = _STATS_FIELDS.get(name)
+        if f is None:
+            raise AttributeError(name)
+        return f[0](object.__getattribute__(self, "_g")[name].get())
+
+    def __setattr__(self, name, value):
+        g = object.__getattribute__(self, "_g").get(name)
+        if g is None:
+            raise AttributeError(f"unknown engine stat {name!r}")
+        g.set(float(value))
+
+    def as_dict(self) -> Dict[str, float]:
+        return {name: getattr(self, name) for name in _STATS_FIELDS}
+
+    def __eq__(self, other):
+        if not isinstance(other, EngineStats):
+            return NotImplemented
+        return self.as_dict() == other.as_dict()
+
+    def __repr__(self):
+        inner = ", ".join(f"{k}={v}" for k, v in self.as_dict().items())
+        return f"EngineStats({inner})"
 
     @property
     def tokens_per_s(self) -> float:
@@ -295,6 +348,7 @@ class Scheduler:
     def __init__(self, params, cfg: ModelConfig, dcfg: DecodeConfig, *,
                  ecfg: Optional[EngineConfig] = None,
                  store: Optional[CalibrationStore] = None,
+                 obs: Optional[Observability] = None,
                  mask_id: int = tok.MASK_ID, eos_id: int = tok.EOS_ID):
         self.params = params
         self.cfg = cfg
@@ -325,7 +379,17 @@ class Scheduler:
         self._mask_arr = jnp.asarray(mask_id, jnp.int32)
         self.queue: Deque[RequestState] = deque()
         self.slots = [Slot(i) for i in range(self.ecfg.batch_size)]
-        self.stats = EngineStats()
+        # observability bundle (SERVING.md "Observability"): the stats
+        # ledger is a view over its registry, so EngineStats and the
+        # Prometheus/JSON exports share one source of truth. Tracing and
+        # drift telemetry stay off unless EngineConfig opts in.
+        self.obs = obs if obs is not None else Observability.from_config(
+            self.ecfg, store=self.store)
+        self.stats = EngineStats(self.obs.registry)
+        self._h_queue = self.obs.registry.histogram(
+            "queue_wait_seconds", "submit -> admission wait per request")
+        self._h_dispatch = self.obs.registry.histogram(
+            "dispatch_seconds", "compiled decode dispatch wall")
         self.seen_tasks: Dict[str, int] = {}  # task -> requests admitted
 
         self.paged = dcfg.cache_layout == "paged" and mode != "none"
@@ -368,6 +432,14 @@ class Scheduler:
         self.drafter = Drafter(self.store, dcfg,
                                max_steps=self.ecfg.draft_max_steps) \
             if self.spec else None
+        # StepTimer key for measured dispatch walls — mirrors the
+        # roofline model's layout x runtime x epilogue axes
+        fusion = dcfg.step_fusion or "unfused"
+        if self.weight_dtype != "bf16":
+            fusion += f"-{self.weight_dtype}"
+        self._prog_kind = "/".join((
+            "paged" if self.paged else "dense",
+            "sliced" if self.ecfg.slice_len else "batch", fusion))
         self._gen = make_generate_fn(
             cfg, dcfg, cache_mode=mode, attn_impl=self.ecfg.attn_impl,
             cache_layout="paged" if self.paged else "dense",
@@ -459,8 +531,12 @@ class Scheduler:
         from the ARRIVAL time, not from when the driver thread got
         around to the call."""
         now = time.perf_counter() if at is None else at
+        tr = self.obs.tracer
         for r in requests:
             self.queue.append(RequestState(r, now))
+            if tr:
+                tr.abegin("request", r.uid, t=now, task=r.task)
+                tr.abegin("queued", r.uid, t=now)
 
     def pending(self) -> int:
         return len(self.queue)
@@ -498,6 +574,7 @@ class Scheduler:
         if not picked:
             return []
         P = self.ecfg.prompt_len
+        tr = self.obs.tracer
         now = time.perf_counter()
         for slot, rs in zip(self.slots, picked):
             rs.t_admit = now
@@ -510,6 +587,10 @@ class Scheduler:
                 _, pages = self.allocator.fork(self._shared_pages,
                                                self.private_per_slot)
             slot.admit(rs, pages)
+            if tr:
+                tr.aend("queued", rs.req.uid, t=now)
+                tr.begin("serve", tid=self.obs.slot_track(slot.index),
+                         t=now, uid=rs.req.uid, task=rs.req.task)
             self.seen_tasks[rs.req.task] = \
                 self.seen_tasks.get(rs.req.task, 0) + 1
         for slot in self.slots[len(picked):]:
@@ -547,8 +628,18 @@ class Scheduler:
             self.stats.pages_peak = max(self.stats.pages_peak,
                                         self.allocator.in_use)
 
+        served: set = set()   # slots whose serve span closed (trace)
+        batch_open = False
         try:
             t0 = time.perf_counter()
+            if tr:
+                tr.begin("batch", tid=0, t=t0, rows_live=len(picked),
+                         dead=n_dead,
+                         pages_in_use=self.allocator.in_use
+                         if self.paged else 0,
+                         draft_blocks=int(draft_mask.sum())
+                         if draft_mask is not None else 0)
+                batch_open = True
             args = (self.params, jnp.asarray(prompt), jnp.asarray(tables),
                     self._mask_arr, jnp.asarray(live),
                     self.eos_id if self.ecfg.eos_early_exit else None)
@@ -560,13 +651,21 @@ class Scheduler:
                 kwargs["draft_mask"] = jnp.asarray(draft_mask)
             res = self._gen(*args, **kwargs)
             tokens = np.asarray(res.tokens)  # blocks until ready
-            decode_s = time.perf_counter() - t0
+            t_end = time.perf_counter()
+            decode_s = t_end - t0
+            if tr:
+                tr.end("batch", tid=0, t=t_end, nfe=int(res.nfe))
+                batch_open = False
+            self.obs.timer.add(self._prog_kind, decode_s, int(res.nfe))
+            self._h_dispatch.observe(decode_s, kind="batch")
 
             for task, row in calib_rows.items():
                 # each new task calibrates from its own row's recording
                 # and step counts (not the batch-max, which ride-along
                 # rows of other tasks determine)
                 self.store.ingest(task, result_profile(res, row=row))
+                if tr:
+                    tr.instant("calibrate", t=t_end, task=task, row=row)
                 if self.drafter is not None:
                     self.drafter.invalidate(task)
             if calib_rows and self.ecfg.store_path:
@@ -575,6 +674,14 @@ class Scheduler:
             seq_steps = np.asarray(res.seq_steps)
             drafted = np.asarray(res.blocks_drafted)
             accepted = np.asarray(res.blocks_accepted)
+            drift = self.obs.drift
+            if drift is not None:
+                thr = np.asarray(res.thr_steps)
+                msum = np.asarray(res.margin_sum)
+                mn = np.asarray(res.margin_n)
+                # one batch conversion, not one per served row
+                conf_rec = np.asarray(res.conf)
+                val_rec = np.asarray(res.conf_valid)
             out: List[Response] = []
             for slot in self.slots:
                 if slot.rs is None:
@@ -601,6 +708,19 @@ class Scheduler:
                 self.stats.queue_s += queue_s
                 self.stats.ttfb_s += queue_s + decode_s
                 self.stats.seq_steps += steps
+                self._h_queue.observe(queue_s)
+                if drift is not None:
+                    drift.observe(rs.req.task,
+                                  CalibrationProfile(conf=conf_rec[j],
+                                                     valid=val_rec[j],
+                                                     steps=seq_steps[j]),
+                                  thr_steps=thr[j], seq_steps=seq_steps[j],
+                                  margin_sum=msum[j], margin_n=mn[j])
+                if tr:
+                    tr.end("serve", tid=self.obs.slot_track(j), t=t_end,
+                           tokens=len(row), nfe=steps)
+                    tr.aend("request", rs.req.uid, t=t_end)
+                    served.add(j)
             if draft_mask is not None and int(drafted.sum()) > 0:
                 self.stats.blocks_drafted += int(drafted.sum())
                 self.stats.blocks_accepted += int(accepted.sum())
@@ -634,8 +754,27 @@ class Scheduler:
             # a failed batch must not swallow its requests: put them
             # back at the head of the queue (FIFO order preserved) so a
             # retried run() can still serve every uid
+            if tr:
+                tr.instant("batch_failed", tid=0)
+                if batch_open:
+                    tr.end("batch", tid=0, error=True)
+                for slot in self.slots:
+                    if slot.rs is None:
+                        continue
+                    if slot.index in served:
+                        # its response was already emitted when the
+                        # failure hit; the requeue re-serves it, so
+                        # re-open the lifecycle span for balance
+                        tr.abegin("request", slot.rs.req.uid,
+                                  task=slot.rs.req.task)
+                    else:
+                        tr.end("serve",
+                               tid=self.obs.slot_track(slot.index),
+                               requeued=True)
             for rs in reversed(picked):
                 self.queue.appendleft(rs)
+                if tr:
+                    tr.abegin("queued", rs.req.uid)
             raise
         finally:
             # retire = reclaim, even when decode raises: a failed batch
@@ -754,8 +893,11 @@ class Scheduler:
                    * self.stats.page_capacity)
         want = need + head - self.allocator.available
         if want > 0:
-            n, _ = self.prefix_tree.evict(want)
+            n, freed = self.prefix_tree.evict(want)
             self.stats.prefix_evictions += n
+            if n and self.obs.tracer:
+                self.obs.tracer.instant("evict", tid=0, nodes=n,
+                                        pages=freed)
 
     def _live_kv(self) -> dict:
         """The pool the seed forward reads/writes: the live carry's (the
@@ -792,16 +934,24 @@ class Scheduler:
             tokens = jnp.asarray(ids[:end], jnp.int32)[None]
             prog = _seed_prefill_prog(self.cfg, self.max_len, ps, end,
                                       bool(start))
-            if start:
-                wpt = spt.copy()
-                wpt[0, :start // ps] = -1  # chain pages stay immutable
-                kp, vp = prog(self.params, tokens, kv["kp"], kv["vp"],
-                              jnp.asarray(spt),
-                              jnp.asarray([start], jnp.int32),
-                              jnp.asarray(wpt))
-            else:
-                kp, vp = prog(self.params, tokens, kv["kp"], kv["vp"],
-                              jnp.asarray(spt))
+            tr = self.obs.tracer
+            if tr:
+                tr.begin("seed_prefill", tid=0, start=start, end=end,
+                         pages=len(pages))
+            try:
+                if start:
+                    wpt = spt.copy()
+                    wpt[0, :start // ps] = -1  # chain pages stay immutable
+                    kp, vp = prog(self.params, tokens, kv["kp"], kv["vp"],
+                                  jnp.asarray(spt),
+                                  jnp.asarray([start], jnp.int32),
+                                  jnp.asarray(wpt))
+                else:
+                    kp, vp = prog(self.params, tokens, kv["kp"], kv["vp"],
+                                  jnp.asarray(spt))
+            finally:
+                if tr:
+                    tr.end("seed_prefill", tid=0)
             self._put_kv(kp, vp)
             self._count_nfe(1)
             self.stats.prefill_nfe += 1
@@ -904,6 +1054,12 @@ class Scheduler:
             if not self.store.calibrated(t) and t not in self._calibrating:
                 self._calibrating[t] = slot.index
                 slot.calib_task = t
+            if self.obs.tracer:
+                tr = self.obs.tracer
+                tr.aend("queued", rs.req.uid, t=now)
+                tr.begin("serve", tid=self.obs.slot_track(slot.index),
+                         t=now, uid=rs.req.uid, task=t, mid=mid_gen,
+                         prefix_len=slot.prefix_len)
             admitted.append(slot)
         if not admitted:
             return admitted
@@ -937,6 +1093,7 @@ class Scheduler:
         if self._admit_fn is not None:
             admit_mask = np.zeros((self.ecfg.batch_size,), bool)
             admit_mask[rows] = True
+            tr = self.obs.tracer
             if self.prefix_cache:
                 P = self.ecfg.prompt_len
                 if all(s.prefix_len == P for s in admitted):
@@ -944,16 +1101,26 @@ class Scheduler:
                     # every admitted row is already resident in tree
                     # pages (admit_carry_rows marked pos/length) — the
                     # composed forward would compute nothing fresh
+                    if tr:
+                        tr.instant("zero_prefill_admit", tid=0,
+                                   rows=len(admitted))
                     return admitted
-                pfx = np.zeros((self.ecfg.batch_size,), np.int32)
-                for s in admitted:
-                    pfx[s.index] = s.prefix_len
-                self._carry = self._admit_fn(self.params, self._carry,
-                                             jnp.asarray(admit_mask),
-                                             jnp.asarray(pfx))
-            else:
-                self._carry = self._admit_fn(self.params, self._carry,
-                                             jnp.asarray(admit_mask))
+            if tr:
+                tr.begin("admit_prefill", tid=0, rows=len(admitted))
+            try:
+                if self.prefix_cache:
+                    pfx = np.zeros((self.ecfg.batch_size,), np.int32)
+                    for s in admitted:
+                        pfx[s.index] = s.prefix_len
+                    self._carry = self._admit_fn(self.params, self._carry,
+                                                 jnp.asarray(admit_mask),
+                                                 jnp.asarray(pfx))
+                else:
+                    self._carry = self._admit_fn(self.params, self._carry,
+                                                 jnp.asarray(admit_mask))
+            finally:
+                if tr:
+                    tr.end("admit_prefill", tid=0)
             self.stats.prefill_nfe += 1
         return admitted
 
@@ -975,6 +1142,16 @@ class Scheduler:
         drafted = np.asarray(carry.blocks_drafted)
         accepted = np.asarray(carry.blocks_accepted)
         res = carry.result()
+        tr = self.obs.tracer
+        drift = self.obs.drift
+        if drift is not None:
+            thr = np.asarray(carry.thr_steps)
+            msum = np.asarray(carry.margin_sum)
+            mn = np.asarray(carry.margin_n)
+            # convert the batch recording ONCE — ``result_profile`` per
+            # row would re-pull the full device arrays per retirement
+            conf_rec = np.asarray(res.conf)
+            val_rec = np.asarray(res.conf_valid)
         out: List[Response] = []
         for slot in done:
             j, rs = slot.index, slot.rs
@@ -1008,6 +1185,18 @@ class Scheduler:
             self.stats.queue_s += queue_s
             self.stats.ttfb_s += slot.ttfb_s
             self.stats.seq_steps += steps
+            self._h_queue.observe(queue_s)
+            if drift is not None:
+                drift.observe(rs.req.task,
+                              CalibrationProfile(conf=conf_rec[j],
+                                                 valid=val_rec[j],
+                                                 steps=seq_steps[j]),
+                              thr_steps=thr[j], seq_steps=seq_steps[j],
+                              margin_sum=msum[j], margin_n=mn[j])
+            if tr:
+                tr.end("serve", tid=self.obs.slot_track(j),
+                       tokens=len(row), nfe=steps)
+                tr.aend("request", rs.req.uid)
             # per-row draft counters reset at (re)admission and
             # accumulate over the row's lifetime: bank them here
             self.stats.blocks_drafted += int(drafted[j])
@@ -1029,6 +1218,9 @@ class Scheduler:
                             self._prompt_row(slot.rs),
                             slot.prefix_len, promo):
                         self.stats.prefix_inserts += 1
+                        if tr:
+                            tr.instant("promote", tid=0, uid=rs.req.uid,
+                                       pages=len(promo))
                         pages = pages[n_promo:]
                         n, _ = self.prefix_tree.trim()
                         self.stats.prefix_evictions += n
@@ -1066,8 +1258,17 @@ class Scheduler:
             if dm.any():
                 draft_mask = jnp.asarray(dm)
                 self.stats.draft_batches += 1
+        tr = self.obs.tracer
+        slice_open = False
         try:
             t0 = time.perf_counter()
+            if tr:
+                tr.begin("slice", tid=0, t=t0, rows_live=len(active),
+                         pages_in_use=self.allocator.in_use
+                         if self.paged else 0,
+                         draft_blocks=int(draft_mask.sum())
+                         if draft_mask is not None else 0)
+                slice_open = True
             self._carry = self._slice_fn(
                 self.params, self._carry, self._mask_arr,
                 self.eos_id if self.ecfg.eos_early_exit else None,
@@ -1079,8 +1280,16 @@ class Scheduler:
             # their pages: requeue FIFO (by submit time) and reclaim.
             # The retried admission re-counts the request and may
             # re-claim its calibration row, so back out both here.
+            if tr:
+                tr.instant("slice_failed", tid=0)
+                if slice_open:
+                    tr.end("slice", tid=0, error=True)
             for slot in sorted(active, key=lambda s: s.rs.t_submit,
                                reverse=True):
+                if tr:
+                    tr.end("serve", tid=self.obs.slot_track(slot.index),
+                           requeued=True)
+                    tr.abegin("queued", slot.rs.req.uid)
                 self.queue.appendleft(slot.rs)
                 self.stats.requests -= 1
                 if slot.was_mid:
@@ -1110,8 +1319,15 @@ class Scheduler:
         self.stats.wall_s += wall
         self.stats.slices += 1
         nfe_now = int(np.asarray(self._carry.nfe))
-        self._count_nfe(nfe_now - self._nfe_seen)
+        nfe_delta = nfe_now - self._nfe_seen
+        self._count_nfe(nfe_delta)
         self._nfe_seen = nfe_now
+        self.obs.timer.add(self._prog_kind, wall, nfe_delta)
+        self._h_dispatch.observe(wall, kind="slice")
+        if tr:
+            tr.end("slice", tid=0, t=t_end, nfe=nfe_delta)
+            if self.paged:
+                tr.counter("pages_in_use", self.allocator.in_use, t=t_end)
         for slot in active:
             slot.decode_s += wall
             if not slot.ttfb_s and cursor[slot.index] > 0:

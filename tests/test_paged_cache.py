@@ -539,6 +539,109 @@ def test_page_scarcity_limits_admission(small_model):
     assert sch.allocator.in_use == n_shared
 
 
+# ---------------------------------------------------------------------------
+# conservation audit: every page is free or named by exactly one ledger
+# ---------------------------------------------------------------------------
+
+def _audit_pages(sch):
+    """Page-conservation invariant, checkable at any slice boundary:
+    the pool balances (``num_pages == available + in_use``) and
+    ``in_use`` equals the de-duplicated union of every holder the
+    scheduler can name — the shared-prefix pin, radix-tree nodes, and
+    live slots' (prefix + private) page tables. A page in ``in_use``
+    with no holder is a leak; a holder naming a free page is a
+    use-after-free."""
+    a = sch.allocator
+    assert a.num_pages == a.available + a.in_use
+    held = set(sch._shared_pages)
+    if sch.prefix_tree is not None:
+        stack = list(sch.prefix_tree.root.children.values())
+        tree_pages = 0
+        while stack:
+            n = stack.pop()
+            held.update(n.pages)
+            tree_pages += len(n.pages)
+            stack.extend(n.children.values())
+        assert tree_pages == sch.prefix_tree.pages_pinned
+    for sl in sch.slots:
+        if sl.state == "active":
+            held.update(sl.pages or [])
+            held.update(sl.prefix_pages or [])
+    assert a.in_use == len(held), (a.in_use, sorted(held))
+    assert all(a.refcount(p) >= 1 for p in held)
+
+
+@pytest.mark.paged
+def test_page_conservation_across_prefix_lifecycle(small_model):
+    """Walk a prefix-cache sliced run under genuine eviction pressure —
+    admissions, retirements with tree promotion, LRU evictions, a warm
+    revisit, and one injected failed slice — auditing the pool at EVERY
+    slice boundary: pages allocated must always equal free + live +
+    tree-held, with shared/tree pages counted once however many rows
+    map them."""
+    cfg, params = small_model
+    ecfg = EngineConfig(batch_size=2, prompt_len=PROMPT_LEN, slice_len=1,
+                        prefix_cache=True, num_pages=12)
+    sch = Scheduler(params, cfg, DCFG_PAGED, ecfg=ecfg)
+    reqs = [Request(i, "t", f"question number {i}?") for i in range(5)]
+    reqs.append(Request(99, "t", "question number 0?"))  # warm revisit
+    sch.submit(reqs)
+    _audit_pages(sch)
+
+    out, boundaries, failed_at = [], 0, 3
+    while sch.pending() or any(s.state == "active" for s in sch.slots):
+        boundaries += 1
+        assert boundaries < 200, "queue failed to drain"
+        if boundaries == failed_at:
+            real = sch._slice_fn
+            sch._slice_fn = lambda *a, **k: (_ for _ in ()).throw(
+                RuntimeError("boom"))
+            with pytest.raises(RuntimeError):
+                sch.slice_step()
+            sch._slice_fn = real
+            _audit_pages(sch)  # requeue reclaimed, seeds kept, no leak
+            continue
+        out.extend(sch.slice_step())
+        _audit_pages(sch)
+    assert sorted(r.uid for r in out) == [0, 1, 2, 3, 4, 99]
+    assert sch.stats.prefix_evictions > 0  # the pressure was real
+    # rest state: only the tree (+ the shared pin, empty here) holds pages
+    assert sch.allocator.in_use == \
+        sch.prefix_tree.pages_pinned + len(sch._shared_pages)
+
+
+@pytest.mark.paged
+def test_failed_slice_exact_stats_backout(small_model):
+    """The failed-slice requeue must back the admission ledger out
+    EXACTLY: afterwards the stats equal the pre-submit snapshot except
+    the fields the (real) admission prefill moved — ``nfe`` /
+    ``weight_bytes_streamed`` / ``prefill_nfe`` — and ``pages_peak``,
+    a high-water mark that is never unwound."""
+    cfg, params = small_model
+    ecfg = EngineConfig(batch_size=2, prompt_len=32, slice_len=1,
+                        shared_prefix="SYSTEM: be terse. ")
+    sch = Scheduler(params, cfg, DCFG_PAGED, ecfg=ecfg)
+    n_shared = len(sch._shared_pages)
+    before = sch.stats.as_dict()
+    sch.submit([Request(i, "t", f"question {i}?") for i in range(2)])
+    real = sch._slice_fn
+    sch._slice_fn = lambda *a, **k: (_ for _ in ()).throw(
+        RuntimeError("boom"))
+    with pytest.raises(RuntimeError):
+        sch.slice_step()
+    after = sch.stats.as_dict()
+    moved = {"pages_peak", "nfe", "weight_bytes_streamed", "prefill_nfe"}
+    assert {k: v for k, v in after.items() if k not in moved} == \
+        {k: v for k, v in before.items() if k not in moved}
+    assert after["pages_peak"] >= before["pages_peak"]
+    assert sch.allocator.in_use == n_shared  # full page reclaim
+    assert sch.pending() == 2
+    sch._slice_fn = real
+    out = sch.run()                          # retry serves every uid
+    assert sorted(r.uid for r in out) == [0, 1]
+    assert sch.allocator.in_use == n_shared
+
+
 @pytest.mark.paged
 def test_shared_pages_equal_private_copies(small_model):
     """Mapping ONE set of shared-prefix pages into every row must decode

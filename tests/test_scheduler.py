@@ -181,6 +181,32 @@ def test_engine_stats_accounting(small_model, calibrated_store):
         assert r.nfe <= DCFG.num_blocks * DCFG.steps_cap
 
 
+def test_failed_batch_conserves_stats_ledger(small_model, calibrated_store):
+    """Monolithic ``step()`` mutates EngineStats only on success: after
+    an injected decode failure the ledger must equal its pre-step
+    snapshot EXACTLY (dense layout — no page watermark to move and no
+    admission prefill), the requests must be back at the queue head,
+    and a retry serves every uid with the usual accounting."""
+    cfg, params = small_model
+    ecfg = EngineConfig(batch_size=4, prompt_len=PROMPT_LEN)
+    sch = Scheduler(params, cfg, DCFG, ecfg=ecfg, store=calibrated_store)
+    sch.submit(_requests("alpha", 3))
+    before = sch.stats.as_dict()
+    real_gen = sch._gen
+    sch._gen = lambda *a, **k: (_ for _ in ()).throw(RuntimeError("boom"))
+    with pytest.raises(RuntimeError):
+        sch.step()
+    assert sch.stats.as_dict() == before     # conservation: exact
+    assert sch.pending() == 3                # nothing swallowed
+    assert all(s.state == "free" for s in sch.slots)
+    sch._gen = real_gen
+    out = sch.run()
+    assert sorted(r.uid for r in out) == [0, 1, 2]
+    st = sch.stats
+    assert st.requests == 3 and st.batches == 1 and st.dead_slots == 1
+    assert st.tokens == sum(r.tokens_out for r in out)
+
+
 # ---------------------------------------------------------------------------
 # calibration store persistence
 # ---------------------------------------------------------------------------
