@@ -19,7 +19,7 @@ from benchmarks import (async_admission, block_attn, cache_modes,
                         fig1_confidence, fig2_cosine, fig3_5_sweep,
                         fused_step, kernels_bench, observability, paged_kv,
                         prefix_cache, quantized_decode, scheduler_bench,
-                        spec_decode, table1_compare)
+                        sharded_serving, spec_decode, table1_compare)
 
 BENCHES = {
     "fig1": fig1_confidence.run,
@@ -37,6 +37,7 @@ BENCHES = {
     "prefix_cache": prefix_cache.run,
     "quant": quantized_decode.run,
     "obs": observability.run,
+    "mesh": sharded_serving.run,
 }
 
 

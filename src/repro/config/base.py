@@ -317,6 +317,19 @@ class EngineConfig:
     # pages an admission immediately needs — eviction at admission frees
     # down to (need + watermark * capacity) before load-shedding kicks in
     prefix_cache_watermark: float = 0.0
+    # mesh-sharded SPMD serving (SERVING.md "Sharded serving"): shard
+    # the decode batch over a ("data", "model") device mesh.
+    # data_parallel partitions the slot pool into per-shard groups (a
+    # request never straddles shards; batch_size and — paged — the page
+    # pool must divide evenly); model_parallel runs tensor-parallel
+    # decode through repro.sharding.rules' "serve" specs (dims that
+    # don't divide the axis replicate — the divisibility fallback).
+    # 1/1 keeps the single-device runtime bit-exactly. Sharded serving
+    # runs the step-sliced loop (slice_len >= 1): slice boundaries are
+    # the host-side exchange points, and only int32 metadata (retired
+    # slots, freed/shared page ids, calibration ingests) crosses them.
+    data_parallel: int = 1
+    model_parallel: int = 1
     # observability (SERVING.md "Observability") — all off by default;
     # the disabled engine's decode output and EngineStats are
     # bit-identical to a build without the subsystem:

@@ -599,18 +599,44 @@ def _donate_default() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def carry_shardings(carry: DecodeCarry, mesh):
+    """NamedSharding pytree for ``carry`` on the serving mesh — batch
+    dims over ``data``, paged-pool pages over ``data``, kv-heads (or
+    head_dim) over ``model``; see ``repro.sharding.rules.carry_specs``
+    for the full layout. ``carry`` may be the real pytree or its
+    ``eval_shape`` image."""
+    from repro.sharding import rules
+    return rules.to_named(rules.carry_specs(carry, mesh), mesh)
+
+
+def shard_decode_carry(carry: DecodeCarry, mesh) -> DecodeCarry:
+    """Place a carry on the serving mesh (identity when ``mesh`` is
+    ``None``). This is the ONLY mesh hook the decode loop needs: the
+    jitted slice/admit programs specialize on their inputs' shardings
+    (computation-follows-data), so every program factory in this module
+    stays mesh-free and the sharded runtime reuses the exact same
+    compiled-program cache keys as the single-device one."""
+    if mesh is None:
+        return carry
+    return jax.device_put(carry, carry_shardings(carry, mesh))
+
+
 def init_decode_carry(cfg: ModelConfig, dcfg: DecodeConfig, *,
                       batch: int, prompt_len: int, mask_id: int,
                       cache_mode: str = "prefix", cache_layout: str = "",
                       shared_prefix_len: int = 0,
                       pool_k: Optional[Array] = None,
                       pool_v: Optional[Array] = None,
-                      page_table: Optional[Array] = None) -> DecodeCarry:
+                      page_table: Optional[Array] = None,
+                      mesh=None) -> DecodeCarry:
     """A fresh all-dead carry (every slot free). The paged layout takes
     the engine-owned pool and the initial ``[B, n_log]`` page table
     (dead rows all ``-1``); a non-zero ``shared_prefix_len`` expects the
     pool's shared pages to be prefilled already (scheduler ctor) and
-    marks their slots valid exactly like the monolithic program."""
+    marks their slots valid exactly like the monolithic program. With a
+    ``mesh`` the fresh carry is placed per ``carry_shardings`` before
+    any program ever sees it, so the first slice compiles against the
+    sharded layout directly."""
     cache_mode, _, cache_layout, Sp, _, _ = _norm_slice_key(
         cfg, dcfg, True, cache_mode, "auto", cache_layout,
         shared_prefix_len, "step")
@@ -637,7 +663,7 @@ def init_decode_carry(cfg: ModelConfig, dcfg: DecodeConfig, *,
                 "pos": pos, "length": length}}
         else:
             cache = cache_lib.init_cache(cfg, B, max_len, dtype)
-    return DecodeCarry(
+    carry = DecodeCarry(
         resp=jnp.full((B, N), mask_id, jnp.int32),
         prompt=jnp.full((B, P), mask_id, jnp.int32),
         table=jnp.zeros((B, nb, sc), jnp.float32),
@@ -654,6 +680,7 @@ def init_decode_carry(cfg: ModelConfig, dcfg: DecodeConfig, *,
         thr_steps=jnp.zeros((B, nb), jnp.int32),
         margin_sum=jnp.zeros((B, nb), jnp.float32),
         margin_n=jnp.zeros((B, nb), jnp.int32))
+    return shard_decode_carry(carry, mesh)
 
 
 @lru_cache(maxsize=None)

@@ -24,6 +24,23 @@ def make_host_mesh(*, data: int = 2, model: int = 2):
     return jax.make_mesh((data, model), ("data", "model"))
 
 
+def make_serving_mesh(*, data: int = 1, model: int = 1):
+    """The serving runtime's ``("data", "model")`` mesh, or ``None`` for
+    the 1x1 degenerate case — the scheduler skips every device_put and
+    stays bit-identical to the pre-mesh runtime. Single-process today
+    (real chips on TPU, fake CPU devices under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count`` in CI); the
+    axis names match ``make_production_mesh`` so multi-process is a
+    mesh-construction swap, not a rules rewrite."""
+    if data <= 1 and model <= 1:
+        return None
+    n = len(jax.devices())
+    assert n >= data * model, \
+        f"serving mesh {data}x{model} needs {data * model} devices, " \
+        f"have {n}"
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
 # v5e hardware constants for the roofline (per chip)
 PEAK_FLOPS_BF16 = 197e12      # FLOP/s
 HBM_BW = 819e9                # B/s

@@ -70,6 +70,15 @@ def main() -> None:
     ap.add_argument("--prefix-cache-watermark", type=float, default=0.0,
                     help="fraction of the pool eviction keeps free "
                          "beyond each admission's immediate need")
+    ap.add_argument("--data-parallel", type=int, default=1,
+                    help="shard the slot pool (and paged page pool) over "
+                         "this many devices on the mesh's 'data' axis — "
+                         "needs --slice-len >= 1 and batch divisible "
+                         "(SERVING.md 'Sharded serving')")
+    ap.add_argument("--model-parallel", type=int, default=1,
+                    help="tensor-parallel decode over the mesh's 'model' "
+                         "axis via the 'serve' weight specs (dims that "
+                         "don't divide replicate)")
     ap.add_argument("--trace-out", default="",
                     help="write a Chrome/Perfetto trace_event JSON of the "
                          "run here (enables the ring-buffer tracer; "
@@ -106,6 +115,8 @@ def main() -> None:
                         spec_decode=args.spec_decode,
                         draft_max_steps=args.draft_max_steps,
                         slice_len=args.slice_len,
+                        data_parallel=args.data_parallel,
+                        model_parallel=args.model_parallel,
                         prefix_cache=args.prefix_cache,
                         prefix_cache_pages=args.prefix_cache_pages,
                         prefix_cache_watermark=args.prefix_cache_watermark,

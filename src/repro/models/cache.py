@@ -371,6 +371,87 @@ class PageAllocator:
                 self._free.append(p)
 
 
+class ShardedPageAllocator(PageAllocator):
+    """:class:`PageAllocator` partitioned into per-data-shard free lists.
+
+    The mesh-sharded serving runtime (SERVING.md "Sharded serving")
+    splits the paged pool's page dim over the ``data`` axis: shard ``s``
+    physically holds the contiguous id range
+    ``[s * pages_per_shard, (s+1) * pages_per_shard)``. A slot's pages
+    must come from its OWN shard — otherwise a row's KV gather crosses
+    devices every step — so ``alloc``/``fork`` take the shard; ``share``
+    and ``free`` keep the global id space (refcounts are one ledger, and
+    a freed page returns to the free list of the shard that owns its id,
+    wherever the free originated). With ``num_shards=1`` every method is
+    behaviourally identical to the base class — same allocation order,
+    same error messages — which is why the scheduler uses this class
+    unconditionally.
+    """
+
+    def __init__(self, num_pages: int, num_shards: int = 1):
+        assert num_shards >= 1, num_shards
+        assert num_pages % num_shards == 0, (num_pages, num_shards)
+        super().__init__(num_pages)
+        self.num_shards = num_shards
+        self.pages_per_shard = num_pages // num_shards
+        pps = self.pages_per_shard
+        # descending per-shard lists: pops hand out each shard's ids in
+        # ascending order, exactly like the base class's single list
+        self._shard_free: List[List[int]] = [
+            list(range((s + 1) * pps - 1, s * pps - 1, -1))
+            for s in range(num_shards)]
+        self._free = None  # poisoned: every path below goes per-shard
+
+    def shard_of(self, page: int) -> int:
+        return page // self.pages_per_shard
+
+    @property
+    def available(self) -> int:
+        return sum(len(f) for f in self._shard_free)
+
+    def available_in(self, shard: int) -> int:
+        return len(self._shard_free[shard])
+
+    @property
+    def in_use(self) -> int:
+        return self.num_pages - self.available
+
+    def alloc(self, n: int, shard: int = 0) -> List[int]:
+        free = self._shard_free[shard]
+        if n > len(free):
+            raise MemoryError(
+                f"page pool exhausted: want {n}, have {len(free)}")
+        pages = [free.pop() for _ in range(n)]
+        for p in pages:
+            self._refs[p] = 1
+        return pages
+
+    def fork(self, parent: Sequence[int], n_private: int, shard: int = 0
+             ) -> Tuple[List[int], List[int]]:
+        if n_private > len(self._shard_free[shard]):
+            raise MemoryError(
+                f"page pool exhausted: fork wants {n_private} private "
+                f"pages, have {len(self._shard_free[shard])}")
+        for p in parent:
+            if self._refs[p] <= 0:
+                raise ValueError(f"forking an unallocated parent page {p}")
+        self.share(parent)
+        private = self.alloc(n_private, shard)
+        return list(parent), private
+
+    def free(self, pages: Sequence[int]) -> None:
+        drops: dict = {}
+        for p in pages:
+            drops[p] = drops.get(p, 0) + 1
+        for p, n in drops.items():
+            if self._refs[p] < n:
+                raise ValueError(f"double free of page {p}")
+        for p in pages:
+            self._refs[p] -= 1
+            if self._refs[p] == 0:
+                self._shard_free[self.shard_of(p)].append(p)
+
+
 # ---------------------------------------------------------------------------
 # radix prefix cache (host-side; the serving scheduler drives this)
 # ---------------------------------------------------------------------------

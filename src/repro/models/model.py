@@ -155,19 +155,22 @@ def _mlp_part(p: dict, cfg: ModelConfig, x: Array) -> Tuple[Array, dict]:
 
 def _attn_layer_full(p: dict, cfg: ModelConfig, x: Array, positions: Array,
                      mode: str, window: int,
-                     kv_map=None) -> Tuple[Array, dict, Tuple]:
+                     kv_map=None, kv_valid=None) -> Tuple[Array, dict, Tuple]:
     """Self-attention over the full sequence. Returns rotated (k, v) so
     prefill can capture them for the cache. ``kv_map``, when given, maps
     the freshly computed (k, v) before attention AND capture — the
     radix-admission prefill substitutes cached page values below each
     row's prefix boundary (an elementwise select: rows whose positions
-    are all fresh flow through bit-exactly)."""
+    are all fresh flow through bit-exactly). ``kv_valid`` ([B, S] bool)
+    masks key positions out of every row's scores — the batched seed
+    prefill pads rows to a common length and must keep pad keys out of
+    the real positions' (bidirectional) attention."""
     h = rms_norm(x, p["ln1"], cfg.norm_eps)
     q, k, v = _qkv(p, cfg, h, positions)
     if kv_map is not None:
         k, v = kv_map(k, v)
     attn = attention(q, k, v, q_pos=positions, kv_pos=positions,
-                     mode=mode, window=window)
+                     mode=mode, window=window, kv_valid=kv_valid)
     B, S = x.shape[:2]
     attn_flat = shard_ctx.act_attn_out(
         attn.reshape(B, S, -1).astype(x.dtype))
@@ -329,7 +332,8 @@ def prefill(params: dict, cfg: ModelConfig, tokens: Array, *, max_len: int,
             cache: Optional[dict] = None,
             page_size: int = 0,
             prefix_len: Optional[Array] = None,
-            write_page_table: Optional[Array] = None) -> Tuple[Array, dict]:
+            write_page_table: Optional[Array] = None,
+            valid_len: Optional[Array] = None) -> Tuple[Array, dict]:
     """Forward over the prompt; returns (logits, cache).
 
     ``mode`` defaults to causal (AR serving) — pass ``"full"`` for MDLM
@@ -355,6 +359,16 @@ def prefill(params: dict, cfg: ModelConfig, tokens: Array, *, max_len: int,
     substitution is an elementwise select and every attention shape is
     unchanged. ``write_page_table``, when given, replaces the cache's
     page table for the final scatter only.
+
+    ``valid_len`` [B] int32 (attention families): each row's REAL token
+    count when rows are right-padded to a common ``S`` — positions at or
+    beyond a row's boundary are masked out of every layer's attention
+    scores, so a padded row's real positions see exactly the keys an
+    exact-length forward would have (required by the bidirectional MDLM
+    "full" mode, where pad keys would otherwise contaminate every real
+    position). The batched radix seed prefill relies on this; pad
+    positions' KV writes are dropped by unmapped ``write_page_table``
+    entries.
     """
     x = _embed_inputs(params, cfg, tokens, frontend_feats)
     B, S, _ = x.shape
@@ -370,11 +384,18 @@ def prefill(params: dict, cfg: ModelConfig, tokens: Array, *, max_len: int,
             "prefix-composed prefill needs an external paged cache"
         cache = cache_lib.init_cache(cfg, B, max_len, x.dtype, window=window)
 
+    kv_valid = None
+    if valid_len is not None:
+        assert cfg.family in ATTN_FAMILIES, \
+            "valid_len masking is attention-only"
+        kv_valid = positions[None, :] < valid_len.astype(jnp.int32)[:, None]
+
     if cfg.family in ATTN_FAMILIES:
         if prefix_len is None:
             def body(h, lp):
                 h, _, (k, v) = _attn_layer_full(lp, cfg, h, positions,
-                                                mode, window)
+                                                mode, window,
+                                                kv_valid=kv_valid)
                 return h, (k, v)
             x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
         else:
@@ -395,7 +416,8 @@ def prefill(params: dict, cfg: ModelConfig, tokens: Array, *, max_len: int,
 
                 h, _, (k, v) = _attn_layer_full(lp, cfg, h, positions,
                                                 mode, window,
-                                                kv_map=compose)
+                                                kv_map=compose,
+                                                kv_valid=kv_valid)
                 return h, (k, v)
             x, (ks, vs) = jax.lax.scan(
                 body, x, (params["layers"], kv0["kp"], kv0["vp"]))

@@ -174,13 +174,16 @@ class HWSpec:
     """Per-chip peak numbers the µs/step model rooflines against.
 
     Defaults are TPU v5e: 197 TFLOP/s bf16 MXU peak, 819 GB/s HBM,
-    ~2 µs per kernel dispatch (Pallas launch + XLA host overhead).
+    ~2 µs per kernel dispatch (Pallas launch + XLA host overhead),
+    50 GB/s ICI per link (``launch.mesh.ICI_BW`` — the tensor-parallel
+    all-reduce lane).
     """
 
     name: str = "tpu-v5e"
     peak_flops: float = 197e12
     hbm_bw: float = 819e9
     dispatch_us: float = 2.0
+    ici_bw: float = 50e9
 
 
 #: every (cache layout x scalar-prefetch geometry x epilogue) decode variant
@@ -194,7 +197,7 @@ STEP_VARIANTS = tuple(
 def step_time_model(cfg: ModelConfig, *, batch: int, ctx: int,
                     block_size: int, hw: HWSpec = HWSpec(),
                     avg_fill: float = 0.5, page_size: int = 16,
-                    weight_dtype: str = "bf16") -> dict:
+                    weight_dtype: str = "bf16", tp: int = 1) -> dict:
     """First-order µs per denoising step for every decode variant.
 
     One step = one ``block_step`` forward over ``batch`` rows x
@@ -225,9 +228,21 @@ def step_time_model(cfg: ModelConfig, *, batch: int, ctx: int,
     scale vectors; compute terms are unchanged (dequant rides the
     stream). The "bf16" default reproduces the pre-quantization model
     exactly.
+
+    ``tp`` models tensor-parallel decode over the serving mesh's
+    ``model`` axis (SERVING.md "Sharded serving"): matmul FLOPs, the
+    weight stream, and the KV read divide per shard where the dim
+    divides ``tp`` (the sharding rules' replicate-otherwise fallback),
+    and every layer pays the Megatron pair of all-reduces (attention
+    out-proj + MLP down-proj partial sums, ring cost ``2 (tp-1)/tp``
+    of the [tokens, d] payload each) plus one more for the
+    vocab-sharded head — priced against :attr:`HWSpec.ici_bw` and
+    surfaced as ``ici_us`` / ``bound == "collective"``. ``tp=1``
+    reproduces the single-device model exactly.
     """
     assert cfg.family in ("dense", "moe", "vlm", "audio"), cfg.family
     assert weight_dtype in ("bf16", "int8"), weight_dtype
+    assert tp >= 1, tp
     by = _bytes(cfg)
     wby = 1 if weight_dtype == "int8" else by  # weight-stream bytes/elt
     d, hd = cfg.d_model, cfg.resolved_head_dim
@@ -235,6 +250,14 @@ def step_time_model(cfg: ModelConfig, *, batch: int, ctx: int,
     V, F, L = cfg.vocab_size, cfg.d_ff, cfg.num_layers
     tokens = batch * block_size
     kd = 2 * K * hd  # K+V width per slot
+    # per-dim shard factors with the divisibility fallback (replicate
+    # when a dim does not divide the model axis — rules._map_axis)
+    tpH, tpF, tpV = _div(H, tp), _div(F, tp), _div(V, tp)
+    tpK = _div(K, tp)
+    if tpK == 1:
+        tpK = _div(hd, tp)  # kv-heads indivisible: shard head_dim
+    # the layer weight stream shards only when its TP dims do
+    tpW = tp if (tpH == tp and tpF == tp) else 1
 
     out = {}
     for variant in STEP_VARIANTS:
@@ -242,42 +265,55 @@ def step_time_model(cfg: ModelConfig, *, batch: int, ctx: int,
         ctx_eff = ctx * (avg_fill if rows == "per_row" else 1.0)
 
         # --- backbone (block_step forward, minus the head) ---
-        fl = L * 2.0 * tokens * d * (2 * H * hd + kd)        # qkv + o proj
-        fl += L * 2.0 * 2.0 * tokens * ctx_eff * H * hd      # scores + AV
-        fl += L * 2.0 * 3.0 * tokens * d * F                 # gated mlp
-        hbm = (cfg.param_count() - V * d) * wby              # weight stream
+        fl = L * 2.0 * tokens * d * 2 * H * hd / tpH         # q + o proj
+        fl += L * 2.0 * tokens * d * kd / tpK                # kv proj
+        fl += L * 2.0 * 2.0 * tokens * ctx_eff * H * hd / tpH  # scores + AV
+        fl += L * 2.0 * 3.0 * tokens * d * F / tpF           # gated mlp
+        hbm = (cfg.param_count() - V * d) * wby / tpW        # weight stream
         hbm += 12.0 * L * tokens * d * by                    # residual io
-        hbm += L * batch * ctx_eff * kd * by                 # kv cache read
-        hbm += L * tokens * kd * by                          # fresh block rw
+        hbm += L * batch * ctx_eff * kd * by / tpK           # kv cache read
+        hbm += L * tokens * kd * by / tpK                    # fresh block rw
         if layout == "paged":
             hbm += batch * (-(-ctx // page_size)) * 4        # page table
 
         # --- epilogue: head matmul + confidence + threshold ---
-        fl += 2.0 * tokens * d * V                           # lm head
-        fl += 4.0 * tokens * V                               # max/exp/sum/cmp
-        hbm += V * d * wby + tokens * d * 4                  # head w + x
+        fl += 2.0 * tokens * d * V / tpV                     # lm head
+        fl += 4.0 * tokens * V / tpV                         # max/exp/sum/cmp
+        hbm += V * d * wby / tpV + tokens * d * 4            # head w + x
         if weight_dtype == "int8":
             # f32 per-output-channel scales: qkv/o + gated mlp, + head
             ch = L * (H * hd + 2 * K * hd + 2 * d + 2 * F) + V
             hbm += ch * 4
         if fusion == "unfused":
-            hbm += 2.0 * tokens * V * 4                      # logits w+r
+            hbm += 2.0 * tokens * V * 4 / tpV                # logits w+r
             hbm += 3.0 * tokens * 12                         # conf/tok/above
             epi_dispatch = 3
         else:
             hbm += tokens * 12                               # conf/tok/above
             epi_dispatch = 1
 
+        # --- ICI: the TP all-reduce chain (zero at tp == 1) ---
+        coll_bytes = 0.0
+        if tp > 1:
+            ring = 2.0 * (tp - 1) / tp
+            n_coll = 2 * L + 1  # o-proj + down-proj per layer, + head
+            coll_bytes = n_coll * ring * tokens * d * by
+        ici_us = coll_bytes / hw.ici_bw * 1e6
+
         # one attention-kernel launch per layer + the epilogue chain
         dispatches = L + epi_dispatch
         compute_us = fl / hw.peak_flops * 1e6
         memory_us = hbm / hw.hbm_bw * 1e6
         launch_us = dispatches * hw.dispatch_us
-        us = max(compute_us, memory_us) + launch_us
-        bound = ("dispatch" if launch_us > max(compute_us, memory_us)
-                 else "compute" if compute_us >= memory_us else "memory")
+        us = max(compute_us, memory_us) + launch_us + ici_us
+        bound = {compute_us: "compute", memory_us: "memory",
+                 launch_us: "dispatch", ici_us: "collective"}[
+            max(ici_us, launch_us, memory_us, compute_us)]
+        if compute_us >= memory_us and bound == "memory":
+            bound = "compute"  # ties keep the pre-tp preference
         out[variant] = {"us": us, "flops": fl, "hbm_bytes": hbm,
-                        "dispatches": dispatches, "bound": bound}
+                        "dispatches": dispatches, "bound": bound,
+                        "ici_us": ici_us, "collective_bytes": coll_bytes}
     return out
 
 

@@ -161,6 +161,22 @@ def step_table() -> str:
             bound, _, disp = derived.partition("_bound_d")
             lines.append(f"| {layout} | {geom} | {fusion} | {us} | "
                          f"{bound} | {disp} |")
+    lines += ["", "tensor-parallel decode (analytic, paged/per_row/fused; "
+              "`step_time_model(tp=...)` — Megatron all-reduce pair per "
+              "layer + vocab-sharded head over ICI, SERVING.md 'Sharded "
+              "serving'):", "",
+              "| tp | model µs/step | ici µs | bound | speedup |",
+              "|---|---|---|---|---|"]
+    from repro.config.registry import get_config
+    from repro.roofline.analytic import step_time_model
+    _cfg = get_config("llada-8b")
+    base = None
+    for tp in (1, 2, 4, 8):
+        v = step_time_model(_cfg, batch=8, ctx=4096, block_size=32,
+                            tp=tp)["paged/per_row/fused"]
+        base = base or v["us"]
+        lines.append(f"| {tp} | {v['us']:.1f} | {v['ici_us']:.1f} | "
+                     f"{v['bound']} | {base / v['us']:.2f}x |")
     mprefix = "roofline/step_us_measured/"
     mnames = [n for n in sorted(rows) if n.startswith(mprefix)]
     if mnames:

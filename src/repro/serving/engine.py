@@ -27,6 +27,13 @@ boundaries, and the latency split is slice-granular — ``Response.
 ttfb_s`` (submit → first decoded block) plus ``queue_s``/``decode_s``
 measured at the boundaries the row actually crossed, instead of
 charging every member the whole batch's wall.
+
+With ``EngineConfig.data_parallel`` / ``model_parallel`` > 1 the
+scheduler runs SPMD over a ``("data", "model")`` device mesh
+(SERVING.md "Sharded serving"): slots partition into per-data-shard
+groups, the decode carry and paged pool carry NamedShardings, and
+weights route through the TP "serve" specs. ``DiffusionEngine.mesh``
+exposes the mesh (``None`` for the 1x1 single-device runtime).
 """
 from __future__ import annotations
 
@@ -88,6 +95,12 @@ class DiffusionEngine:
         """The scheduler's :class:`repro.obs.Observability` bundle
         (tracer, metrics registry, drift monitor, dispatch timer)."""
         return self.scheduler.obs
+
+    @property
+    def mesh(self):
+        """The scheduler's serving mesh (``jax.sharding.Mesh``), or
+        ``None`` when data_parallel == model_parallel == 1."""
+        return self.scheduler.mesh
 
     @property
     def sessions(self) -> Dict[str, TaskView]:

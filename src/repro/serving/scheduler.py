@@ -78,8 +78,10 @@ from repro.core.decoder import (admit_carry_rows, init_decode_carry,
                                 retire_carry_rows)
 from repro.core.osdt import CalibrationStore
 from repro.data import tokenizer as tok
+from repro.launch.mesh import make_serving_mesh
 from repro.models import model as M
-from repro.models.cache import PageAllocator, RadixPrefixCache
+from repro.models.cache import RadixPrefixCache, ShardedPageAllocator
+from repro.sharding.ctx import place_serving_params
 from repro.models.quantize import (WEIGHT_DTYPES, decode_weight_bytes,
                                    is_quantized, quantize_decode_params)
 from repro.obs import Observability
@@ -337,6 +339,31 @@ def _seed_prefill_prog(cfg: ModelConfig, max_len: int, ps: int,
     return jax.jit(fn)
 
 
+@lru_cache(maxsize=None)
+def _seed_prefill_batched_prog(cfg: ModelConfig, max_len: int, ps: int,
+                               S: int, bucket: int):
+    """Compiled MULTI-segment donor prefill: ``bucket`` (power-of-two)
+    pending seed segments, right-padded to a common length ``S``, in ONE
+    composed forward. Per row: ``prefix_len`` marks the already-seeded
+    chain (its pages compose in, its writes are dropped), ``valid_len``
+    masks the row's pad keys out of the bidirectional attention, and the
+    write page table maps only the row's fresh ``[start, end)`` pages —
+    so one dispatch seeds several tenants' segments where the B=1 donor
+    path (``_seed_prefill_prog``, still used for lone segments) would
+    have cost one forward each."""
+    def fn(params, tokens, kp, vp, spt, prefix_len, valid_len, wpt):
+        cache = {"attn": {
+            "kp": kp, "vp": vp, "pt": spt,
+            "pos": jnp.full((max_len,), -1, jnp.int32),
+            "length": jnp.zeros((), jnp.int32)}}
+        _, c = M.prefill(params, cfg, tokens, max_len=max_len,
+                         mode="full", cache=cache, page_size=ps,
+                         prefix_len=prefix_len, write_page_table=wpt,
+                         valid_len=valid_len)
+        return c["attn"]["kp"], c["attn"]["vp"]
+    return jax.jit(fn)
+
+
 class Scheduler:
     """Request queue + slot pool + one compiled decode program.
 
@@ -403,6 +430,34 @@ class Scheduler:
                 "prefix_cache admits through the step-sliced loop"
         self.prefix_tree: Optional[RadixPrefixCache] = None
         self._prefix_memo: Dict[str, Tuple[List[int], int]] = {}
+        # uid -> tree pages matched BEFORE this boundary's batched
+        # seeding: _prefix_claim reports these as the request's true
+        # reuse (its own boundary's seeds are cost, not hits)
+        self._preseed_hits: Dict[int, int] = {}
+
+        # mesh-sharded SPMD serving (SERVING.md "Sharded serving"): the
+        # slot pool partitions into per-data-shard groups and weights
+        # place through the "serve" TP specs. All device arrays get
+        # their NamedShardings at carry construction; the compiled
+        # slice/admit programs specialize on them, so the program
+        # factories (and their cross-engine memo keys) stay mesh-free.
+        self.dp = max(1, int(self.ecfg.data_parallel))
+        self.mp = max(1, int(self.ecfg.model_parallel))
+        self.mesh = make_serving_mesh(data=self.dp, model=self.mp)
+        self.slots_per_shard = self.ecfg.batch_size // self.dp \
+            if self.ecfg.batch_size % self.dp == 0 else self.ecfg.batch_size
+        if self.mesh is not None:
+            assert self.ecfg.batch_size % self.dp == 0, \
+                f"batch_size {self.ecfg.batch_size} must divide into " \
+                f"data={self.dp} slot shards"
+            assert self.ecfg.slice_len >= 1, \
+                "sharded serving runs the step-sliced loop (slice " \
+                "boundaries are the host-side metadata exchange points)"
+            assert not self.prefix_cache or self.dp == 1, \
+                "radix prefix cache is single-shard (tree pages live " \
+                "on one data shard); use model_parallel only"
+            self.params = place_serving_params(self.params, cfg,
+                                               self.mesh)
         # the shared system prompt is prepended to every row's prompt
         # under BOTH layouts (same tokens in, comparable runs); the page
         # rounding applies regardless so the prompts match — only the
@@ -483,35 +538,49 @@ class Scheduler:
         self.n_log = dcfg.pages_per_seq(self.max_len)
         n_shared = self.shared_len // ps
         self.private_per_slot = self.n_log - n_shared
-        num_pages = ecfg.num_pages or (n_shared + B * self.private_per_slot)
+        # each data shard keeps its OWN copy of the shared-prefix pages
+        # (a row only ever gathers pages resident on its shard), so the
+        # auto-sized pool carries dp shared runs plus B private runs
+        num_pages = ecfg.num_pages or \
+            (self.dp * n_shared + B * self.private_per_slot)
         assert num_pages >= n_shared + self.private_per_slot, \
             f"pool of {num_pages} pages cannot fit one request"
-        self.allocator = PageAllocator(num_pages)
+        assert num_pages % self.dp == 0, \
+            f"pool of {num_pages} pages must divide into data={self.dp} " \
+            f"shards"
+        self.allocator = ShardedPageAllocator(num_pages, self.dp)
         L, Kh = cfg.num_layers, cfg.num_kv_heads
         D = cfg.resolved_head_dim
         dtype = M.param_dtype(cfg)
         self._pool_k = jnp.zeros((L, num_pages, ps, Kh, D), dtype)
         self._pool_v = jnp.zeros((L, num_pages, ps, Kh, D), dtype)
         self.stats.page_capacity = num_pages
+        self._shared_pages_by_shard: List[List[int]] = \
+            [[] for _ in range(self.dp)]
         if self.shared_len:
-            # prefill the shared prefix ONCE; the scheduler keeps a
-            # permanent reference so retirement never reclaims its pages
-            self._shared_pages = self.allocator.alloc(n_shared)
-            spt = np.full((1, self.n_log), -1, np.int32)
-            spt[0, :n_shared] = self._shared_pages
-            cache = {"attn": {
-                "kp": self._pool_k, "vp": self._pool_v,
-                "pt": jnp.asarray(spt),
-                "pos": jnp.full((self.max_len,), -1, jnp.int32),
-                "length": jnp.zeros((), jnp.int32)}}
+            # prefill the shared prefix ONCE PER SHARD; the scheduler
+            # keeps a permanent reference so retirement never reclaims
+            # the pages. dp=1 runs the identical single forward it
+            # always did.
             shared = jnp.asarray(self._shared_ids, jnp.int32)[None]
-            _, cache = M.prefill(self.params, cfg, shared,
-                                 max_len=self.max_len, mode="full",
-                                 cache=cache, page_size=ps)
-            self._pool_k = cache["attn"]["kp"]
-            self._pool_v = cache["attn"]["vp"]
-            self._count_nfe(1)  # the one-time shared-prefix forward
-            self.stats.prefill_nfe += 1
+            for shard in range(self.dp):
+                pages = self.allocator.alloc(n_shared, shard)
+                self._shared_pages_by_shard[shard] = pages
+                spt = np.full((1, self.n_log), -1, np.int32)
+                spt[0, :n_shared] = pages
+                cache = {"attn": {
+                    "kp": self._pool_k, "vp": self._pool_v,
+                    "pt": jnp.asarray(spt),
+                    "pos": jnp.full((self.max_len,), -1, jnp.int32),
+                    "length": jnp.zeros((), jnp.int32)}}
+                _, cache = M.prefill(self.params, cfg, shared,
+                                     max_len=self.max_len, mode="full",
+                                     cache=cache, page_size=ps)
+                self._pool_k = cache["attn"]["kp"]
+                self._pool_v = cache["attn"]["vp"]
+                self._count_nfe(1)  # the one-time shared-prefix forward
+                self.stats.prefill_nfe += 1
+            self._shared_pages = self._shared_pages_by_shard[0]
         if self.prefix_cache:
             # the tree owns prefix pages WITHIN this pool; a rebuilt
             # pool (donated-carry failure) gets a fresh empty tree —
@@ -519,8 +588,20 @@ class Scheduler:
             self.prefix_tree = RadixPrefixCache(
                 self.allocator, ps,
                 max_pages=self.ecfg.prefix_cache_pages)
-        self.stats.pages_shared = len(self._shared_pages)
+        self.stats.pages_shared = sum(
+            len(p) for p in self._shared_pages_by_shard)
         self.stats.pages_peak = self.allocator.in_use
+
+    # -- shard topology (SERVING.md "Sharded serving") ------------------
+    def shard_of_slot(self, index: int) -> int:
+        """The data shard owning slot ``index``: slots partition into
+        ``dp`` contiguous groups of ``batch_size // dp`` — a request is
+        admitted into ONE slot, so it never straddles shards."""
+        return index // self.slots_per_shard
+
+    def _shared_for(self, slot: Slot) -> List[int]:
+        """The shared-prefix page run of the slot's own shard."""
+        return self._shared_pages_by_shard[self.shard_of_slot(slot.index)]
 
     # -- queue ----------------------------------------------------------
     def submit(self, requests: List[Request],
@@ -584,8 +665,9 @@ class Scheduler:
                 # read-only reference on the shared pages plus private
                 # pages for the logical range this row actually writes
                 # (_fill guaranteed availability)
-                _, pages = self.allocator.fork(self._shared_pages,
-                                               self.private_per_slot)
+                _, pages = self.allocator.fork(
+                    self._shared_for(slot), self.private_per_slot,
+                    self.shard_of_slot(slot.index))
             slot.admit(rs, pages)
             if tr:
                 tr.aend("queued", rs.req.uid, t=now)
@@ -609,7 +691,8 @@ class Scheduler:
                 rows.append(self._prompt_row(slot.rs))
                 tasks.append(slot.rs.req.task)
                 if self.paged:
-                    page_tables[slot.index, :n_shared] = self._shared_pages
+                    page_tables[slot.index, :n_shared] = \
+                        self._shared_for(slot)
                     page_tables[slot.index, n_shared:] = slot.pages
             else:  # dead slot: mask-only prompt row, live=False
                 rows.append([self.mask_id] * P)
@@ -787,7 +870,7 @@ class Scheduler:
                     # shared-prefix reference is dropped (the scheduler's
                     # own permanent reference keeps those pages)
                     self.allocator.free(slot.pages)
-                    self.allocator.free(self._shared_pages)
+                    self.allocator.free(self._shared_for(slot))
                     self.stats.pages_freed += len(slot.pages)
                 slot.retire()
         return out
@@ -809,7 +892,8 @@ class Scheduler:
             mask_id=self.mask_id,
             cache_mode=self.ecfg.resolved_cache_mode(),
             cache_layout="paged" if self.paged else "dense",
-            shared_prefix_len=self.shared_len if self.paged else 0, **kw)
+            shared_prefix_len=self.shared_len if self.paged else 0,
+            mesh=self.mesh, **kw)
         self._nfe_seen = 0
 
     def _teardown_carry(self) -> None:
@@ -960,6 +1044,131 @@ class Scheduler:
             self.allocator.free(pages)
             raise
 
+    def _batch_seed_pending(self, n_slots: int) -> None:
+        """Seed the radix segments the next ``n_slots`` queued requests
+        are missing, batching concurrent segments into ONE padded donor
+        forward per dependency round (SERVING.md "Radix prefix cache",
+        batched seeding). A row's chain has at most two boundaries
+        (template ``m0``, full prefix ``L``), so two rounds cover every
+        plan: round 0 seeds each row's first missing segment, round 1
+        the segments that chain on round 0's. Segments are deduplicated
+        by ``(tokens, start)`` — a burst of same-tenant cold requests
+        seeds its template once. Page pressure aborts quietly: the
+        per-request claim re-seeds (and sheds load) exactly as before."""
+        if n_slots <= 0 or not self.queue:
+            return
+        ps = self.dcfg.page_size
+        plans = []
+        owned: set = set()  # segments already attributed this boundary
+        for rs in list(self.queue)[:n_slots]:
+            pfx_ids, m0 = self._row_prefix_ids(rs.req)
+            row = self._row_tokens(rs.req)
+            matched, mpages, _ = self.prefix_tree.match(row)
+            # the request's true reuse: pages already in the tree plus
+            # segments a QUEUE-EARLIER request is about to seed (the
+            # sequential claim would have found those resident too);
+            # segments first needed by THIS request are its own cost
+            hits, pos = len(mpages), matched
+            for b in (m0, len(pfx_ids)):
+                if pos < b:
+                    key = (tuple(row[:b]), pos)
+                    if key in owned:
+                        hits += (b - pos) // ps
+                    else:
+                        owned.add(key)
+                    pos = b
+            self._preseed_hits[rs.req.uid] = hits
+            plans.append((row, m0, len(pfx_ids)))
+        for _round in range(2):
+            segs: Dict[tuple, tuple] = {}
+            for row, m0, L in plans:
+                matched, mpages, _ = self.prefix_tree.match(row)
+                if matched >= L:
+                    continue
+                end = m0 if matched < m0 else L
+                if end <= matched:
+                    continue
+                segs.setdefault((tuple(row[:end]), matched),
+                                (row, matched, end, list(mpages)))
+            if not segs:
+                return
+            try:
+                self._seed_segments(list(segs.values()))
+            except MemoryError:
+                return
+
+    def _seed_segments(self, segs: List[tuple]) -> None:
+        """Seed a round of independent segments and insert each into the
+        tree. A LONE segment takes the exact-length B=1 donor program —
+        bit-identical to the pre-batching path, so single-tenant traffic
+        never changes. Two or more pad to the round's longest segment in
+        a power-of-two row bucket and run ONE composed forward
+        (``valid_len`` keeps pad keys out of the bidirectional
+        attention; each row writes only its own fresh pages)."""
+        ps = self.dcfg.page_size
+        if len(segs) == 1:
+            row, start, end, chain = segs[0]
+            self._evict_pages((end - start) // ps)
+            pages = self._seed_segment(row, start, end, chain)
+            if self.prefix_tree.insert(row, start, pages):
+                self.stats.prefix_inserts += 1
+            else:
+                self.allocator.free(pages)
+            return
+        self._evict_pages(sum((end - start) // ps
+                              for _, start, end, _ in segs))
+        fresh: List[List[int]] = []
+        try:
+            for _, start, end, _ in segs:
+                fresh.append(self.allocator.alloc((end - start) // ps))
+        except MemoryError:
+            for pages in fresh:
+                self.allocator.free(pages)
+            raise
+        n = len(segs)
+        bucket = 1 << (n - 1).bit_length()
+        S = max(end for _, _, end, _ in segs)
+        tokens = np.full((bucket, S), self.mask_id, np.int32)
+        plen = np.zeros((bucket,), np.int32)
+        vlen = np.zeros((bucket,), np.int32)
+        spt = np.full((bucket, self.n_log), -1, np.int32)
+        wpt = np.full((bucket, self.n_log), -1, np.int32)
+        for i, ((row, start, end, chain), pages) in enumerate(
+                zip(segs, fresh)):
+            tokens[i, :end] = row[:end]
+            plen[i], vlen[i] = start, end
+            spt[i, :start // ps] = chain
+            spt[i, start // ps: end // ps] = pages
+            wpt[i, start // ps: end // ps] = pages
+        try:
+            kv = self._live_kv()
+            prog = _seed_prefill_batched_prog(self.cfg, self.max_len, ps,
+                                              S, bucket)
+            tr = self.obs.tracer
+            if tr:
+                tr.begin("seed_prefill_batched", tid=0, segments=n,
+                         bucket=bucket, tokens=S)
+            try:
+                kp, vp = prog(self.params, jnp.asarray(tokens),
+                              kv["kp"], kv["vp"], jnp.asarray(spt),
+                              jnp.asarray(plen), jnp.asarray(vlen),
+                              jnp.asarray(wpt))
+            finally:
+                if tr:
+                    tr.end("seed_prefill_batched", tid=0)
+            self._put_kv(kp, vp)
+            self._count_nfe(1)
+            self.stats.prefill_nfe += 1
+        except BaseException:
+            for pages in fresh:
+                self.allocator.free(pages)
+            raise
+        for (row, start, _, _), pages in zip(segs, fresh):
+            if self.prefix_tree.insert(row, start, pages):
+                self.stats.prefix_inserts += 1
+            else:
+                self.allocator.free(pages)
+
     def _prefix_claim(self, req: Request
                       ) -> Optional[Tuple[int, List[int], List[int], int]]:
         """Walk the tree for ``req``'s prefix (seeding missing segments
@@ -977,7 +1186,9 @@ class Scheduler:
         # is what makes an identical resubmission near-zero-prefill
         row = self._row_tokens(req)
         matched, mpages, _ = self.prefix_tree.match(row)
-        hit_pages = len(mpages)
+        # pages this request's own boundary seeded (via the batched
+        # pre-pass) are cost, not reuse — report the pre-seed depth
+        hit_pages = self._preseed_hits.pop(req.uid, len(mpages))
         if matched < L:
             try:
                 for b in (m0, L):
@@ -1015,9 +1226,16 @@ class Scheduler:
         now = time.perf_counter()
         mid_gen = self._carry is not None and \
             any(s.state == "active" for s in self.slots)
+        if self.prefix_cache and free and self.queue:
+            # satellite: seed every missing radix segment the next
+            # admissions will need in batched donor forwards BEFORE the
+            # per-request claims walk the tree (each then finds its
+            # chain resident)
+            self._batch_seed_pending(len(free))
         for slot in free:
             if not self.queue:
                 break
+            shard = self.shard_of_slot(slot.index)
             claim = None
             if self.prefix_cache:
                 # peek — the claim itself evicts LRU tree nodes before
@@ -1026,16 +1244,21 @@ class Scheduler:
                 if claim is None:
                     break  # page pressure even after eviction
             elif self.paged and \
-                    self.allocator.available < self.private_per_slot:
-                break
+                    self.allocator.available_in(shard) \
+                    < self.private_per_slot:
+                # THIS shard's pool is short — another shard's free slot
+                # may still admit the head (a request never straddles
+                # shards, so per-shard pressure only skips that shard)
+                continue
             rs = self.queue.popleft()
             rs.t_admit = now
             pages = None
             if self.prefix_cache:
                 pfx_len, chain, pages, hit_pages = claim
             elif self.paged:
-                _, pages = self.allocator.fork(self._shared_pages,
-                                               self.private_per_slot)
+                _, pages = self.allocator.fork(self._shared_for(slot),
+                                               self.private_per_slot,
+                                               shard)
             slot.admit(rs, pages)
             if self.prefix_cache:
                 slot.prefix_pages = chain
@@ -1082,7 +1305,7 @@ class Scheduler:
             else:
                 n_shared = self.shared_len // self.dcfg.page_size
                 for i, s in enumerate(admitted):
-                    page_rows[i, :n_shared] = self._shared_pages
+                    page_rows[i, :n_shared] = self._shared_for(s)
                     page_rows[i, n_shared:] = s.pages
             self.stats.pages_peak = max(self.stats.pages_peak,
                                         self.allocator.in_use)
@@ -1228,7 +1451,7 @@ class Scheduler:
                     self.allocator.free(slot.prefix_pages or [])
                 else:
                     self.allocator.free(pages)
-                    self.allocator.free(self._shared_pages)
+                    self.allocator.free(self._shared_for(slot))
                 self.stats.pages_freed += len(pages)
             slot.retire()
         self._carry = retire_carry_rows(carry, [s.index for s in done], nb)
@@ -1311,7 +1534,7 @@ class Scheduler:
                     if self.prefix_cache:
                         self.allocator.free(slot.prefix_pages or [])
                     else:
-                        self.allocator.free(self._shared_pages)
+                        self.allocator.free(self._shared_for(slot))
                 slot.retire()
             self._teardown_carry()
             raise

@@ -208,6 +208,23 @@ def moe_dispatch(x):
     return _constrain(x, P(axes, None, None, e_ax, None))
 
 
+def place_serving_params(params, cfg, mesh: Mesh):
+    """``device_put`` model weights onto the serving mesh under the
+    ``"serve"`` weight strategy (TP-only: embed dims replicate so decode
+    never re-gathers weights; head/ff/vocab dims shard over ``model``
+    when divisible). Quantized leaves (``QuantizedTensor.q/scale``) have
+    no logical-axis rule and replicate — int8 streaming stays correct
+    under TP at the cost of redundant weight bytes per shard. This is a
+    host-side placement, not a trace-time constraint: the jitted decode
+    programs specialize on the resulting NamedShardings
+    (computation-follows-data), so the program factories in
+    ``core.decoder`` stay mesh-free."""
+    from repro.sharding import rules
+    shapes = jax.eval_shape(lambda: params)
+    specs = rules.param_specs(cfg, shapes, mesh, strategy="serve")
+    return jax.device_put(params, rules.to_named(specs, mesh))
+
+
 def moe_tokens(x):
     """[B, G, Tg, M] routed-token activations: replicated over the model
     axis (so the local dispatch contraction can proceed)."""

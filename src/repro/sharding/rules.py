@@ -179,6 +179,66 @@ def to_named(tree_specs, mesh: Mesh):
                         is_leaf=lambda x: isinstance(x, P))
 
 
+# DecodeCarry fields whose LEADING dim is the batch (slot) dim — the
+# serving runtime shards exactly these over "data". Everything else in
+# the carry is either the KV cache (own rules below) or batch-reduced
+# bookkeeping (steps_used [nb], nfe []) that must stay replicated.
+_CARRY_BATCH_FIELDS = frozenset({
+    "resp", "prompt", "table", "live", "cursor", "conf", "conf_valid",
+    "seq_steps", "blocks_drafted", "blocks_accepted", "thr_steps",
+    "margin_sum", "margin_n"})
+
+
+def carry_specs(carry, mesh: Mesh):
+    """PartitionSpec pytree for a ``repro.core.decoder.DecodeCarry``.
+
+    The SPMD serving layout (SERVING.md "Sharded serving"): every
+    batch-leading array — slots, per-slot threshold tables, conf
+    accumulators, page-table rows — shards its dim 0 over ``data``;
+    the paged KV pool shards its PAGE dim over ``data`` (the scheduler
+    keeps per-shard page ownership, so a row only ever gathers pages
+    resident on its own shard) and its kv-head dim over ``model``
+    (head_dim when kv-heads don't divide — the same fallback as
+    :func:`cache_specs`); dense k/v shard batch over ``data``. Scalars,
+    ``steps_used`` (a batch-max) and the shared ``pos`` row replicate.
+    Every rule applies only when the dim divides the axis size —
+    otherwise that dim replicates, exactly like the weight rules.
+
+    Accepts the carry itself or its ``jax.eval_shape`` image (only
+    ``.shape`` is read). Structure-preserving: feed the result through
+    :func:`to_named` + ``jax.device_put`` to place a carry.
+    """
+    dp = _axis_size(mesh, "data")
+    mp = _axis_size(mesh, "model")
+
+    def leaf_spec(path, leaf) -> P:
+        keys = [str(getattr(p, "name", getattr(p, "key", "")))
+                for p in path]
+        name = keys[-1]
+        shape = leaf.shape
+        if name in _CARRY_BATCH_FIELDS:
+            b = "data" if shape and shape[0] % dp == 0 else None
+            return P(*([b] + [None] * (len(shape) - 1)))
+        if name in ("kp", "vp"):          # paged pool [L, pages, ps, K, D]
+            _, npages, _, K, D = shape
+            pg = "data" if npages % dp == 0 else None
+            k_ax = "model" if K % mp == 0 else None
+            d_ax = "model" if (k_ax is None and D % mp == 0) else None
+            return P(None, pg, None, k_ax, d_ax)
+        if name == "pt":                  # page tables [B, n_log]
+            b = "data" if shape[0] % dp == 0 else None
+            return P(b, None)
+        if name in ("k", "v"):            # dense cache [L, B, T, K, D]
+            _, B, _, K, D = shape
+            b = "data" if B % dp == 0 else None
+            k_ax = "model" if K % mp == 0 else None
+            d_ax = "model" if (k_ax is None and D % mp == 0) else None
+            return P(None, b, None, k_ax, d_ax)
+        return P()  # nfe, steps_used, pos, length, ssm state/conv
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, carry)
+
+
 def layer_param_specs(lp_tree, mesh: Mesh):
     """Specs for ONE layer's param slice (no leading stack dim) — used to
     re-anchor the scanned layer params inside the scan body. The transpose

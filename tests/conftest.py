@@ -1,10 +1,13 @@
 import os
 
-# Tests must see the real (single) CPU device — the 512-device override is
-# strictly for the dry-run driver (see repro/launch/dryrun.py).
-assert "xla_force_host_platform_device_count" not in \
+# Tests must see the real (single) CPU device — the fake-device override is
+# for the dry-run driver (repro/launch/dryrun.py) and the mesh-serving CI
+# leg, which opts in explicitly with REPRO_MESH_TESTS=1 (ci.yml).
+assert os.environ.get("REPRO_MESH_TESTS") == "1" or \
+    "xla_force_host_platform_device_count" not in \
     os.environ.get("XLA_FLAGS", ""), \
-    "do not run tests with the dry-run XLA_FLAGS set"
+    "do not run tests with the dry-run XLA_FLAGS set " \
+    "(set REPRO_MESH_TESTS=1 for the fake-device mesh leg)"
 
 import jax
 import pytest
